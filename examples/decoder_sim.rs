@@ -1,0 +1,94 @@
+//! Decoder hardware design-space exploration (paper §5.1, Figs 11–12).
+//!
+//! Compresses an AlexNet-FC-like layer, extracts the real per-slice
+//! `n_patch` trace, and sweeps the multi-bank patch-FIFO width against the
+//! CSR row-decoder baseline — the experiment behind Fig 12, plus the Fig 1
+//! DRAM traffic model. Run with `cargo run --release --example decoder_sim`.
+
+use sqnn_xor::models::by_name;
+use sqnn_xor::prune::magnitude_mask;
+use sqnn_xor::rng::Rng;
+use sqnn_xor::simulator::{simulate_csr_decode, simulate_xor_decode, GpuModel};
+use sqnn_xor::sparse::CsrMatrix;
+use sqnn_xor::xorenc::{EncryptConfig, XorEncoder};
+
+fn main() {
+    let mut rng = Rng::new(99);
+    // A scaled AlexNet-FC5 stand-in (same S, nq, design point).
+    let spec = by_name("AlexNet-FC5").unwrap().scaled(1_000_000);
+    println!(
+        "workload: {} ({}), {} weights, S={}, {}-bit",
+        spec.name, spec.dataset, spec.weights, spec.sparsity, spec.n_q
+    );
+
+    // Nonuniform sparsity (the §5.2 regime that stresses the FIFO).
+    let planes = spec.synthetic_planes_nonuniform(&mut rng);
+    let enc = XorEncoder::new(EncryptConfig {
+        n_in: spec.n_in,
+        n_out: spec.n_out,
+        seed: 5,
+        block_slices: 0,
+    });
+    let ep = enc.encrypt_plane(&planes[0]);
+    let npatch: Vec<usize> = ep.patches.iter().map(|p| p.len()).collect();
+    let total: usize = npatch.iter().sum();
+    println!(
+        "encrypted: {} slices, {} patches ({:.4}/slice)",
+        npatch.len(),
+        total,
+        total as f64 / npatch.len() as f64
+    );
+
+    // --- Fig 12: relative decode time vs n_FIFO, against CSR ---
+    println!("\nFig 12 — relative execution time (1.0 = ideal):");
+    let rows = 2048usize;
+    let cols = spec.weights / rows;
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_gaussian() as f32).collect();
+    let mask = magnitude_mask(&w, spec.sparsity);
+    let csr = CsrMatrix::from_dense(&w, rows, cols, Some(&mask));
+    // Fully row-parallel (Fig 3's illustration: one decoder per row) and a
+    // 64-decoder array; imbalance bites hardest at fine granularity.
+    let dist = csr.row_nnz_distribution();
+    let csr_rp = simulate_csr_decode(&dist, dist.len());
+    let csr_64 = simulate_csr_decode(&dist, 64);
+    println!("  CSR (decoder per row):      {:.3}", csr_rp.relative_time());
+    println!("  CSR (64 row decoders):      {:.3}", csr_64.relative_time());
+    for n_fifo in [1usize, 2, 4, 8] {
+        let sim = simulate_xor_decode(&npatch, n_fifo, 256, 0);
+        println!(
+            "  proposed, n_FIFO={n_fifo}:         {:.3}  ({} stall cycles)",
+            sim.relative_time(),
+            sim.stall_cycles
+        );
+    }
+
+    // --- Fig 1: DRAM traffic model, CSR vs dense vs proposed ---
+    println!("\nFig 1 — modeled (2048x2048)·(2048x64) on a V100-class device:");
+    let g = GpuModel::default();
+    let dense = g.dense_mm(2048, 2048, 64);
+    println!(
+        "  dense MM:        {:7.1} us, {:6.1} GB/s, {:9.0} txns",
+        dense.time_s * 1e6,
+        dense.bandwidth / 1e9,
+        dense.transactions
+    );
+    for s in [0.5, 0.7, 0.9, 0.95] {
+        let w: Vec<f32> = (0..2048 * 2048).map(|_| rng.next_gaussian() as f32).collect();
+        let mask = magnitude_mask(&w, s);
+        let c = CsrMatrix::from_dense(&w, 2048, 2048, Some(&mask));
+        let r = g.csr_spmm(&c, 64);
+        println!(
+            "  CSR S={s:.2}:      {:7.1} us, {:6.1} GB/s, {:9.0} txns",
+            r.time_s * 1e6,
+            r.bandwidth / 1e9,
+            r.transactions
+        );
+    }
+    let xorr = g.xor_mm(2048, 2048, 64, 0.28);
+    println!(
+        "  proposed (0.28b):{:7.1} us, {:6.1} GB/s, {:9.0} txns",
+        xorr.time_s * 1e6,
+        xorr.bandwidth / 1e9,
+        xorr.transactions
+    );
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the core public API in ~40 lines.
+//!
+//! Encrypt a synthetic pruned+quantized bit-plane through the XOR-gate
+//! network (paper §3), verify losslessness, and print the Eq. (2) bit
+//! accounting. Run with `cargo run --release --example quickstart`.
+
+use sqnn_xor::rng::Rng;
+use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+fn main() {
+    // A 100k-element bit-plane at 90% sparsity with balanced care bits —
+    // the §3.3 synthetic workload.
+    let mut rng = Rng::new(2026);
+    let plane = BitPlane::synthetic(100_000, 0.90, &mut rng);
+    println!(
+        "plane: {} positions, {} care bits (S = {:.3})",
+        plane.len(),
+        plane.care_count(),
+        plane.sparsity()
+    );
+
+    // The paper's design point: n_in=20 seeds decode to n_out=200 bits per
+    // step, a 10x fixed-rate expansion.
+    let cfg = EncryptConfig { n_in: 20, n_out: 200, seed: 7, block_slices: 0 };
+    let encoder = XorEncoder::new(cfg);
+
+    // Encrypt (Algorithm 1: incremental GF(2) solve, patch on conflict).
+    let encrypted = encoder.encrypt_plane(&plane);
+    let stats = encrypted.stats();
+    println!(
+        "encrypted: {} slices, {} patches (max n_patch = {})",
+        encrypted.num_slices(),
+        stats.total_patches,
+        stats.max_npatch
+    );
+    println!(
+        "bits: codes {} + n_patch {} + d_patch {} = {} (original {})",
+        stats.code_bits,
+        stats.npatch_bits,
+        stats.dpatch_bits,
+        stats.total_bits,
+        stats.original_bits
+    );
+    println!(
+        "compression ratio {:.2}x, memory reduction {:.3} (sparsity bound {:.3})",
+        stats.ratio(),
+        stats.memory_reduction(),
+        plane.sparsity()
+    );
+
+    // Decrypt (XOR network + patch flips) and verify every care bit.
+    let decoded = encoder.decrypt_plane(&encrypted);
+    assert!(plane.matches(&decoded), "lossless property violated!");
+    println!("decode check: all {} care bits reproduced exactly ✓", plane.care_count());
+}

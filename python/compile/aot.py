@@ -1,0 +1,107 @@
+"""AOT export: lower the serving graphs to HLO **text** for the Rust PJRT
+runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  * ``sqnn_mlp_b{B}.hlo.txt`` — the compressed-FC1 MLP forward for each
+    serving batch size. Parameter order (the contract with
+    ``rust/src/coordinator``):
+      x, m_xor, codes, patch, mask, alphas, b1, w2, b2, w3, b3
+  * ``decode_planes.hlo.txt`` — standalone XOR decode (codes, m_xor → bits),
+    used by the runtime integration tests and the decode-offload path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from .kernels.xor_decode import decode_planes_pallas
+from .model import forward_compressed, forward_compressed_ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def serve_arg_specs(batch: int):
+    """Shapes of the serving graph inputs, in parameter order."""
+    return (
+        f32(batch, C.INPUT_DIM),                    # x
+        f32(C.N_OUT, C.N_IN),                       # m_xor
+        f32(C.FC1_NQ, C.N_SLICES, C.N_IN),          # codes
+        f32(C.FC1_NQ, C.N_SLICES, C.N_OUT),         # patch
+        f32(C.HIDDEN1, C.INPUT_DIM),                # mask
+        f32(C.FC1_NQ),                              # alphas
+        f32(C.HIDDEN1),                             # b1
+        f32(C.HIDDEN2, C.HIDDEN1),                  # w2
+        f32(C.HIDDEN2),                             # b2
+        f32(C.NUM_CLASSES, C.HIDDEN2),              # w3
+        f32(C.NUM_CLASSES),                         # b3
+    )
+
+
+def export_serve_graph(batch: int, out_path: str, variant: str = "pallas") -> int:
+    fn = forward_compressed if variant == "pallas" else forward_compressed_ref
+    lowered = jax.jit(fn).lower(*serve_arg_specs(batch))
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def export_decode_graph(out_path: str) -> int:
+    def fn(codes, m_xor):
+        return (decode_planes_pallas(codes, m_xor),)
+
+    lowered = jax.jit(fn).lower(
+        f32(C.FC1_NQ, C.N_SLICES, C.N_IN), f32(C.N_OUT, C.N_IN)
+    )
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only lower HLO; do not run the training pipeline")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in C.BATCH_SIZES:
+        path = os.path.join(args.out_dir, f"sqnn_mlp_b{b}.hlo.txt")
+        n = export_serve_graph(b, path, "pallas")
+        print(f"[aot] wrote {path} ({n} chars)")
+        path = os.path.join(args.out_dir, f"sqnn_mlp_ref_b{b}.hlo.txt")
+        n = export_serve_graph(b, path, "ref")
+        print(f"[aot] wrote {path} ({n} chars)")
+    path = os.path.join(args.out_dir, "decode_planes.hlo.txt")
+    n = export_decode_graph(path)
+    print(f"[aot] wrote {path} ({n} chars)")
+
+    if not args.skip_train:
+        from .pipeline import run
+
+        run(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Build-time configuration shared by the JAX model, the AOT exporter, and
+(through ``meta.json``) the Rust coordinator.
+
+The end-to-end workload is the paper's LeNet-5-FC1 scenario scaled to a
+trainable synthetic task: an MLP 784-500-300-10 whose first (dominant) FC
+layer is pruned to 95% sparsity, quantized to 1 bit, and stored in the
+XOR-encrypted format. ``N_OUT`` is chosen to divide the FC1 input width so
+that every encrypted slice stays within one weight row — the alignment the
+fused Pallas kernel tiles on — and to sit near the paper's design point
+(n_in=20, n_out≈1/(1−S)·n_in; §3.3 / Fig 7).
+"""
+
+# ---- model architecture (LeNet5-FC-style MLP) ----
+INPUT_DIM = 784
+HIDDEN1 = 500  # FC1: 784×500 — 93% of parameters, the compressed layer
+HIDDEN2 = 300
+NUM_CLASSES = 10
+
+# ---- SQNN pipeline ----
+FC1_SPARSITY = 0.95  # paper Table 2, LeNet5 FC1
+FC1_NQ = 1           # 1-bit quantization
+MASK_RANK = 64       # binary-index factorization rank for the FC1 mask
+
+# ---- XOR encryption design point ----
+N_IN = 20
+N_OUT = 392          # divides INPUT_DIM=784; n_out/n_in = 19.6 ≈ 1/(1−S)
+XOR_SEED = 0x51534E4E  # "QSNN" — must match the Rust side's EncryptConfig
+
+# FC1 plane geometry (row-major (HIDDEN1, INPUT_DIM) flatten)
+FC1_PLANE_LEN = HIDDEN1 * INPUT_DIM
+N_SLICES = (FC1_PLANE_LEN + N_OUT - 1) // N_OUT
+
+# ---- serving ----
+BATCH_SIZES = (1, 8, 32)
+
+# ---- training (build-time only) ----
+TRAIN_STEPS = 400
+FINETUNE_STEPS = 150
+LEARNING_RATE = 1e-3
+TRAIN_BATCH = 128
+DATA_SEED = 1234
+TRAIN_EXAMPLES = 8192
+TEST_EXAMPLES = 2048

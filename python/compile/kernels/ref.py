@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Pallas kernels (correctness reference).
+
+Everything is float32 arithmetic over {0,1}-valued arrays: the GF(2)
+mat-vec ``M⊕ w^c`` becomes an ordinary matmul followed by ``mod 2`` (sums
+are small integers, exact in f32), and the patch flip is another mod-2
+addition — see DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_planes_ref(codes: jnp.ndarray, m_xor: jnp.ndarray) -> jnp.ndarray:
+    """XOR-network decode of every slice of every bit-plane.
+
+    codes:  [n_q, l, n_in]  {0,1} seeds (w^c)
+    m_xor:  [n_out, n_in]   {0,1} generator matrix (M⊕)
+    returns [n_q, l, n_out] {0,1} decoded bits (before patch correction)
+    """
+    prod = jnp.einsum("qli,oi->qlo", codes, m_xor)
+    return jnp.mod(prod, 2.0)
+
+
+def reconstruct_weight_ref(
+    codes: jnp.ndarray,
+    patch: jnp.ndarray,
+    m_xor: jnp.ndarray,
+    mask: jnp.ndarray,
+    alphas: jnp.ndarray,
+    out_dim: int,
+    in_dim: int,
+) -> jnp.ndarray:
+    """Decode → patch-fix → dequantize → mask: the full weight decompression.
+
+    patch: [n_q, l, n_out] {0,1} patch bit-planes (scattered d_patch)
+    mask:  [out_dim, in_dim] {0,1} pruning mask
+    alphas:[n_q] quantization coefficients
+    returns [out_dim, in_dim] float32 weights
+    """
+    n_q = codes.shape[0]
+    bits = jnp.mod(decode_planes_ref(codes, m_xor) + patch, 2.0)
+    planes = bits.reshape(n_q, -1)[:, : out_dim * in_dim]
+    planes = planes.reshape(n_q, out_dim, in_dim)
+    w = jnp.einsum("q,qoi->oi", alphas, 2.0 * planes - 1.0)
+    return w * mask
+
+
+def fc_forward_ref(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    patch: jnp.ndarray,
+    m_xor: jnp.ndarray,
+    mask: jnp.ndarray,
+    alphas: jnp.ndarray,
+    bias: jnp.ndarray,
+) -> jnp.ndarray:
+    """Compressed fully-connected layer: ``y = x · W(codes)ᵀ + b``."""
+    out_dim, in_dim = mask.shape
+    w = reconstruct_weight_ref(codes, patch, m_xor, mask, alphas, out_dim, in_dim)
+    return x @ w.T + bias

@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernels: the decode hot path.
+
+Hardware adaptation (DESIGN.md §7): the paper decodes with an ASIC XOR-gate
+array at memory line rate. On TPU the same GF(2) mat-vec is a *matmul mod 2*
+— MXU work — so the fixed decode rate the paper buys with XOR trees becomes
+a dense `(slices × n_in)·(n_in × n_out)` GEMM with perfectly regular access.
+The fused kernel goes further and never materializes the decoded weights in
+HBM: each grid step decodes one block of weight rows into VMEM scratch,
+dequantizes, masks, and immediately multiplies with the activation tile, so
+HBM weight traffic stays at the *compressed* footprint (the paper's
+bandwidth claim).
+
+Kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. Block shapes are still
+chosen for VMEM budgets (see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the weight matrix decoded per fused-kernel grid step. 50 rows ×
+# 784 cols × 4 B ≈ 157 KiB of decoded weights in VMEM — comfortably inside
+# a TPU core's ~16 MiB VMEM alongside the activation tile.
+DEFAULT_ROWS_PER_BLOCK = 50
+# Slice blocks per decode-kernel grid step.
+DEFAULT_SLICES_PER_BLOCK = 100
+
+
+def _decode_kernel(codes_ref, m_ref, out_ref):
+    """out = (codes @ Mᵀ) mod 2 for one [sb, n_in] block of slices."""
+    prod = jnp.dot(codes_ref[0], m_ref[...].T)
+    out_ref[0] = jnp.mod(prod, 2.0)
+
+
+def decode_planes_pallas(
+    codes: jnp.ndarray,
+    m_xor: jnp.ndarray,
+    slices_per_block: int = DEFAULT_SLICES_PER_BLOCK,
+) -> jnp.ndarray:
+    """Pallas version of :func:`ref.decode_planes_ref`.
+
+    codes [n_q, l, n_in] → bits [n_q, l, n_out]; grid over (plane, slice
+    block); the whole M⊕ (n_out × n_in, a few KB) is resident per step.
+    """
+    n_q, l, n_in = codes.shape
+    n_out = m_xor.shape[0]
+    sb = min(slices_per_block, l)
+    assert l % sb == 0, f"slice count {l} not divisible by block {sb}"
+    grid = (n_q, l // sb)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, sb, n_in), lambda q, s: (q, s, 0)),
+            pl.BlockSpec((n_out, n_in), lambda q, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sb, n_out), lambda q, s: (q, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, l, n_out), jnp.float32),
+        interpret=True,
+    )(codes, m_xor)
+
+
+def _fused_kernel(x_ref, codes_ref, patch_ref, m_ref, mask_ref, alphas_ref,
+                  bias_ref, out_ref, *, rows_per_block, in_dim, n_out):
+    """One output-row block of `y = x · W(codes)ᵀ + b`.
+
+    Decodes `rows_per_block` weight rows (= rows_per_block · in_dim/n_out
+    slices) into VMEM, dequantizes and masks them, and contracts with the
+    full activation tile. Decoded weights never leave VMEM.
+    """
+    n_q = codes_ref.shape[0]
+    # Decode + patch-fix all planes for this block: [n_q, sb, n_out].
+    bits = jnp.mod(
+        jnp.einsum("qsi,oi->qso", codes_ref[...], m_ref[...]) + patch_ref[...],
+        2.0,
+    )
+    # [n_q, rows, in_dim] → dequantize with alphas.
+    planes = bits.reshape(n_q, rows_per_block, in_dim)
+    w = jnp.einsum("q,qri->ri", alphas_ref[...], 2.0 * planes - 1.0)
+    w = w * mask_ref[...]
+    out_ref[...] = jnp.dot(x_ref[...], w.T) + bias_ref[...][None, :]
+
+
+def fused_decode_fc_pallas(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    patch: jnp.ndarray,
+    m_xor: jnp.ndarray,
+    mask: jnp.ndarray,
+    alphas: jnp.ndarray,
+    bias: jnp.ndarray,
+    rows_per_block: int = DEFAULT_ROWS_PER_BLOCK,
+) -> jnp.ndarray:
+    """Fused decode→dequant→mask→matmul for a compressed FC layer.
+
+    Requires ``n_out | in_dim`` (config guarantees it) so each encrypted
+    slice lies inside one weight row and row blocks tile cleanly.
+    """
+    batch, in_dim = x.shape
+    out_dim = mask.shape[0]
+    n_q, l, n_in = codes.shape
+    n_out = m_xor.shape[0]
+    assert in_dim % n_out == 0, "n_out must divide the FC input width"
+    spr = in_dim // n_out  # slices per weight row
+    assert l == out_dim * spr, f"slice count {l} != {out_dim}*{spr}"
+    rb = min(rows_per_block, out_dim)
+    assert out_dim % rb == 0, f"out_dim {out_dim} not divisible by {rb}"
+    sb = rb * spr  # code slices per block
+    grid = (out_dim // rb,)
+    kernel = functools.partial(
+        _fused_kernel, rows_per_block=rb, in_dim=in_dim, n_out=n_out
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, in_dim), lambda i: (0, 0)),
+            pl.BlockSpec((n_q, sb, n_in), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_q, sb, n_out), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_out, n_in), lambda i: (0, 0)),
+            pl.BlockSpec((rb, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((n_q,), lambda i: (0,)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((batch, rb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), jnp.float32),
+        interpret=True,
+    )(x, codes, patch, m_xor, mask, alphas, bias)

@@ -1,0 +1,139 @@
+"""Layer-2 JAX model: the SQNN MLP (784-500-300-10).
+
+Two forward paths share the non-FC1 parameters:
+
+* :func:`forward_dense` — ordinary dense MLP (training / baselines);
+* :func:`forward_compressed` — FC1 is reconstructed *inside the graph* from
+  its XOR-encrypted form through the fused Pallas kernel; this is the graph
+  that `aot.py` lowers to HLO for the Rust coordinator.
+
+Training utilities (cross-entropy loss, hand-rolled Adam — the image has no
+optax) run at build time only.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .kernels.ref import fc_forward_ref
+from .kernels.xor_decode import fused_decode_fc_pallas
+
+
+def init_params(seed: int) -> dict:
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+
+    def dense(key, fan_in, fan_out):
+        scale = jnp.sqrt(2.0 / fan_in)
+        return jax.random.normal(key, (fan_out, fan_in), jnp.float32) * scale
+
+    return {
+        "w1": dense(k1, C.INPUT_DIM, C.HIDDEN1),
+        "b1": jnp.zeros((C.HIDDEN1,), jnp.float32),
+        "w2": dense(k2, C.HIDDEN1, C.HIDDEN2),
+        "b2": jnp.zeros((C.HIDDEN2,), jnp.float32),
+        "w3": dense(k3, C.HIDDEN2, C.NUM_CLASSES),
+        "b3": jnp.zeros((C.NUM_CLASSES,), jnp.float32),
+    }
+
+
+def forward_dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x @ params["w1"].T + params["b1"])
+    h = jax.nn.relu(h @ params["w2"].T + params["b2"])
+    return h @ params["w3"].T + params["b3"]
+
+
+def forward_compressed(
+    x: jnp.ndarray,
+    m_xor: jnp.ndarray,
+    codes: jnp.ndarray,
+    patch: jnp.ndarray,
+    mask: jnp.ndarray,
+    alphas: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    w3: jnp.ndarray,
+    b3: jnp.ndarray,
+) -> jnp.ndarray:
+    """The serving graph: compressed FC1 (fused Pallas decode-GEMM), dense
+    FC2/FC3. Argument order here *is* the HLO parameter order the Rust
+    runtime feeds — keep `aot.py` and `rust/src/coordinator` in sync.
+    """
+    h = jax.nn.relu(
+        fused_decode_fc_pallas(x, codes, patch, m_xor, mask, alphas, b1)
+    )
+    h = jax.nn.relu(h @ w2.T + b2)
+    return (h @ w3.T + b3,)
+
+
+def forward_compressed_ref(
+    x, m_xor, codes, patch, mask, alphas, b1, w2, b2, w3, b3
+):
+    """Identical math to :func:`forward_compressed`, but the decode-GEMM is
+    the pure-jnp reference instead of the interpreted Pallas kernel.
+
+    On the CPU PJRT backend the interpret-mode Pallas call lowers to an
+    HLO region XLA cannot fuse well (§Perf); this variant lets XLA fuse the
+    whole decode. pytest asserts the two kernels agree bit-for-bit, so the
+    coordinator may serve either artifact — Pallas remains the TPU
+    deployment path (compiled via Mosaic) and the CPU correctness vehicle.
+    """
+    h = jax.nn.relu(fc_forward_ref(x, codes, patch, m_xor, mask, alphas, b1))
+    h = jax.nn.relu(h @ w2.T + b2)
+    return (h @ w3.T + b3,)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- training
+
+def adam_init(params: dict) -> dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def make_train_step(lr: float, fc1_mask=None, freeze_fc1: bool = False):
+    """Jitted Adam step. `fc1_mask` (0/1 [H1, IN]) keeps pruned FC1 weights
+    at zero (mask applied to both weight and gradient); `freeze_fc1` zeroes
+    the FC1 update entirely (used after quantization)."""
+
+    def loss_fn(params, x, y):
+        p = params
+        if fc1_mask is not None:
+            p = dict(p, w1=p["w1"] * fc1_mask)
+        return cross_entropy(forward_dense(p, x), y)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        if fc1_mask is not None:
+            grads = dict(grads, w1=grads["w1"] * fc1_mask)
+        if freeze_fc1:
+            grads = dict(grads, w1=jnp.zeros_like(grads["w1"]),
+                         b1=jnp.zeros_like(grads["b1"]))
+        new_params, new_opt = adam_update(params, grads, opt, lr)
+        if fc1_mask is not None:
+            new_params = dict(new_params, w1=new_params["w1"] * fc1_mask)
+        return new_params, new_opt, loss
+
+    return step

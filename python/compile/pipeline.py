@@ -1,0 +1,137 @@
+"""Build-time SQNN pipeline: train → prune → quantize → export.
+
+Produces ``artifacts/weights/`` (the tensor bundle the Rust coordinator
+compresses and serves) and appends the measured accuracies to
+``artifacts/meta.json``. Python never runs at inference time; this script
+is invoked once by ``make artifacts``.
+
+Stages (mirroring paper §4):
+ 1. train the dense MLP on the synthetic digit task;
+ 2. magnitude-prune FC1 to ``FC1_SPARSITY`` and retrain under the mask;
+ 3. quantize FC1 with alternating multi-bit quantization and fine-tune the
+    remaining dense layers around the frozen quantized FC1;
+ 4. export mask / bit-planes / alphas / dense layers / eval tensors.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from .data import make_dataset
+from .model import (accuracy, adam_init, forward_dense, init_params,
+                    make_train_step)
+from .sqnn import dequantize, magnitude_mask, quantize_multibit
+
+
+def _epoch_batches(x, y, batch, rng):
+    idx = rng.permutation(len(x))
+    for i in range(0, len(x) - batch + 1, batch):
+        sel = idx[i : i + batch]
+        yield x[sel], y[sel]
+
+
+def _train(params, x, y, steps, lr, mask=None, freeze_fc1=False, seed=0):
+    step = make_train_step(lr, fc1_mask=mask, freeze_fc1=freeze_fc1)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    done = 0
+    loss = float("nan")
+    while done < steps:
+        for bx, by in _epoch_batches(x, y, C.TRAIN_BATCH, rng):
+            params, opt, loss = step(params, opt, jnp.array(bx), jnp.array(by))
+            done += 1
+            if done >= steps:
+                break
+    return params, float(loss)
+
+
+def _eval_acc(params, x, y, mask=None):
+    p = dict(params)
+    if mask is not None:
+        p["w1"] = p["w1"] * mask
+    logits = forward_dense(p, jnp.array(x))
+    return float(accuracy(logits, jnp.array(y)))
+
+
+def run(out_dir: str = "../artifacts", verbose: bool = True) -> dict:
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    log = print if verbose else (lambda *a, **k: None)
+    xtr, ytr = make_dataset(C.TRAIN_EXAMPLES, C.DATA_SEED)
+    xte, yte = make_dataset(C.TEST_EXAMPLES, C.DATA_SEED + 1)
+
+    # 1. dense training
+    params = init_params(7)
+    params, loss = _train(params, xtr, ytr, C.TRAIN_STEPS, C.LEARNING_RATE)
+    acc_dense = _eval_acc(params, xte, yte)
+    log(f"[pipeline] dense: loss={loss:.4f} test_acc={acc_dense:.4f}")
+
+    # 2. prune FC1 + retrain under mask
+    w1 = np.asarray(params["w1"])
+    mask = magnitude_mask(w1, C.FC1_SPARSITY)
+    jmask = jnp.array(mask.astype(np.float32))
+    params = dict(params, w1=params["w1"] * jmask)
+    params, _ = _train(params, xtr, ytr, C.FINETUNE_STEPS, C.LEARNING_RATE / 2,
+                       mask=jmask, seed=1)
+    acc_pruned = _eval_acc(params, xte, yte, mask=jmask)
+    log(f"[pipeline] pruned S={C.FC1_SPARSITY}: test_acc={acc_pruned:.4f}")
+
+    # 3. quantize FC1, freeze it, fine-tune the rest
+    w1 = np.asarray(params["w1"])
+    alphas, bits = quantize_multibit(w1, mask, C.FC1_NQ)
+    w1q = dequantize(alphas, bits, mask)
+    params = dict(params, w1=jnp.array(w1q))
+    params, _ = _train(params, xtr, ytr, C.FINETUNE_STEPS, C.LEARNING_RATE / 2,
+                       freeze_fc1=True, seed=2)
+    acc_sqnn = _eval_acc(params, xte, yte)
+    log(f"[pipeline] quantized nq={C.FC1_NQ}: test_acc={acc_sqnn:.4f}")
+
+    # 4. export
+    np.save(f"{wdir}/fc1_mask.npy", mask.astype(np.uint8))
+    np.save(f"{wdir}/fc1_bits.npy", bits.astype(np.uint8))  # [nq, H1, IN]
+    np.save(f"{wdir}/fc1_alphas.npy", alphas.astype(np.float32))
+    for name in ("b1", "w2", "b2", "w3", "b3"):
+        np.save(f"{wdir}/{name}.npy", np.asarray(params[name], dtype=np.float32))
+    np.save(f"{wdir}/x_test.npy", xte)
+    np.save(f"{wdir}/y_test.npy", yte.astype(np.int32))
+    # Reference logits on the first serving batch, for bit-exactness checks
+    # against the Rust-served model.
+    ref_logits = np.asarray(
+        forward_dense(params, jnp.array(xte[: max(C.BATCH_SIZES)])),
+        dtype=np.float32,
+    )
+    np.save(f"{wdir}/logits_ref.npy", ref_logits)
+
+    meta = {
+        "input_dim": C.INPUT_DIM,
+        "hidden1": C.HIDDEN1,
+        "hidden2": C.HIDDEN2,
+        "num_classes": C.NUM_CLASSES,
+        "fc1_sparsity": C.FC1_SPARSITY,
+        "fc1_nq": C.FC1_NQ,
+        "n_in": C.N_IN,
+        "n_out": C.N_OUT,
+        "n_slices": C.N_SLICES,
+        "xor_seed": C.XOR_SEED,
+        "batch_sizes": list(C.BATCH_SIZES),
+        "acc_dense": acc_dense,
+        "acc_pruned": acc_pruned,
+        "acc_sqnn": acc_sqnn,
+        "mask_rank": C.MASK_RANK,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    log(f"[pipeline] exported weight bundle to {wdir}")
+    return meta
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    run(out)

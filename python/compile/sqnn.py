@@ -1,0 +1,75 @@
+"""Build-time SQNN transforms: magnitude pruning and alternating multi-bit
+quantization (Xu et al. ICLR'18 [32]) — the numpy mirrors of the Rust
+``prune``/``quant`` modules (cross-checked by the integration tests: both
+sides must agree on the artifacts they exchange).
+"""
+
+import numpy as np
+
+
+def magnitude_mask(w: np.ndarray, sparsity: float) -> np.ndarray:
+    """Keep the largest-|w| (1−sparsity) fraction. Returns bool mask."""
+    flat = np.abs(w).reshape(-1)
+    keep = int(round((1.0 - sparsity) * flat.size))
+    if keep <= 0:
+        return np.zeros(w.shape, dtype=bool)
+    if keep >= flat.size:
+        return np.ones(w.shape, dtype=bool)
+    # threshold at the keep-th largest magnitude; break ties by index order
+    order = np.argsort(-flat, kind="stable")[:keep]
+    mask = np.zeros(flat.size, dtype=bool)
+    mask[order] = True
+    return mask.reshape(w.shape)
+
+
+def quantize_multibit(w: np.ndarray, mask: np.ndarray, n_q: int,
+                      iters: int = 6) -> tuple[np.ndarray, np.ndarray]:
+    """Alternating multi-bit quantization on the unpruned weights.
+
+    Returns ``(alphas [n_q], bits [n_q, *w.shape] in {0,1})`` such that
+    ``w ≈ mask * Σ_i alphas[i] * (2*bits[i] − 1)``. Pruned positions get
+    bit 0 (don't care — the XOR codec is free to overwrite them).
+    """
+    assert 1 <= n_q <= 8
+    kept = w[mask].astype(np.float64)
+    b = np.zeros((n_q, kept.size), dtype=np.float64)  # ±1
+    alphas = np.zeros(n_q, dtype=np.float64)
+    resid = kept.copy()
+    for i in range(n_q):
+        a = np.mean(np.abs(resid)) if kept.size else 0.0
+        alphas[i] = a
+        b[i] = np.where(resid >= 0, 1.0, -1.0)
+        resid -= a * b[i]
+    for _ in range(iters):
+        if kept.size == 0:
+            break
+        # alpha-step: least squares
+        bt = b.T  # [k, n_q]
+        ata = bt.T @ bt
+        atw = bt.T @ kept
+        try:
+            alphas = np.linalg.solve(ata, atw)
+        except np.linalg.LinAlgError:
+            pass
+        # b-step: nearest codebook value
+        codes = np.array(
+            [[1.0 if (m >> i) & 1 else -1.0 for i in range(n_q)]
+             for m in range(1 << n_q)])  # [2^nq, n_q]
+        vals = codes @ alphas  # [2^nq]
+        best = np.argmin(np.abs(kept[:, None] - vals[None, :]), axis=1)
+        b = codes[best].T
+    bits = np.zeros((n_q,) + w.shape, dtype=np.uint8)
+    for i in range(n_q):
+        plane = np.zeros(w.shape, dtype=np.uint8)
+        plane[mask] = (b[i] > 0).astype(np.uint8)
+        bits[i] = plane
+    return alphas.astype(np.float32), bits
+
+
+def dequantize(alphas: np.ndarray, bits: np.ndarray,
+               mask: np.ndarray) -> np.ndarray:
+    """Reconstruct ``mask * Σ alphas[i] (2 bits[i] − 1)`` as float32."""
+    w = np.zeros(bits.shape[1:], dtype=np.float32)
+    for i, a in enumerate(alphas):
+        w += a * (2.0 * bits[i].astype(np.float32) - 1.0)
+    return w * mask.astype(np.float32)

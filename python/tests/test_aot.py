@@ -1,0 +1,43 @@
+"""AOT export smoke tests: the HLO text must parse-ready for the Rust side."""
+
+import os
+import tempfile
+
+from compile import config as C
+from compile.aot import export_decode_graph, export_serve_graph
+
+
+def test_serve_graph_exports_hlo_text():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "serve.hlo.txt")
+        n = export_serve_graph(1, path)
+        assert n > 1000
+        text = open(path).read()
+        assert text.startswith("HloModule")
+        # 11 entry parameters in the agreed order (nested computations from
+        # the interpreted Pallas call also contain `parameter(`, so count
+        # inputs in the entry layout instead).
+        layout = text.splitlines()[0]
+        entry_inputs = layout.split("->")[0]
+        assert entry_inputs.count("f32[") == 11
+        # batch-1 activation input present
+        assert f"f32[1,{C.INPUT_DIM}]" in text
+
+
+def test_decode_graph_exports_hlo_text():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "decode.hlo.txt")
+        n = export_decode_graph(path)
+        assert n > 500
+        text = open(path).read()
+        assert text.startswith("HloModule")
+        layout = text.splitlines()[0]
+        assert layout.split("->")[0].count("f32[") == 2
+        assert f"f32[{C.N_OUT},{C.N_IN}]" in text
+
+
+def test_config_geometry_consistent():
+    assert C.INPUT_DIM % C.N_OUT == 0, "fused kernel needs n_out | input_dim"
+    assert C.N_SLICES * C.N_OUT >= C.FC1_PLANE_LEN
+    assert C.N_SLICES == C.HIDDEN1 * (C.INPUT_DIM // C.N_OUT)
+    assert C.N_IN <= 64

@@ -1,0 +1,31 @@
+"""Synthetic dataset properties."""
+
+import numpy as np
+
+from compile.data import make_dataset
+
+
+def test_shapes_and_ranges():
+    x, y = make_dataset(64, 0)
+    assert x.shape == (64, 784) and x.dtype == np.float32
+    assert y.shape == (64,) and y.dtype == np.int32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+
+
+def test_deterministic_per_seed():
+    x1, y1 = make_dataset(32, 5)
+    x2, y2 = make_dataset(32, 5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = make_dataset(32, 6)
+    assert not np.array_equal(x1, x3)
+
+
+def test_classes_are_distinguishable():
+    """Class-conditional means must differ — the task must be learnable."""
+    x, y = make_dataset(800, 3)
+    means = np.stack([x[y == c].mean(axis=0) for c in range(10)])
+    d = np.linalg.norm(means[:, None] - means[None, :], axis=-1)
+    off_diag = d[~np.eye(10, dtype=bool)]
+    assert off_diag.min() > 0.5, off_diag.min()

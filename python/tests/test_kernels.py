@@ -1,0 +1,139 @@
+"""Pallas kernels vs the pure-jnp oracle, swept with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (decode_planes_ref, fc_forward_ref,
+                                 reconstruct_weight_ref)
+from compile.kernels.xor_decode import (decode_planes_pallas,
+                                        fused_decode_fc_pallas)
+
+
+def _mk_inputs(rng, n_q, n_in, n_out, out_dim, spr, batch, patch_p=0.02):
+    in_dim = n_out * spr
+    l = out_dim * spr
+    codes = rng.integers(0, 2, (n_q, l, n_in)).astype(np.float32)
+    m = rng.integers(0, 2, (n_out, n_in)).astype(np.float32)
+    patch = (rng.random((n_q, l, n_out)) < patch_p).astype(np.float32)
+    mask = (rng.random((out_dim, in_dim)) < 0.15).astype(np.float32)
+    alphas = rng.uniform(0.05, 1.0, n_q).astype(np.float32)
+    bias = rng.normal(size=out_dim).astype(np.float32)
+    x = rng.normal(size=(batch, in_dim)).astype(np.float32)
+    return x, codes, patch, m, mask, alphas, bias
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_q=st.integers(1, 3),
+    n_in=st.integers(4, 24),
+    n_out=st.sampled_from([16, 49, 64]),
+    l_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_decode_planes_matches_ref(n_q, n_in, n_out, l_blocks, seed):
+    rng = np.random.default_rng(seed)
+    sb = 8
+    l = sb * l_blocks
+    codes = rng.integers(0, 2, (n_q, l, n_in)).astype(np.float32)
+    m = rng.integers(0, 2, (n_out, n_in)).astype(np.float32)
+    ref = decode_planes_ref(jnp.array(codes), jnp.array(m))
+    out = decode_planes_pallas(jnp.array(codes), jnp.array(m), slices_per_block=sb)
+    np.testing.assert_array_equal(np.array(ref), np.array(out))
+
+
+def test_decode_output_is_binary():
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 2, (2, 40, 20)).astype(np.float32)
+    m = rng.integers(0, 2, (64, 20)).astype(np.float32)
+    out = np.array(decode_planes_pallas(jnp.array(codes), jnp.array(m),
+                                        slices_per_block=20))
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_q=st.integers(1, 2),
+    spr=st.integers(1, 3),
+    batch=st.sampled_from([1, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_fc_matches_ref(n_q, spr, batch, seed):
+    rng = np.random.default_rng(seed)
+    n_in, n_out, out_dim = 12, 32, 20
+    args = _mk_inputs(rng, n_q, n_in, n_out, out_dim, spr, batch)
+    x, codes, patch, m, mask, alphas, bias = [jnp.array(a) for a in args]
+    ref = fc_forward_ref(x, codes, patch, m, mask, alphas, bias)
+    out = fused_decode_fc_pallas(x, codes, patch, m, mask, alphas, bias,
+                                 rows_per_block=10)
+    np.testing.assert_allclose(np.array(ref), np.array(out), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_fused_fc_full_config_shape():
+    """The exact FC1 geometry served in production (784→500, n_out=392)."""
+    from compile import config as C
+
+    rng = np.random.default_rng(0)
+    spr = C.INPUT_DIM // C.N_OUT
+    args = _mk_inputs(rng, C.FC1_NQ, C.N_IN, C.N_OUT, C.HIDDEN1, spr, 4)
+    x, codes, patch, m, mask, alphas, bias = [jnp.array(a) for a in args]
+    ref = fc_forward_ref(x, codes, patch, m, mask, alphas, bias)
+    out = fused_decode_fc_pallas(x, codes, patch, m, mask, alphas, bias)
+    assert out.shape == (4, C.HIDDEN1)
+    np.testing.assert_allclose(np.array(ref), np.array(out), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_patch_flips_exactly_one_bit():
+    """A single patch bit must flip exactly one decoded weight bit."""
+    rng = np.random.default_rng(5)
+    n_q, l, n_in, n_out = 1, 4, 8, 16
+    codes = rng.integers(0, 2, (n_q, l, n_in)).astype(np.float32)
+    m = rng.integers(0, 2, (n_out, n_in)).astype(np.float32)
+    patch0 = np.zeros((n_q, l, n_out), np.float32)
+    patch1 = patch0.copy()
+    patch1[0, 2, 5] = 1.0
+    out_dim, in_dim = 4, 16
+    mask = np.ones((out_dim, in_dim), np.float32)
+    alphas = np.array([1.0], np.float32)
+    w0 = reconstruct_weight_ref(jnp.array(codes), jnp.array(patch0),
+                                jnp.array(m), jnp.array(mask),
+                                jnp.array(alphas), out_dim, in_dim)
+    w1 = reconstruct_weight_ref(jnp.array(codes), jnp.array(patch1),
+                                jnp.array(m), jnp.array(mask),
+                                jnp.array(alphas), out_dim, in_dim)
+    diff = np.abs(np.array(w0) - np.array(w1))
+    assert (diff > 0).sum() == 1
+    # flat position 2*16+5 = 37 → row 2, col 5
+    assert diff[2, 5] == 2.0  # ±α flip = 2α
+
+
+def test_mask_zeroes_pruned_positions():
+    rng = np.random.default_rng(7)
+    n_q, l, n_in, n_out = 1, 8, 10, 16
+    out_dim, in_dim = 8, 16
+    codes = rng.integers(0, 2, (n_q, l, n_in)).astype(np.float32)
+    m = rng.integers(0, 2, (n_out, n_in)).astype(np.float32)
+    patch = np.zeros((n_q, l, n_out), np.float32)
+    mask = (rng.random((out_dim, in_dim)) < 0.2).astype(np.float32)
+    alphas = np.array([0.7], np.float32)
+    w = np.array(reconstruct_weight_ref(jnp.array(codes), jnp.array(patch),
+                                        jnp.array(m), jnp.array(mask),
+                                        jnp.array(alphas), out_dim, in_dim))
+    assert np.all(w[mask == 0] == 0.0)
+    assert np.allclose(np.abs(w[mask == 1]), 0.7, atol=1e-6)
+
+
+def test_fused_rejects_misaligned_n_out():
+    rng = np.random.default_rng(9)
+    x = jnp.array(rng.normal(size=(2, 30)).astype(np.float32))  # 30 % 16 != 0
+    codes = jnp.zeros((1, 4, 8), jnp.float32)
+    patch = jnp.zeros((1, 4, 16), jnp.float32)
+    m = jnp.zeros((16, 8), jnp.float32)
+    mask = jnp.ones((2, 30), jnp.float32)
+    alphas = jnp.ones((1,), jnp.float32)
+    bias = jnp.zeros((2,), jnp.float32)
+    with pytest.raises(AssertionError):
+        fused_decode_fc_pallas(x, codes, patch, m, mask, alphas, bias)

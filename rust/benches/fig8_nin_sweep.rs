@@ -1,0 +1,63 @@
+//! Fig 8: memory reduction for n_in ∈ {12…60} across n_out
+//! (S = 0.9; each line stops when reduction starts to fall).
+//!
+//! Paper's observation: larger seed spaces (higher n_in) reach higher
+//! reduction because fewer patches are needed.
+
+use sqnn_xor::benchutil::{print_table, write_csv};
+use sqnn_xor::rng::Rng;
+use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+fn main() {
+    let (len, s) = (100_000usize, 0.9f64);
+    let mut rng = Rng::new(8);
+    let plane = BitPlane::synthetic(len, s, &mut rng);
+
+    let mut rows = Vec::new();
+    let mut best_by_nin = Vec::new();
+    for n_in in [12usize, 20, 28, 36, 44, 52, 60] {
+        let mut best = (0usize, f64::MIN);
+        let mut prev = f64::MIN;
+        // n_out sweep proportional to n_in (ratio sweep 4x..24x).
+        for mult in 2..=24 {
+            let n_out = n_in * mult;
+            let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed: 8, block_slices: 0 });
+            let st = enc.encrypt_plane(&plane).stats();
+            let red = st.memory_reduction();
+            rows.push(vec![
+                n_in.to_string(),
+                n_out.to_string(),
+                format!("{:.4}", red),
+                st.total_patches.to_string(),
+            ]);
+            if red > best.1 {
+                best = (n_out, red);
+            }
+            // paper stops each line when the curve begins to fall
+            if red < prev - 0.02 {
+                break;
+            }
+            prev = red;
+        }
+        best_by_nin.push((n_in, best.0, best.1));
+    }
+    write_csv("fig8.csv", &["n_in", "n_out", "reduction", "patches"], &rows);
+
+    let summary: Vec<Vec<String>> = best_by_nin
+        .iter()
+        .map(|(n_in, n_out, red)| {
+            vec![n_in.to_string(), n_out.to_string(), format!("{red:.4}")]
+        })
+        .collect();
+    print_table(
+        "Fig 8 — best memory reduction per n_in (S=0.9)",
+        &["n_in", "best n_out", "reduction"],
+        &summary,
+    );
+
+    // Paper's trend: higher n_in ⇒ (weakly) more reduction.
+    let r12 = best_by_nin.first().unwrap().2;
+    let r60 = best_by_nin.last().unwrap().2;
+    println!("\ntrend check: n_in=12 → {r12:.3}, n_in=60 → {r60:.3} (must not decrease)");
+    assert!(r60 >= r12 - 0.005, "higher n_in should not reduce peak reduction");
+}

@@ -1,0 +1,98 @@
+//! §Perf hot-path microbenchmarks: encode throughput (Algorithm 1),
+//! decode throughput (the XOR-gate network in software), and end-to-end
+//! engine latency when artifacts are present. Drives the EXPERIMENTS.md
+//! §Perf before/after log.
+
+use sqnn_xor::benchutil::{bench, print_table, write_csv};
+use sqnn_xor::rng::Rng;
+use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(3);
+
+    // --- encode throughput across design points ---
+    for &(n_in, n_out, s) in &[(20usize, 200usize, 0.9f64), (20, 392, 0.95), (28, 280, 0.9), (20, 60, 0.7)] {
+        let len = 1_000_000usize;
+        let plane = BitPlane::synthetic(len, s, &mut rng);
+        let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed: 1, block_slices: 0 });
+        let r = bench(&format!("encode {n_in}/{n_out} S={s}"), 1, 5, || {
+            std::hint::black_box(enc.encrypt_plane(&plane));
+        });
+        rows.push(vec![
+            format!("encode n_in={n_in} n_out={n_out} S={s}"),
+            format!("{:.1}", r.mean_s * 1e3),
+            format!("{:.1}", len as f64 / r.mean_s / 1e6),
+            "Mweights/s".into(),
+        ]);
+    }
+
+    // --- decode throughput (software XOR network + patch flips) ---
+    for &(n_in, n_out, s) in &[(20usize, 200usize, 0.9f64), (20, 392, 0.95)] {
+        let len = 1_000_000usize;
+        let plane = BitPlane::synthetic(len, s, &mut rng);
+        let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed: 1, block_slices: 0 });
+        let ep = enc.encrypt_plane(&plane);
+        let r = bench(&format!("decode {n_in}/{n_out}"), 2, 10, || {
+            std::hint::black_box(enc.decrypt_plane(&ep));
+        });
+        rows.push(vec![
+            format!("decode n_in={n_in} n_out={n_out}"),
+            format!("{:.2}", r.mean_s * 1e3),
+            format!("{:.2}", len as f64 / r.mean_s / 1e9),
+            "Gbit/s".into(),
+        ]);
+    }
+
+    // --- GF(2) mat-vec alone (the innermost XOR-network primitive) ---
+    {
+        let net = sqnn_xor::xorenc::XorNetwork::generate(20, 392, 9);
+        let codes: Vec<u64> = (0..10_000).map(|_| rng.next_u64() & ((1 << 20) - 1)).collect();
+        let r = bench("xor-net matvec", 2, 20, || {
+            std::hint::black_box(net.decode_batch(&codes));
+        });
+        rows.push(vec![
+            "xor-network decode_batch (10k slices)".into(),
+            format!("{:.2}", r.mean_s * 1e3),
+            format!("{:.2}", 10_000.0 * 392.0 / r.mean_s / 1e9),
+            "Gbit/s".into(),
+        ]);
+    }
+
+    // --- end-to-end engine latency (needs artifacts) ---
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        if let (Ok(meta), Ok(model)) = (
+            sqnn_xor::coordinator::read_bundle_meta("artifacts"),
+            sqnn_xor::coordinator::compress_bundle("artifacts"),
+        ) {
+            let rt = sqnn_xor::runtime::Runtime::cpu().expect("pjrt");
+            use sqnn_xor::coordinator::GraphVariant;
+            for variant in [GraphVariant::Pallas, GraphVariant::Ref] {
+                let Ok(engine) = sqnn_xor::coordinator::SqnnEngine::load_variant(
+                    &rt,
+                    model.clone(),
+                    "artifacts",
+                    &meta.batch_sizes,
+                    variant,
+                ) else {
+                    continue;
+                };
+                for &b in &meta.batch_sizes {
+                    let xs: Vec<Vec<f32>> = (0..b).map(|_| vec![0.1; meta.input_dim]).collect();
+                    let r = bench(&format!("engine {variant:?} b{b}"), 2, 10, || {
+                        std::hint::black_box(engine.infer(&xs).unwrap());
+                    });
+                    rows.push(vec![
+                        format!("engine infer {variant:?} batch={b}"),
+                        format!("{:.2}", r.mean_s * 1e3),
+                        format!("{:.1}", b as f64 / r.mean_s),
+                        "req/s".into(),
+                    ]);
+                }
+            }
+        }
+    }
+
+    print_table("§Perf — hot paths", &["case", "ms/iter", "throughput", "unit"], &rows);
+    write_csv("perf_hotpath.csv", &["case", "ms", "throughput", "unit"], &rows);
+}

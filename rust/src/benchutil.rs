@@ -1,0 +1,140 @@
+//! Micro-benchmark harness (the offline image has no criterion).
+//!
+//! Every `rust/benches/*.rs` target (`harness = false`) uses this: warmup,
+//! timed iterations, mean/p50/p99, and aligned table output so `cargo
+//! bench` prints the paper's rows. Results can also be appended to a CSV
+//! under `target/bench_results/` for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile, stddev};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    /// Items/second given a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Run `f` for `warmup + iters` iterations, timing the last `iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean(&samples),
+        p50_s: percentile(&samples, 0.5),
+        p99_s: percentile(&samples, 0.99),
+        stddev_s: stddev(&samples),
+    }
+}
+
+/// Time a single run of `f` (for expensive one-shot measurements).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Pretty-print a header + rows with aligned columns.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Append rows to `target/bench_results/<file>.csv` (header written once).
+pub fn write_csv(file: &str, header: &[&str], rows: &[Vec<String>]) {
+    let dir = std::path::Path::new("target/bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(file);
+    let fresh = !path.exists();
+    let mut out = String::new();
+    if fresh {
+        out.push_str(&header.join(","));
+        out.push('\n');
+    }
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = f.write_all(out.as_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("spin", 2, 10, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        std::hint::black_box(acc);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            p50_s: 0.5,
+            p99_s: 0.5,
+            stddev_s: 0.0,
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+        assert!((r.mean_us() - 5e5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,177 @@
+//! Dynamic batching coordinator.
+//!
+//! The serving front of the system: clients submit single inputs; a
+//! dedicated executor thread owns the [`SqnnEngine`] (PJRT handles are not
+//! shared across threads) and drains the queue into the largest batch
+//! bucket available, bounded by a max-wait deadline — the standard
+//! size-or-deadline policy of production inference routers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::engine::SqnnEngine;
+use super::metrics::Metrics;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per batch (clamped to the engine's largest bucket).
+    pub max_batch: usize,
+    /// How long the first request in a batch may wait for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Vec<f32>>>,
+}
+
+/// Handle for submitting work; cheap to clone across client threads.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+}
+
+impl CoordinatorHandle {
+    /// Synchronous single inference (blocks until the batch it joined
+    /// completes).
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Ask the executor to exit after draining.
+    pub fn shutdown(&self) {
+        self.running.store(false, Ordering::SeqCst);
+    }
+}
+
+/// The running coordinator; dropping it (after `shutdown`) joins the
+/// executor thread.
+pub struct Coordinator {
+    pub handle: CoordinatorHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the executor thread. `make_engine` runs *inside* the thread
+    /// so non-Send PJRT state never crosses threads.
+    pub fn spawn<F>(policy: BatchPolicy, make_engine: F) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<SqnnEngine> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(1024);
+        let metrics = Arc::new(Metrics::new());
+        let running = Arc::new(AtomicBool::new(true));
+        let handle =
+            CoordinatorHandle { tx, metrics: metrics.clone(), running: running.clone() };
+
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let thread = std::thread::Builder::new()
+            .name("sqnn-executor".into())
+            .spawn(move || {
+                let engine = match make_engine() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(engine, rx, policy, metrics, running);
+            })?;
+        ready_rx.recv().map_err(|_| anyhow!("executor died during startup"))??;
+        Ok(Coordinator { handle, thread: Some(thread) })
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn executor_loop(
+    engine: SqnnEngine,
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) {
+    let max_batch = policy.max_batch.min(engine.buckets().last().copied().unwrap_or(1));
+    while running.load(Ordering::SeqCst) {
+        // Block (briefly) for the first request.
+        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let mut batch = vec![first];
+        // Drain everything already queued — requests that piled up while
+        // the previous batch executed ride along for free.
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        // Then wait (from *now*, not from enqueue) briefly for stragglers.
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let start = Instant::now();
+        let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+        match engine.infer(&inputs) {
+            Ok(outputs) => {
+                let elapsed = start.elapsed();
+                metrics.record_batch(batch.len(), elapsed);
+                for (req, out) in batch.into_iter().zip(outputs) {
+                    metrics.record_latency(req.enqueued.elapsed());
+                    let _ = req.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

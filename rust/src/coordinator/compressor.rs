@@ -1,0 +1,228 @@
+//! Bundle → `.sqnn` compression: the offline half of the coordinator.
+//!
+//! Consumes the weight bundle exported by `python/compile/pipeline.py`
+//! (`fc1_mask.npy`, `fc1_bits.npy`, `fc1_alphas.npy`, dense tails,
+//! `meta.json`) and produces the compressed [`SqnnModel`] by running
+//! Algorithm 1 over every FC1 bit-plane.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gf2::BitVec;
+use crate::io::json;
+use crate::io::npy::read_npy;
+use crate::io::sqnn_file::{CompressedLayer, DenseLayer, ModelMeta, SqnnModel};
+use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+/// Parsed `meta.json` from the Python pipeline.
+#[derive(Clone, Debug)]
+pub struct BundleMeta {
+    pub input_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub num_classes: usize,
+    pub fc1_sparsity: f64,
+    pub fc1_nq: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub xor_seed: u64,
+    pub batch_sizes: Vec<usize>,
+    pub acc_sqnn: f64,
+}
+
+pub fn read_bundle_meta(artifacts_dir: impl AsRef<Path>) -> Result<BundleMeta> {
+    let path = artifacts_dir.as_ref().join("meta.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let v = json::parse(&text).context("parse meta.json")?;
+    Ok(BundleMeta {
+        input_dim: v.req_usize("input_dim")?,
+        hidden1: v.req_usize("hidden1")?,
+        hidden2: v.req_usize("hidden2")?,
+        num_classes: v.req_usize("num_classes")?,
+        fc1_sparsity: v.req_f64("fc1_sparsity")?,
+        fc1_nq: v.req_usize("fc1_nq")?,
+        n_in: v.req_usize("n_in")?,
+        n_out: v.req_usize("n_out")?,
+        xor_seed: v.req_f64("xor_seed")? as u64,
+        batch_sizes: v
+            .get("batch_sizes")
+            .and_then(json::Json::as_arr)
+            .map(|a| a.iter().filter_map(json::Json::as_usize).collect())
+            .unwrap_or_else(|| vec![1]),
+        acc_sqnn: v.req_f64("acc_sqnn")?,
+    })
+}
+
+/// Compress the exported bundle into a `.sqnn` model.
+pub fn compress_bundle(artifacts_dir: impl AsRef<Path>) -> Result<SqnnModel> {
+    let dir = artifacts_dir.as_ref();
+    let meta = read_bundle_meta(dir)?;
+    let wdir = dir.join("weights");
+
+    let mask_arr = read_npy(wdir.join("fc1_mask.npy"))?;
+    let bits_arr = read_npy(wdir.join("fc1_bits.npy"))?;
+    let alphas_arr = read_npy(wdir.join("fc1_alphas.npy"))?;
+    let (rows, cols) = (meta.hidden1, meta.input_dim);
+    if mask_arr.shape != vec![rows, cols] {
+        bail!("fc1_mask shape {:?} != [{rows}, {cols}]", mask_arr.shape);
+    }
+    if bits_arr.shape != vec![meta.fc1_nq, rows, cols] {
+        bail!("fc1_bits shape {:?} unexpected", bits_arr.shape);
+    }
+
+    let mask_u8 = mask_arr.as_u8()?;
+    let mask = BitVec::from_fn(rows * cols, |j| mask_u8[j] != 0);
+    let bits_u8 = bits_arr.as_u8()?;
+    let alphas = alphas_arr.as_f32()?.to_vec();
+
+    let enc = XorEncoder::new(EncryptConfig {
+        n_in: meta.n_in,
+        n_out: meta.n_out,
+        seed: meta.xor_seed,
+        block_slices: 0,
+    });
+    let plane_len = rows * cols;
+    let mut planes = Vec::with_capacity(meta.fc1_nq);
+    for q in 0..meta.fc1_nq {
+        let base = q * plane_len;
+        let bits = BitVec::from_fn(plane_len, |j| bits_u8[base + j] != 0);
+        let plane = BitPlane::new(bits, mask.clone());
+        let ep = enc.encrypt_plane(&plane);
+        if !enc.verify_lossless(&plane, &ep) {
+            bail!("plane {q}: encryption is not lossless (codec bug)");
+        }
+        planes.push(ep);
+    }
+
+    let bias = read_npy(wdir.join("b1.npy"))?.as_f32()?.to_vec();
+    let mut dense = Vec::new();
+    for (wname, bname, r, c) in [
+        ("w2", "b2", meta.hidden2, meta.hidden1),
+        ("w3", "b3", meta.num_classes, meta.hidden2),
+    ] {
+        let w = read_npy(wdir.join(format!("{wname}.npy")))?;
+        let b = read_npy(wdir.join(format!("{bname}.npy")))?;
+        if w.shape != vec![r, c] {
+            bail!("{wname} shape {:?} != [{r}, {c}]", w.shape);
+        }
+        dense.push(DenseLayer {
+            name: wname.to_string(),
+            rows: r,
+            cols: c,
+            w: w.as_f32()?.to_vec(),
+            b: b.as_f32()?.to_vec(),
+        });
+    }
+
+    Ok(SqnnModel {
+        meta: ModelMeta {
+            input_dim: meta.input_dim,
+            hidden1: meta.hidden1,
+            hidden2: meta.hidden2,
+            num_classes: meta.num_classes,
+            fc1_sparsity: meta.fc1_sparsity,
+            fc1_nq: meta.fc1_nq,
+            n_in: meta.n_in,
+            n_out: meta.n_out,
+            xor_seed: meta.xor_seed,
+        },
+        fc1: CompressedLayer { rows, cols, planes, alphas, mask, bias },
+        dense,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::npy::{write_npy, NpyArray};
+    use crate::rng::Rng;
+
+    /// Build a tiny synthetic bundle on disk and compress it.
+    fn make_bundle(dir: &Path, rows: usize, cols: usize, nq: usize) {
+        let wdir = dir.join("weights");
+        std::fs::create_dir_all(&wdir).unwrap();
+        let mut rng = Rng::new(1);
+        let mask: Vec<u8> = (0..rows * cols).map(|_| u8::from(rng.next_bool(0.1))).collect();
+        let bits: Vec<u8> = (0..nq * rows * cols).map(|_| u8::from(rng.next_bit())).collect();
+        write_npy(wdir.join("fc1_mask.npy"), &NpyArray::u8(vec![rows, cols], mask)).unwrap();
+        write_npy(wdir.join("fc1_bits.npy"), &NpyArray::u8(vec![nq, rows, cols], bits)).unwrap();
+        write_npy(
+            wdir.join("fc1_alphas.npy"),
+            &NpyArray::f32(vec![nq], (0..nq).map(|i| 0.5 / (i + 1) as f32).collect()),
+        )
+        .unwrap();
+        write_npy(wdir.join("b1.npy"), &NpyArray::f32(vec![rows], vec![0.1; rows])).unwrap();
+        let h2 = 4;
+        write_npy(wdir.join("w2.npy"), &NpyArray::f32(vec![h2, rows], vec![0.2; h2 * rows]))
+            .unwrap();
+        write_npy(wdir.join("b2.npy"), &NpyArray::f32(vec![h2], vec![0.0; h2])).unwrap();
+        write_npy(wdir.join("w3.npy"), &NpyArray::f32(vec![2, h2], vec![0.3; 2 * h2])).unwrap();
+        write_npy(wdir.join("b3.npy"), &NpyArray::f32(vec![2], vec![0.0; 2])).unwrap();
+        let meta = format!(
+            r#"{{"input_dim": {cols}, "hidden1": {rows}, "hidden2": {h2}, "num_classes": 2,
+                "fc1_sparsity": 0.9, "fc1_nq": {nq}, "n_in": 10, "n_out": 32,
+                "xor_seed": 77, "batch_sizes": [1, 4], "acc_sqnn": 0.99,
+                "acc_dense": 0.99, "acc_pruned": 0.99}}"#
+        );
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("sqnn_compressor_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn compress_bundle_roundtrip_lossless() {
+        let dir = tmpdir("basic");
+        make_bundle(&dir, 8, 64, 2);
+        let model = compress_bundle(&dir).unwrap();
+        assert_eq!(model.fc1.planes.len(), 2);
+        // Decoded planes must match the bundle's bits on care positions.
+        let bits_arr = read_npy(dir.join("weights/fc1_bits.npy")).unwrap();
+        let bits_u8 = bits_arr.as_u8().unwrap();
+        let decoded = model.fc1.decode_planes();
+        for q in 0..2 {
+            for j in 0..8 * 64 {
+                if model.fc1.mask.get(j) {
+                    assert_eq!(decoded[q].get(j), bits_u8[q * 8 * 64 + j] != 0, "q={q} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn meta_parses() {
+        let dir = tmpdir("meta");
+        make_bundle(&dir, 8, 64, 1);
+        let m = read_bundle_meta(&dir).unwrap();
+        assert_eq!(m.n_in, 10);
+        assert_eq!(m.batch_sizes, vec![1, 4]);
+        assert!((m.acc_sqnn - 0.99).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let dir = tmpdir("badshape");
+        make_bundle(&dir, 8, 64, 1);
+        // Overwrite mask with wrong shape.
+        write_npy(
+            dir.join("weights/fc1_mask.npy"),
+            &NpyArray::u8(vec![4, 64], vec![0; 4 * 64]),
+        )
+        .unwrap();
+        assert!(compress_bundle(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_rejected() {
+        let dir = tmpdir("missing");
+        make_bundle(&dir, 8, 64, 1);
+        std::fs::remove_file(dir.join("weights/w2.npy")).unwrap();
+        assert!(compress_bundle(&dir).is_err());
+    }
+}

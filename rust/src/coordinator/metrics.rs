@@ -1,0 +1,96 @@
+//! Serving metrics: counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::{mean, percentile};
+
+/// Thread-safe metrics sink for the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+    batch_items: AtomicU64,
+    /// Per-request end-to-end latencies, seconds (bounded reservoir).
+    latencies: Mutex<Vec<f64>>,
+}
+
+/// A read-only snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch_size: f64,
+    pub latency_mean_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+const RESERVOIR: usize = 100_000;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, size: usize, _exec: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(latency.as_secs_f64());
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let l = self.latencies.lock().unwrap();
+        let batches = self.batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches,
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            latency_mean_ms: mean(&l) * 1e3,
+            latency_p50_ms: percentile(&l, 0.5) * 1e3,
+            latency_p99_ms: percentile(&l, 0.99) * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = Metrics::new();
+        m.record_batch(4, Duration::from_millis(1));
+        m.record_batch(2, Duration::from_millis(1));
+        for ms in [1u64, 2, 3] {
+            m.record_latency(Duration::from_millis(ms));
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        assert!((s.latency_mean_ms - 2.0).abs() < 0.2);
+        assert!(s.latency_p99_ms >= s.latency_p50_ms);
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the serving side of the system.
+//!
+//! * [`compressor`] — weight bundle → `.sqnn` (offline path);
+//! * [`engine`] — compressed model + AOT executables, batch execution;
+//! * [`batcher`] — dynamic batching over a dedicated executor thread;
+//! * [`metrics`] — counters and latency percentiles.
+
+pub mod batcher;
+pub mod compressor;
+pub mod engine;
+pub mod metrics;
+
+pub use batcher::{BatchPolicy, Coordinator, CoordinatorHandle};
+pub use compressor::{compress_bundle, read_bundle_meta, BundleMeta};
+pub use engine::{build_static_inputs, GraphVariant, SqnnEngine, StaticInputs};
+pub use metrics::{Metrics, MetricsSnapshot};

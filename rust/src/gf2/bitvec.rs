@@ -1,0 +1,370 @@
+//! Packed bit vectors over GF(2).
+//!
+//! The whole codec lives on GF(2): quantized bit-planes, the XOR-gate
+//! network, seeds, patches. `BitVec` packs bits into `u64` words so that the
+//! decode hot path (XOR of whole vectors, §3.1's XOR-gate network) runs at
+//! 64 bits per ALU op instead of one.
+
+/// A fixed-length bit vector packed into `u64` words (LSB-first within a word).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[{}]<", self.len)?;
+        for i in 0..self.len.min(64) {
+            write!(f, "{}", u8::from(self.get(i)))?;
+        }
+        if self.len > 64 {
+            write!(f, "…")?;
+        }
+        write!(f, ">")
+    }
+}
+
+impl BitVec {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// All-one vector of `len` bits.
+    pub fn ones(len: usize) -> Self {
+        let mut v = BitVec { words: vec![u64::MAX; len.div_ceil(64)], len };
+        v.clear_tail();
+        v
+    }
+
+    /// Build from a `bool` slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from an iterator of bools with a known length.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut v = BitVec::zeros(len);
+        for i in 0..len {
+            if f(i) {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Write bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let (w, s) = (i >> 6, i & 63);
+        if b {
+            self.words[w] |= 1 << s;
+        } else {
+            self.words[w] &= !(1 << s);
+        }
+    }
+
+    /// Flip bit `i` (the patch operation of §3.2).
+    #[inline]
+    pub fn flip(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] ^= 1 << (i & 63);
+    }
+
+    /// `self ^= other` — one XOR-gate layer applied across the vector.
+    #[inline]
+    pub fn xor_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// `self &= other`.
+    #[inline]
+    pub fn and_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// `self |= other`.
+    #[inline]
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Parity of `popcount(self & other)` — a GF(2) inner product.
+    #[inline]
+    pub fn dot(&self, other: &BitVec) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        let mut acc = 0u64;
+        for (a, b) in self.words.iter().zip(&other.words) {
+            acc ^= a & b;
+        }
+        acc.count_ones() & 1 == 1
+    }
+
+    /// Positions where `self` and `other` differ.
+    pub fn diff_positions(&self, other: &BitVec) -> Vec<usize> {
+        debug_assert_eq!(self.len, other.len);
+        let mut out = Vec::new();
+        for (wi, (a, b)) in self.words.iter().zip(&other.words).enumerate() {
+            let mut d = a ^ b;
+            while d != 0 {
+                let t = d.trailing_zeros() as usize;
+                out.push(wi * 64 + t);
+                d &= d - 1;
+            }
+        }
+        out
+    }
+
+    /// Iterator over the indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            std::iter::successors(Some(w), |&x| Some(x & x.wrapping_sub(1)).filter(|&y| y != 0))
+                .take_while(|&x| x != 0)
+                .map(move |x| wi * 64 + x.trailing_zeros() as usize)
+        })
+    }
+
+    /// Copy a sub-range `[start, start+len)` into a new vector. `len` may run
+    /// past the end; missing bits read as 0 (used when the last slice of a
+    /// flattened bit-plane is shorter than `n_out`).
+    pub fn slice_padded(&self, start: usize, len: usize) -> BitVec {
+        let mut v = BitVec::zeros(len);
+        let stop = self.len.min(start + len);
+        for i in start..stop {
+            if self.get(i) {
+                v.set(i - start, true);
+            }
+        }
+        v
+    }
+
+    /// Raw words (tail bits beyond `len` are zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Zero the whole vector in place (hot path; no allocation).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// OR `len` bits of `src` (from its bit 0) into `self` starting at
+    /// bit `offset` — whole-word splicing for the decode hot path. The
+    /// destination range is assumed to be currently zero (planes are
+    /// written exactly once).
+    pub fn splice_from(&mut self, offset: usize, src: &BitVec, len: usize) {
+        debug_assert!(len <= src.len);
+        debug_assert!(offset + len <= self.len);
+        if len == 0 {
+            return;
+        }
+        let shift = offset & 63;
+        let w0 = offset >> 6;
+        let n_src_words = len.div_ceil(64);
+        let tail_bits = len & 63;
+        for i in 0..n_src_words {
+            let mut w = src.words[i];
+            if i + 1 == n_src_words && tail_bits != 0 {
+                w &= (1u64 << tail_bits) - 1;
+            }
+            self.words[w0 + i] |= w << shift;
+            if shift != 0 {
+                let hi = w >> (64 - shift);
+                if hi != 0 {
+                    self.words[w0 + i + 1] |= hi;
+                }
+            }
+        }
+    }
+
+    /// Low `n ≤ 64` bits as a `u64`.
+    pub fn low_u64(&self) -> u64 {
+        if self.words.is_empty() {
+            0
+        } else {
+            self.words[0]
+        }
+    }
+
+    /// Build a `len ≤ 64` vector from the low bits of a word.
+    pub fn from_u64(word: u64, len: usize) -> Self {
+        assert!(len <= 64);
+        let mut v = BitVec { words: vec![word], len };
+        v.clear_tail();
+        v
+    }
+
+    /// Materialize as `Vec<bool>`.
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Zero any bits past `len` in the last word (invariant for count/dot).
+    fn clear_tail(&mut self) {
+        let rem = self.len & 63;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn set_get_flip_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(65));
+        v.flip(129);
+        assert!(!v.get(129));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn ones_has_clean_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+    }
+
+    #[test]
+    fn xor_and_or_match_boolwise() {
+        let mut rng = Rng::new(3);
+        for len in [1usize, 63, 64, 65, 200] {
+            let a = BitVec::from_fn(len, |_| rng.next_bit());
+            let b = BitVec::from_fn(len, |_| rng.next_bit());
+            let mut x = a.clone();
+            x.xor_assign(&b);
+            let mut n = a.clone();
+            n.and_assign(&b);
+            let mut o = a.clone();
+            o.or_assign(&b);
+            for i in 0..len {
+                assert_eq!(x.get(i), a.get(i) ^ b.get(i));
+                assert_eq!(n.get(i), a.get(i) & b.get(i));
+                assert_eq!(o.get(i), a.get(i) | b.get(i));
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let len = 1 + rng.next_below(150) as usize;
+            let a = BitVec::from_fn(len, |_| rng.next_bit());
+            let b = BitVec::from_fn(len, |_| rng.next_bit());
+            let naive = (0..len).filter(|&i| a.get(i) & b.get(i)).count() % 2 == 1;
+            assert_eq!(a.dot(&b), naive);
+        }
+    }
+
+    #[test]
+    fn diff_positions_matches_naive() {
+        let mut rng = Rng::new(7);
+        let a = BitVec::from_fn(300, |_| rng.next_bit());
+        let b = BitVec::from_fn(300, |_| rng.next_bit());
+        let naive: Vec<usize> = (0..300).filter(|&i| a.get(i) != b.get(i)).collect();
+        assert_eq!(a.diff_positions(&b), naive);
+    }
+
+    #[test]
+    fn iter_ones_matches_naive() {
+        let mut rng = Rng::new(9);
+        let v = BitVec::from_fn(200, |_| rng.next_bool(0.3));
+        let naive: Vec<usize> = (0..200).filter(|&i| v.get(i)).collect();
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), naive);
+    }
+
+    #[test]
+    fn slice_padded_reads_zero_past_end() {
+        let v = BitVec::ones(10);
+        let s = v.slice_padded(8, 8);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.count_ones(), 2); // bits 8,9 only
+        assert!(s.get(0) && s.get(1) && !s.get(2));
+    }
+
+    #[test]
+    fn splice_from_matches_bitwise() {
+        let mut rng = Rng::new(21);
+        for &(offset, len, srclen) in
+            &[(0usize, 64usize, 64usize), (5, 60, 64), (63, 130, 200), (64, 1, 10), (7, 0, 8), (100, 392, 392)]
+        {
+            let src = BitVec::from_fn(srclen, |_| rng.next_bit());
+            let mut dst = BitVec::zeros(offset + len + 3);
+            dst.splice_from(offset, &src, len);
+            for i in 0..dst.len() {
+                let expect = i >= offset && i < offset + len && src.get(i - offset);
+                assert_eq!(dst.get(i), expect, "offset={offset} len={len} bit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn clear_zeroes_everything() {
+        let mut v = BitVec::ones(130);
+        v.clear();
+        assert_eq!(v.count_ones(), 0);
+        assert_eq!(v.len(), 130);
+    }
+
+    #[test]
+    fn u64_roundtrip() {
+        let v = BitVec::from_u64(0b1011, 4);
+        assert_eq!(v.low_u64(), 0b1011);
+        assert_eq!(v.len(), 4);
+        let w = BitVec::from_u64(u64::MAX, 10);
+        assert_eq!(w.count_ones(), 10);
+    }
+}

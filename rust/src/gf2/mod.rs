@@ -1,0 +1,12 @@
+//! GF(2) linear-algebra substrate.
+//!
+//! Everything the XOR-encryption codec needs from linear algebra over the
+//! two-element Galois field: packed bit vectors ([`BitVec`]), and the
+//! incremental row-echelon solver ([`IncrementalSolver`]) that Algorithm 1
+//! drives one *care* bit at a time.
+
+pub mod bitvec;
+pub mod solver;
+
+pub use bitvec::BitVec;
+pub use solver::{AddOutcome, IncrementalSolver, MAX_VARS};

@@ -1,0 +1,239 @@
+//! Incremental GF(2) linear-system solver — the heart of Algorithm 1.
+//!
+//! The paper's patch-searching algorithm appends one equation per *care* bit
+//! to the system `M̂⊕ w^c = w^q_{i1..ik}` and keeps it in reduced row-echelon
+//! form (`make_rref` in Algorithm 1) so that solvability of the enlarged
+//! system can be checked in `O(n_in)` word operations. We exploit the paper's
+//! own practical bound (`n_in` below ~30, ≤ 60 in Fig 8) to store each row as
+//! a single `u64` of coefficients plus a right-hand-side bit, making one
+//! `try_add_equation` a handful of XORs.
+
+/// Maximum number of unknowns (`n_in`) supported by the solver.
+pub const MAX_VARS: usize = 64;
+
+/// An incremental row-echelon GF(2) system over ≤ 64 unknowns.
+///
+/// Rows are reduced against current pivots on insertion. An insertion that
+/// reduces to `0 = 1` is rejected *without mutating the system* — exactly the
+/// "remove the last row" step of Algorithm 1 (the corresponding care bit then
+/// becomes a patch).
+#[derive(Clone, Debug)]
+pub struct IncrementalSolver {
+    n_vars: usize,
+    /// `pivots[c]` holds the reduced row whose lowest set coefficient is `c`.
+    pivots: Vec<Option<(u64, bool)>>,
+    rank: usize,
+}
+
+/// Result of attempting to add one equation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AddOutcome {
+    /// Equation added; rank grew by one.
+    Added,
+    /// Equation already implied by the system (consistent, nothing stored).
+    Redundant,
+    /// Equation contradicts the system (`0 = 1` after reduction); not stored.
+    Inconsistent,
+}
+
+impl IncrementalSolver {
+    /// Empty system over `n_vars ≤ 64` unknowns.
+    pub fn new(n_vars: usize) -> Self {
+        assert!(
+            (1..=MAX_VARS).contains(&n_vars),
+            "n_in must be in 1..=64, got {n_vars}"
+        );
+        IncrementalSolver { n_vars, pivots: vec![None; n_vars], rank: 0 }
+    }
+
+    /// Number of unknowns.
+    pub fn n_vars(&self) -> usize {
+        self.n_vars
+    }
+
+    /// Current rank (number of independent equations stored).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// True once every unknown is pinned (solution unique).
+    pub fn is_full_rank(&self) -> bool {
+        self.rank == self.n_vars
+    }
+
+    /// Try to add `coeffs · x = rhs`. See [`AddOutcome`].
+    pub fn try_add_equation(&mut self, mut coeffs: u64, mut rhs: bool) -> AddOutcome {
+        if self.n_vars < 64 {
+            debug_assert_eq!(coeffs >> self.n_vars, 0, "coefficients beyond n_vars");
+        }
+        while coeffs != 0 {
+            let c = coeffs.trailing_zeros() as usize;
+            match self.pivots[c] {
+                Some((pc, pr)) => {
+                    coeffs ^= pc;
+                    rhs ^= pr;
+                }
+                None => {
+                    self.pivots[c] = Some((coeffs, rhs));
+                    self.rank += 1;
+                    return AddOutcome::Added;
+                }
+            }
+        }
+        if rhs {
+            AddOutcome::Inconsistent
+        } else {
+            AddOutcome::Redundant
+        }
+    }
+
+    /// Check whether an equation would be consistent, without mutating.
+    pub fn is_consistent(&self, mut coeffs: u64, mut rhs: bool) -> bool {
+        while coeffs != 0 {
+            let c = coeffs.trailing_zeros() as usize;
+            match self.pivots[c] {
+                Some((pc, pr)) => {
+                    coeffs ^= pc;
+                    rhs ^= pr;
+                }
+                None => return true,
+            }
+        }
+        !rhs
+    }
+
+    /// Solve the current system. Free variables are assigned from
+    /// `free_fill` (bit `c` of `free_fill` is used if variable `c` is free);
+    /// pass 0 for the canonical solution. Always succeeds: the invariant is
+    /// that only consistent equations are ever stored.
+    pub fn solve(&self, free_fill: u64) -> u64 {
+        let mut x: u64 = 0;
+        // A pivot row at column c has its lowest set bit at c, so all its
+        // other coefficients refer to higher-numbered variables: sweep from
+        // the top down and every dependency is already decided.
+        for c in (0..self.n_vars).rev() {
+            match self.pivots[c] {
+                Some((coeffs, rhs)) => {
+                    let others = coeffs & !(1u64 << c);
+                    let val = rhs ^ (((others & x).count_ones() & 1) == 1);
+                    if val {
+                        x |= 1 << c;
+                    }
+                }
+                None => {
+                    if (free_fill >> c) & 1 == 1 {
+                        x |= 1 << c;
+                    }
+                }
+            }
+        }
+        x
+    }
+
+    /// Evaluate `coeffs · x` for a candidate solution (test helper).
+    pub fn eval(coeffs: u64, x: u64) -> bool {
+        (coeffs & x).count_ones() & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn simple_2x2() {
+        // x0 ^ x1 = 1 ; x1 = 1  =>  x0 = 0, x1 = 1
+        let mut s = IncrementalSolver::new(2);
+        assert_eq!(s.try_add_equation(0b11, true), AddOutcome::Added);
+        assert_eq!(s.try_add_equation(0b10, true), AddOutcome::Added);
+        let x = s.solve(0);
+        assert_eq!(x, 0b10);
+        assert!(s.is_full_rank());
+    }
+
+    #[test]
+    fn detects_redundant_and_inconsistent() {
+        let mut s = IncrementalSolver::new(3);
+        assert_eq!(s.try_add_equation(0b011, false), AddOutcome::Added);
+        assert_eq!(s.try_add_equation(0b110, true), AddOutcome::Added);
+        // (0b011) ^ (0b110) = 0b101, rhs false^true = true — implied row:
+        assert_eq!(s.try_add_equation(0b101, true), AddOutcome::Redundant);
+        // same coefficients, contradictory rhs:
+        assert_eq!(s.try_add_equation(0b101, false), AddOutcome::Inconsistent);
+        // inconsistency must not have mutated the system:
+        assert_eq!(s.rank(), 2);
+        assert_eq!(s.try_add_equation(0b101, true), AddOutcome::Redundant);
+    }
+
+    #[test]
+    fn zero_row_handling() {
+        let mut s = IncrementalSolver::new(4);
+        assert_eq!(s.try_add_equation(0, false), AddOutcome::Redundant);
+        assert_eq!(s.try_add_equation(0, true), AddOutcome::Inconsistent);
+    }
+
+    #[test]
+    fn solution_satisfies_all_added_equations_random() {
+        // Property test: for random systems, every equation the solver
+        // accepted is satisfied by solve(), for any free-variable fill.
+        let mut rng = Rng::new(123);
+        for trial in 0..200 {
+            let n = 1 + (trial % 60);
+            let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+            let mut s = IncrementalSolver::new(n);
+            let mut accepted: Vec<(u64, bool)> = Vec::new();
+            for _ in 0..(2 * n) {
+                let coeffs = rng.next_u64() & mask;
+                let rhs = rng.next_bit();
+                if s.try_add_equation(coeffs, rhs) != AddOutcome::Inconsistent {
+                    accepted.push((coeffs, rhs));
+                }
+            }
+            for fill in [0u64, u64::MAX & mask, rng.next_u64() & mask] {
+                let x = s.solve(fill);
+                for &(c, r) in &accepted {
+                    assert_eq!(IncrementalSolver::eval(c, x), r, "n={n} c={c:b} x={x:b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inconsistent_rows_leave_solution_valid() {
+        // Interleave contradictions; they must never corrupt the system.
+        let mut rng = Rng::new(321);
+        let n = 20;
+        let mask = (1u64 << n) - 1;
+        let mut s = IncrementalSolver::new(n);
+        let mut accepted = Vec::new();
+        // Ground-truth solution; derive consistent rows from it, then flip
+        // rhs on some rows to force contradictions once rank is high.
+        let truth = rng.next_u64() & mask;
+        for i in 0..200 {
+            let coeffs = rng.next_u64() & mask;
+            let mut rhs = IncrementalSolver::eval(coeffs, truth);
+            if i % 3 == 0 {
+                rhs = !rhs; // adversarial row
+            }
+            if s.try_add_equation(coeffs, rhs) != AddOutcome::Inconsistent {
+                accepted.push((coeffs, rhs));
+            }
+        }
+        let x = s.solve(0);
+        for &(c, r) in &accepted {
+            assert_eq!(IncrementalSolver::eval(c, x), r);
+        }
+    }
+
+    #[test]
+    fn rank_is_bounded_by_vars() {
+        let mut rng = Rng::new(55);
+        let mut s = IncrementalSolver::new(10);
+        for _ in 0..1000 {
+            let _ = s.try_add_equation(rng.next_u64() & 0x3FF, rng.next_bit());
+        }
+        assert_eq!(s.rank(), 10);
+        assert!(s.is_full_rank());
+    }
+}

@@ -1,0 +1,284 @@
+//! Minimal JSON reader/writer (the offline image has no serde).
+//!
+//! Covers the subset the system exchanges: `meta.json` from the Python
+//! pipeline (objects of numbers/strings/arrays/bools) and bench-result
+//! emission. Not a general-purpose parser; strict enough for our inputs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Required numeric field (error message includes the key).
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("meta missing numeric field '{key}'"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.req_f64(key)? as usize)
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(s: &str) -> Result<Json> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        bail!("trailing characters at {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of json"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            let k = self.string()?;
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or_else(|| anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or_else(|| anyhow!("bad escape"))?;
+                    self.i += 1;
+                    s.push(match e {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        other => bail!("unsupported escape \\{}", other as char),
+                    });
+                }
+                _ => s.push(c as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let tok = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(tok.parse::<f64>().map_err(|_| anyhow!("bad number '{tok}'"))?))
+    }
+}
+
+/// Serialize (stable key order via BTreeMap).
+pub fn to_string(v: &Json) -> String {
+    match v {
+        Json::Null => "null".into(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(x) => {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                format!("{}", *x as i64)
+            } else {
+                format!("{x}")
+            }
+        }
+        Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Json::Arr(a) => {
+            format!("[{}]", a.iter().map(to_string).collect::<Vec<_>>().join(","))
+        }
+        Json::Obj(m) => format!(
+            "{{{}}}",
+            m.iter()
+                .map(|(k, v)| format!("\"{k}\":{}", to_string(v)))
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta_json_shape() {
+        let doc = r#"{
+  "input_dim": 784,
+  "acc_sqnn": 0.9961,
+  "batch_sizes": [1, 8, 32],
+  "name": "sqnn",
+  "flag": true
+}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.req_usize("input_dim").unwrap(), 784);
+        assert!((v.req_f64("acc_sqnn").unwrap() - 0.9961).abs() < 1e-9);
+        let bs: Vec<usize> =
+            v.get("batch_sizes").unwrap().as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect();
+        assert_eq!(bs, vec![1, 8, 32]);
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "sqnn");
+        assert_eq!(v.get("flag").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let doc = r#"{"a":[1,2.5,"x"],"b":{"c":null,"d":false}}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(to_string(&v), doc);
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let v = parse("[-1.5e3, 2E-2, -7]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert_eq!(a[0].as_f64().unwrap(), -1500.0);
+        assert!((a[1].as_f64().unwrap() - 0.02).abs() < 1e-12);
+        assert_eq!(a[2].as_f64().unwrap(), -7.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{'single': 1}").is_err());
+        assert!(parse("123 extra").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\n\"b\"""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\n\"b\"");
+    }
+}

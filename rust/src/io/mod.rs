@@ -1,0 +1,12 @@
+//! I/O substrate: `.npy` interchange with the Python build path, the
+//! `.sqnn` compressed-model container, a minimal JSON codec for
+//! `meta.json`/results, and the byte-level reader/writer they share.
+
+pub mod bytes;
+pub mod json;
+pub mod npy;
+pub mod sqnn_file;
+
+pub use json::Json;
+pub use npy::{read_npy, write_npy, NpyArray, NpyData};
+pub use sqnn_file::{CompressedLayer, DenseLayer, ModelMeta, SqnnModel};

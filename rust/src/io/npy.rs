@@ -1,0 +1,272 @@
+//! Minimal `.npy` (NumPy array format v1.0) reader/writer.
+//!
+//! The build-time Python pipeline exports weight bundles as `.npy`; the
+//! coordinator reads them here. Supports the three dtypes the pipeline
+//! uses: `<f4` (f32), `<i4` (i32), `|u1` (u8), C-order only.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// An n-dimensional array loaded from / destined for a `.npy` file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl NpyArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data: NpyData::F32(data) }
+    }
+
+    pub fn u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data: NpyData::U8(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data: NpyData::I32(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            other => bail!("expected f32 npy, found {other:?}"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v),
+            other => bail!("expected i32 npy, found {other:?}"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            NpyData::U8(v) => Ok(v),
+            other => bail!("expected u8 npy, found {other:?}"),
+        }
+    }
+
+    fn descr(&self) -> &'static str {
+        match self.data {
+            NpyData::F32(_) => "<f4",
+            NpyData::I32(_) => "<i4",
+            NpyData::U8(_) => "|u1",
+        }
+    }
+}
+
+/// Read a `.npy` file.
+pub fn read_npy(path: impl AsRef<Path>) -> Result<NpyArray> {
+    let path = path.as_ref();
+    let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("{}: not an npy file", path.display());
+    }
+    let (major, _minor) = (magic[6], magic[7]);
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+
+    let descr = extract_quoted(&header, "descr")?;
+    let fortran = header.contains("'fortran_order': True");
+    if fortran {
+        bail!("fortran-order npy not supported");
+    }
+    let shape = parse_shape(&header)?;
+    let count: usize = shape.iter().product();
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data = match descr.as_str() {
+        "<f4" => {
+            expect_bytes(&raw, count * 4, path)?;
+            NpyData::F32(
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )
+        }
+        "<i4" => {
+            expect_bytes(&raw, count * 4, path)?;
+            NpyData::I32(
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )
+        }
+        "|u1" | "<u1" | "|b1" => {
+            expect_bytes(&raw, count, path)?;
+            NpyData::U8(raw)
+        }
+        other => bail!("unsupported npy dtype {other}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+/// Write a `.npy` (format v1.0) file.
+pub fn write_npy(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
+    let path = path.as_ref();
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        arr.descr(),
+        shape_str
+    );
+    // Pad so that data starts at a multiple of 64 bytes.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    match &arr.data {
+        NpyData::F32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::I32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::U8(v) => f.write_all(v)?,
+    }
+    Ok(())
+}
+
+fn expect_bytes(raw: &[u8], want: usize, path: &Path) -> Result<()> {
+    if raw.len() < want {
+        bail!("{}: truncated npy: {} < {want} bytes", path.display(), raw.len());
+    }
+    Ok(())
+}
+
+fn extract_quoted(header: &str, key: &str) -> Result<String> {
+    let kq = format!("'{key}':");
+    let at = header.find(&kq).ok_or_else(|| anyhow!("npy header missing {key}"))?;
+    let rest = &header[at + kq.len()..];
+    let start = rest.find('\'').ok_or_else(|| anyhow!("bad npy header"))? + 1;
+    let end = rest[start..].find('\'').ok_or_else(|| anyhow!("bad npy header"))? + start;
+    Ok(rest[start..end].to_string())
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let at = header.find("'shape':").ok_or_else(|| anyhow!("npy header missing shape"))?;
+    let rest = &header[at..];
+    let open = rest.find('(').ok_or_else(|| anyhow!("bad shape"))?;
+    let close = rest.find(')').ok_or_else(|| anyhow!("bad shape"))?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if !tok.is_empty() {
+            shape.push(tok.parse::<usize>().with_context(|| format!("bad dim {tok}"))?);
+        }
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sqnn_npy_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let arr = NpyArray::f32(vec![2, 3], vec![1.0, 2.5, -3.0, 0.0, 1e-7, 9.9]);
+        let p = tmp("a.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+    }
+
+    #[test]
+    fn u8_roundtrip_3d() {
+        let arr = NpyArray::u8(vec![2, 2, 2], vec![0, 1, 1, 0, 1, 1, 0, 0]);
+        let p = tmp("b.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+    }
+
+    #[test]
+    fn i32_roundtrip_1d() {
+        let arr = NpyArray::i32(vec![4], vec![-1, 0, 7, i32::MAX]);
+        let p = tmp("c.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+    }
+
+    #[test]
+    fn python_compat_header_parses() {
+        // A header exactly as numpy 2.x writes it.
+        let hdr = "{'descr': '<f4', 'fortran_order': False, 'shape': (3,), }";
+        assert_eq!(extract_quoted(hdr, "descr").unwrap(), "<f4");
+        assert_eq!(parse_shape(hdr).unwrap(), vec![3]);
+        let hdr2 = "{'descr': '|u1', 'fortran_order': False, 'shape': (1, 500, 784), }";
+        assert_eq!(parse_shape(hdr2).unwrap(), vec![1, 500, 784]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.npy");
+        std::fs::write(&p, b"not an npy").unwrap();
+        assert!(read_npy(&p).is_err());
+    }
+
+    #[test]
+    fn one_element_array() {
+        let p = tmp("d.npy");
+        let arr = NpyArray::f32(vec![1], vec![5.0]);
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap().as_f32().unwrap(), &[5.0]);
+    }
+}

@@ -1,0 +1,404 @@
+//! The `.sqnn` container: an XOR-compressed SQNN model on disk.
+//!
+//! Layout (all little-endian, see `io::bytes`):
+//! magic `SQNN1\0`, meta block, one compressed layer (FC1: encrypted
+//! bit-planes + alphas + packed pruning mask + bias), then the dense tail
+//! layers. This is the artifact `sqnn compress` produces and the
+//! coordinator serves from.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gf2::BitVec;
+use crate::xorenc::{CompressionStats, EncryptConfig, EncryptedPlane, XorEncoder};
+
+use super::bytes::{ByteReader, ByteWriter};
+
+const MAGIC: &[u8; 6] = b"SQNN1\0";
+
+/// Model-level metadata carried in the container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub input_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub num_classes: usize,
+    pub fc1_sparsity: f64,
+    pub fc1_nq: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub xor_seed: u64,
+}
+
+/// The compressed FC1 layer.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub rows: usize,
+    pub cols: usize,
+    /// One encrypted plane per quantization bit.
+    pub planes: Vec<EncryptedPlane>,
+    pub alphas: Vec<f32>,
+    /// Packed pruning mask (rows·cols bits, row-major).
+    pub mask: BitVec,
+    pub bias: Vec<f32>,
+}
+
+/// A dense (uncompressed) layer.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// A full model in the `.sqnn` format.
+#[derive(Clone, Debug)]
+pub struct SqnnModel {
+    pub meta: ModelMeta,
+    pub fc1: CompressedLayer,
+    pub dense: Vec<DenseLayer>,
+}
+
+impl CompressedLayer {
+    /// Total compressed bits of the quantization payload (Eq. 2 over all
+    /// planes) — the "(B)" component of Fig 10.
+    pub fn quant_stats(&self) -> CompressionStats {
+        let mut acc = CompressionStats {
+            code_bits: 0,
+            npatch_bits: 0,
+            dpatch_bits: 0,
+            total_bits: 0,
+            original_bits: 0,
+            total_patches: 0,
+            max_npatch: 0,
+        };
+        for p in &self.planes {
+            let s = p.stats();
+            acc.code_bits += s.code_bits;
+            acc.npatch_bits += s.npatch_bits;
+            acc.dpatch_bits += s.dpatch_bits;
+            acc.total_bits += s.total_bits;
+            acc.original_bits += s.original_bits;
+            acc.total_patches += s.total_patches;
+            acc.max_npatch = acc.max_npatch.max(s.max_npatch);
+        }
+        acc
+    }
+
+    /// The encoder this layer was produced with (for decode).
+    pub fn encoder(&self) -> XorEncoder {
+        let p = &self.planes[0];
+        XorEncoder::new(EncryptConfig {
+            n_in: p.n_in,
+            n_out: p.n_out,
+            seed: p.seed,
+            block_slices: p.block_slices,
+        })
+    }
+
+    /// Decode every plane back to bits (lossless on care positions).
+    pub fn decode_planes(&self) -> Vec<BitVec> {
+        let enc = self.encoder();
+        self.planes.iter().map(|p| enc.decrypt_plane(p)).collect()
+    }
+
+    /// Reconstruct the dense f32 weight matrix (pruned → 0).
+    pub fn reconstruct_dense(&self) -> Vec<f32> {
+        let bits = self.decode_planes();
+        let n = self.rows * self.cols;
+        let mut w = vec![0.0f32; n];
+        for (i, plane) in bits.iter().enumerate() {
+            let a = self.alphas[i];
+            for j in 0..n {
+                if self.mask.get(j) {
+                    w[j] += if plane.get(j) { a } else { -a };
+                }
+            }
+        }
+        for j in 0..n {
+            if !self.mask.get(j) {
+                w[j] = 0.0;
+            }
+        }
+        w
+    }
+}
+
+impl SqnnModel {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_bytes(MAGIC);
+        // meta
+        w.put_u64(self.meta.input_dim as u64);
+        w.put_u64(self.meta.hidden1 as u64);
+        w.put_u64(self.meta.hidden2 as u64);
+        w.put_u64(self.meta.num_classes as u64);
+        w.put_u64(self.meta.fc1_sparsity.to_bits());
+        w.put_u64(self.meta.fc1_nq as u64);
+        w.put_u64(self.meta.n_in as u64);
+        w.put_u64(self.meta.n_out as u64);
+        w.put_u64(self.meta.xor_seed);
+        // fc1
+        w.put_u64(self.fc1.rows as u64);
+        w.put_u64(self.fc1.cols as u64);
+        w.put_u64(self.fc1.planes.len() as u64);
+        for p in &self.fc1.planes {
+            write_plane(&mut w, p);
+        }
+        w.put_f32s(&self.fc1.alphas);
+        write_bitvec(&mut w, &self.fc1.mask);
+        w.put_f32s(&self.fc1.bias);
+        // dense
+        w.put_u64(self.dense.len() as u64);
+        for d in &self.dense {
+            w.put_str(&d.name);
+            w.put_u64(d.rows as u64);
+            w.put_u64(d.cols as u64);
+            w.put_f32s(&d.w);
+            w.put_f32s(&d.b);
+        }
+        w.into_inner()
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        if r.get_bytes(6)? != MAGIC {
+            bail!("not a .sqnn file (bad magic)");
+        }
+        let meta = ModelMeta {
+            input_dim: r.get_u64()? as usize,
+            hidden1: r.get_u64()? as usize,
+            hidden2: r.get_u64()? as usize,
+            num_classes: r.get_u64()? as usize,
+            fc1_sparsity: f64::from_bits(r.get_u64()?),
+            fc1_nq: r.get_u64()? as usize,
+            n_in: r.get_u64()? as usize,
+            n_out: r.get_u64()? as usize,
+            xor_seed: r.get_u64()?,
+        };
+        let rows = r.get_u64()? as usize;
+        let cols = r.get_u64()? as usize;
+        let n_planes = r.get_u64()? as usize;
+        if n_planes != meta.fc1_nq {
+            bail!("plane count {n_planes} != nq {}", meta.fc1_nq);
+        }
+        let mut planes = Vec::with_capacity(n_planes);
+        for _ in 0..n_planes {
+            planes.push(read_plane(&mut r)?);
+        }
+        let alphas = r.get_f32s()?;
+        let mask = read_bitvec(&mut r)?;
+        if mask.len() != rows * cols {
+            bail!("mask length {} != {rows}x{cols}", mask.len());
+        }
+        let bias = r.get_f32s()?;
+        let mut dense = Vec::new();
+        let nd = r.get_u64()? as usize;
+        for _ in 0..nd {
+            let name = r.get_str()?;
+            let rows = r.get_u64()? as usize;
+            let cols = r.get_u64()? as usize;
+            let w = r.get_f32s()?;
+            let b = r.get_f32s()?;
+            if w.len() != rows * cols || b.len() != rows {
+                bail!("dense layer {name}: inconsistent sizes");
+            }
+            dense.push(DenseLayer { name, rows, cols, w, b });
+        }
+        Ok(SqnnModel { meta, fc1: CompressedLayer { rows, cols, planes, alphas, mask, bias }, dense })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
+            .with_context(|| format!("write {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::from_bytes(&buf)
+    }
+
+    /// Total bits/weight of the FC1 layer under the paper's Fig 10
+    /// accounting: (A) index bits (here: packed mask accounted as the
+    /// factorized-rank equivalent is computed separately) + (B) quant bits.
+    pub fn fc1_bits_per_weight_quant(&self) -> f64 {
+        let st = self.fc1.quant_stats();
+        st.total_bits as f64 / (self.fc1.rows * self.fc1.cols) as f64
+    }
+}
+
+fn write_bitvec(w: &mut ByteWriter, v: &BitVec) {
+    w.put_u64(v.len() as u64);
+    w.put_u64s(v.words());
+}
+
+fn read_bitvec(r: &mut ByteReader) -> Result<BitVec> {
+    let len = r.get_u64()? as usize;
+    let words = r.get_u64s()?;
+    if words.len() != len.div_ceil(64) {
+        bail!("bitvec word count mismatch");
+    }
+    let mut v = BitVec::zeros(len);
+    for i in 0..len {
+        if (words[i >> 6] >> (i & 63)) & 1 == 1 {
+            v.set(i, true);
+        }
+    }
+    Ok(v)
+}
+
+fn write_plane(w: &mut ByteWriter, p: &EncryptedPlane) {
+    w.put_u64(p.n_in as u64);
+    w.put_u64(p.n_out as u64);
+    w.put_u64(p.seed);
+    w.put_u64(p.plane_len as u64);
+    w.put_u64(p.block_slices as u64);
+    w.put_u64s(&p.codes);
+    w.put_u64(p.patches.len() as u64);
+    for d in &p.patches {
+        w.put_u32(d.len() as u32);
+        for &pos in d {
+            w.put_u32(pos);
+        }
+    }
+}
+
+fn read_plane(r: &mut ByteReader) -> Result<EncryptedPlane> {
+    let n_in = r.get_u64()? as usize;
+    let n_out = r.get_u64()? as usize;
+    let seed = r.get_u64()?;
+    let plane_len = r.get_u64()? as usize;
+    let block_slices = r.get_u64()? as usize;
+    let codes = r.get_u64s()?;
+    let l = r.get_u64()? as usize;
+    if l != codes.len() {
+        bail!("patch list count {l} != code count {}", codes.len());
+    }
+    let mut patches = Vec::with_capacity(l);
+    for _ in 0..l {
+        let k = r.get_u32()? as usize;
+        if k * 4 > r.remaining() {
+            bail!("corrupt patch count {k}");
+        }
+        let mut d = Vec::with_capacity(k);
+        for _ in 0..k {
+            let pos = r.get_u32()?;
+            if pos as usize >= n_out {
+                bail!("patch position {pos} out of range (n_out={n_out})");
+            }
+            d.push(pos);
+        }
+        patches.push(d);
+    }
+    Ok(EncryptedPlane { n_in, n_out, seed, plane_len, codes, patches, block_slices })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::xorenc::BitPlane;
+
+    fn toy_model() -> SqnnModel {
+        let mut rng = Rng::new(5);
+        let (rows, cols) = (8, 64);
+        let enc = XorEncoder::new(EncryptConfig { n_in: 10, n_out: 32, seed: 77, block_slices: 0 });
+        let plane = BitPlane::synthetic(rows * cols, 0.9, &mut rng);
+        let ep = enc.encrypt_plane(&plane);
+        SqnnModel {
+            meta: ModelMeta {
+                input_dim: cols,
+                hidden1: rows,
+                hidden2: 4,
+                num_classes: 2,
+                fc1_sparsity: 0.9,
+                fc1_nq: 1,
+                n_in: 10,
+                n_out: 32,
+                xor_seed: 77,
+            },
+            fc1: CompressedLayer {
+                rows,
+                cols,
+                planes: vec![ep],
+                alphas: vec![0.5],
+                mask: plane.care.clone(),
+                bias: vec![0.0; rows],
+            },
+            dense: vec![DenseLayer {
+                name: "w2".into(),
+                rows: 4,
+                cols: rows,
+                w: (0..32).map(|i| i as f32).collect(),
+                b: vec![1.0; 4],
+            }],
+        }
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let m = toy_model();
+        let bytes = m.to_bytes();
+        let back = SqnnModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.meta, m.meta);
+        assert_eq!(back.fc1.planes[0].codes, m.fc1.planes[0].codes);
+        assert_eq!(back.fc1.planes[0].patches, m.fc1.planes[0].patches);
+        assert_eq!(back.dense[0].w, m.dense[0].w);
+        assert_eq!(back.fc1.mask.to_bools(), m.fc1.mask.to_bools());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = toy_model();
+        let dir = std::env::temp_dir().join("sqnn_file_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.sqnn");
+        m.save(&p).unwrap();
+        let back = SqnnModel::load(&p).unwrap();
+        assert_eq!(back.meta, m.meta);
+    }
+
+    #[test]
+    fn reconstruct_dense_respects_mask_and_alphas() {
+        let m = toy_model();
+        let w = m.fc1.reconstruct_dense();
+        for j in 0..w.len() {
+            if m.fc1.mask.get(j) {
+                assert!((w[j].abs() - 0.5).abs() < 1e-6);
+            } else {
+                assert_eq!(w[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut bytes = toy_model().to_bytes();
+        bytes[0] = b'X';
+        assert!(SqnnModel::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let bytes = toy_model().to_bytes();
+        for cut in [7usize, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(SqnnModel::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_patch_position_rejected() {
+        let m = toy_model();
+        let mut bad = m.clone();
+        // Force an out-of-range patch position and re-serialize.
+        bad.fc1.planes[0].patches[0] = vec![9999];
+        let bytes = bad.to_bytes();
+        assert!(SqnnModel::from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! # sqnn-xor — Structured Compression by Weight Encryption
+//!
+//! A full-system reproduction of *"Structured Compression by Weight
+//! Encryption for Unstructured Pruning and Quantization"* (Kwon, Lee et al.,
+//! 2019): a lossless compressed representation for sparse quantized neural
+//! networks in which pruned+quantized weight bit-planes are *encrypted* into
+//! short seeds for a fixed XOR-gate network, decoded at a fixed rate with
+//! perfect load balance, plus the substrates the paper measures against
+//! (CSR, Viterbi encoding), the pruning/quantization pipeline that produces
+//! SQNNs, a cycle-level decoder simulator, and a Rust inference coordinator
+//! that serves compressed models through AOT-compiled XLA executables.
+//!
+//! See `DESIGN.md` for the module ↔ paper-section map and `EXPERIMENTS.md`
+//! for reproduced tables/figures.
+
+pub mod benchutil;
+pub mod coordinator;
+pub mod gf2;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod io;
+pub mod models;
+pub mod prune;
+pub mod simulator;
+pub mod sparse;
+pub mod viterbi;
+pub mod quant;
+pub mod xorenc;

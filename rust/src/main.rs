@@ -1,0 +1,218 @@
+//! `sqnn` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   compress  --artifacts DIR --out MODEL.sqnn     bundle → .sqnn
+//!   verify    --artifacts DIR --model MODEL.sqnn   lossless + accuracy check
+//!   info      --model MODEL.sqnn                   container stats
+//!   serve     --artifacts DIR --model MODEL.sqnn [--port P]
+//!   demo      --artifacts DIR                      compress + serve in-process
+//!
+//! (Hand-rolled argument parsing: the offline image has no clap.)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use sqnn_xor::coordinator::{compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, SqnnEngine};
+use sqnn_xor::io::npy::read_npy;
+use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::runtime::Runtime;
+use sqnn_xor::server::Server;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&argv[argv.len().min(1)..]);
+    match cmd {
+        "compress" => cmd_compress(&flags),
+        "verify" => cmd_verify(&flags),
+        "info" => cmd_info(&flags),
+        "serve" => cmd_serve(&flags),
+        "demo" => cmd_demo(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "sqnn — structured compression by weight encryption (XOR-gate networks)\n\
+         \n\
+         usage: sqnn <command> [flags]\n\
+         \n\
+         commands:\n\
+           compress  --artifacts DIR --out MODEL.sqnn   compress the python weight bundle\n\
+           verify    --artifacts DIR --model M.sqnn     lossless + served-accuracy check\n\
+           info      --model M.sqnn                     container statistics\n\
+           serve     --artifacts DIR --model M.sqnn --port 7433   TCP inference server\n\
+           demo      --artifacts DIR                    compress + serve a demo batch"
+    );
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = flag(flags, "artifacts", "artifacts");
+    let out = flag(flags, "out", "model.sqnn");
+    let model = compress_bundle(artifacts)?;
+    let st = model.fc1.quant_stats();
+    model.save(out)?;
+    println!("wrote {out}");
+    println!(
+        "  fc1: {}x{}  S={:.2}  nq={}  (n_in={}, n_out={})",
+        model.fc1.rows,
+        model.fc1.cols,
+        model.meta.fc1_sparsity,
+        model.meta.fc1_nq,
+        model.meta.n_in,
+        model.meta.n_out
+    );
+    println!(
+        "  quant payload: {:.3} bits/weight (codes {:.3} + npatch {:.3} + dpatch {:.3}); ratio {:.2}x",
+        st.bits_per_weight(),
+        st.code_bits as f64 / st.original_bits as f64,
+        st.npatch_bits as f64 / st.original_bits as f64,
+        st.dpatch_bits as f64 / st.original_bits as f64,
+        st.ratio()
+    );
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let model = SqnnModel::load(flag(flags, "model", "model.sqnn"))?;
+    let st = model.fc1.quant_stats();
+    println!("meta: {:?}", model.meta);
+    println!("fc1 slices: {}", model.fc1.planes[0].num_slices());
+    println!("quant stats: {st:?}");
+    println!("bits/weight (quant): {:.3}", st.bits_per_weight());
+    for d in &model.dense {
+        println!("dense {}: {}x{}", d.name, d.rows, d.cols);
+    }
+    Ok(())
+}
+
+fn load_eval_set(artifacts: &str) -> Result<(Vec<Vec<f32>>, Vec<i32>)> {
+    let x = read_npy(format!("{artifacts}/weights/x_test.npy"))?;
+    let y = read_npy(format!("{artifacts}/weights/y_test.npy"))?;
+    let dim = x.shape[1];
+    let xs = x.as_f32()?.chunks(dim).map(|c| c.to_vec()).collect();
+    Ok((xs, y.as_i32()?.to_vec()))
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = flag(flags, "artifacts", "artifacts").to_string();
+    let model_path = flag(flags, "model", "model.sqnn").to_string();
+    let meta = read_bundle_meta(&artifacts)?;
+    let model = SqnnModel::load(&model_path)?;
+
+    // 1. lossless: decoded planes == exported bit-planes on care positions
+    let bits_arr = read_npy(format!("{artifacts}/weights/fc1_bits.npy"))?;
+    let bits = bits_arr.as_u8()?;
+    let decoded = model.fc1.decode_planes();
+    let plane_len = model.fc1.rows * model.fc1.cols;
+    let mut mismatches = 0usize;
+    for q in 0..model.meta.fc1_nq {
+        for j in 0..plane_len {
+            if model.fc1.mask.get(j) && decoded[q].get(j) != (bits[q * plane_len + j] != 0) {
+                mismatches += 1;
+            }
+        }
+    }
+    println!("lossless check: {mismatches} care-bit mismatches");
+    if mismatches != 0 {
+        bail!("compression is NOT lossless");
+    }
+
+    // 2. served accuracy == pipeline accuracy
+    let (xs, ys) = load_eval_set(&artifacts)?;
+    let runtime = Runtime::cpu()?;
+    let engine = SqnnEngine::load(&runtime, model, &artifacts, &meta.batch_sizes)?;
+    let preds = engine.classify(&xs)?;
+    let correct = preds.iter().zip(&ys).filter(|(p, y)| **p == **y as usize).count();
+    let acc = correct as f64 / ys.len() as f64;
+    println!(
+        "served accuracy: {acc:.4} over {} examples (pipeline reported {:.4})",
+        ys.len(),
+        meta.acc_sqnn
+    );
+    if (acc - meta.acc_sqnn).abs() > 0.005 {
+        bail!("served accuracy deviates from the pipeline's quantized accuracy");
+    }
+    println!("verify OK: compression is lossless and accuracy-preserving");
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = flag(flags, "artifacts", "artifacts").to_string();
+    let model_path = flag(flags, "model", "model.sqnn").to_string();
+    let port: u16 = flag(flags, "port", "7433").parse().context("bad --port")?;
+    let meta = read_bundle_meta(&artifacts)?;
+    let policy = BatchPolicy {
+        max_batch: meta.batch_sizes.iter().copied().max().unwrap_or(32),
+        max_wait: std::time::Duration::from_millis(
+            flag(flags, "max-wait-ms", "2").parse().context("bad --max-wait-ms")?,
+        ),
+    };
+    let batch_sizes = meta.batch_sizes.clone();
+    let coordinator = Coordinator::spawn(policy, move || {
+        let runtime = Runtime::cpu()?;
+        let model = SqnnModel::load(&model_path)?;
+        SqnnEngine::load(&runtime, model, &artifacts, &batch_sizes)
+    })?;
+    let server = Server::start(coordinator.handle.clone(), &format!("127.0.0.1:{port}"))?;
+    println!("serving on 127.0.0.1:{} (Ctrl-C to stop)", server.port);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = flag(flags, "artifacts", "artifacts").to_string();
+    let meta = read_bundle_meta(&artifacts)?;
+    println!("compressing bundle…");
+    let model = compress_bundle(&artifacts)?;
+    let st = model.fc1.quant_stats();
+    println!("  {:.3} bits/weight, ratio {:.2}x", st.bits_per_weight(), st.ratio());
+    let (xs, ys) = load_eval_set(&artifacts)?;
+    let runtime = Runtime::cpu()?;
+    let engine = SqnnEngine::load(&runtime, model, &artifacts, &meta.batch_sizes)?;
+    let n = xs.len().min(256);
+    let preds = engine.classify(&xs[..n])?;
+    let correct = preds.iter().zip(&ys[..n]).filter(|(p, y)| **p == **y as usize).count();
+    println!("demo: {}/{} correct ({:.2}%)", correct, n, 100.0 * correct as f64 / n as f64);
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! The paper's model zoo (Table 2): layer geometries, pruning rates and
+//! quantization widths for LeNet5-FC1, AlexNet FC5/FC6, ResNet32 conv
+//! layers, and the PTB LSTM, plus synthetic weight-plane generators that
+//! match each model's statistics (see DESIGN.md §8 for why statistically
+//! matched planes reproduce the codec-relevant behaviour).
+
+use crate::rng::Rng;
+use crate::xorenc::BitPlane;
+
+/// One Table 2 row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    /// Flattened weight count of the compressed layer(s).
+    pub weights: usize,
+    /// Pruning rate `S`.
+    pub sparsity: f64,
+    /// Quantization bits `n_q`.
+    pub n_q: usize,
+    /// The `(n_in, n_out)` design point used for Fig 10 (paper-scale
+    /// ratios: `n_out/n_in` tracking `1/(1−S)`).
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+/// Table 2 of the paper.
+pub const PAPER_MODELS: &[PaperModel] = &[
+    PaperModel {
+        name: "LeNet5-FC1",
+        dataset: "MNIST",
+        weights: 800 * 500,
+        sparsity: 0.95,
+        n_q: 1,
+        n_in: 20,
+        n_out: 380,
+    },
+    PaperModel {
+        name: "AlexNet-FC5",
+        dataset: "ImageNet",
+        weights: 9216 * 4096,
+        sparsity: 0.91,
+        n_q: 1,
+        n_in: 20,
+        n_out: 200,
+    },
+    PaperModel {
+        name: "AlexNet-FC6",
+        dataset: "ImageNet",
+        weights: 4096 * 4096,
+        sparsity: 0.91,
+        n_q: 1,
+        n_in: 20,
+        n_out: 200,
+    },
+    PaperModel {
+        name: "ResNet32-conv",
+        dataset: "CIFAR10",
+        weights: 460_760,
+        sparsity: 0.70,
+        n_q: 2,
+        n_in: 20,
+        n_out: 60,
+    },
+    PaperModel {
+        name: "PTB-LSTM",
+        dataset: "PTB",
+        weights: 6_410_000,
+        sparsity: 0.60,
+        n_q: 2,
+        n_in: 20,
+        n_out: 44,
+    },
+];
+
+impl PaperModel {
+    /// Paper Fig 10 baseline: `n_q`-bit quantization + 1-bit dense index.
+    pub fn baseline_bits_per_weight(&self) -> f64 {
+        (self.n_q + 1) as f64
+    }
+
+    /// Synthetic bit-planes with this model's statistics (uniform
+    /// don't-care placement — the §3.3 regime).
+    pub fn synthetic_planes(&self, rng: &mut Rng) -> Vec<BitPlane> {
+        // All planes share the same mask (pruning is per-weight).
+        let base = BitPlane::synthetic(self.weights, self.sparsity, rng);
+        let mut planes = vec![base.clone()];
+        for _ in 1..self.n_q {
+            let mut bits = crate::gf2::BitVec::zeros(self.weights);
+            for j in base.care.iter_ones() {
+                if rng.next_bit() {
+                    bits.set(j, true);
+                }
+            }
+            planes.push(BitPlane::new(bits, base.care.clone()));
+        }
+        planes
+    }
+
+    /// Nonuniform variant (paper §4: real layers have unevenly distributed
+    /// don't-cares, costing extra patches).
+    pub fn synthetic_planes_nonuniform(&self, rng: &mut Rng) -> Vec<BitPlane> {
+        let period = (self.weights / 64).max(16);
+        let base = BitPlane::synthetic_nonuniform(self.weights, self.sparsity, 0.15, period, rng);
+        let mut planes = vec![base.clone()];
+        for _ in 1..self.n_q {
+            let mut bits = crate::gf2::BitVec::zeros(self.weights);
+            for j in base.care.iter_ones() {
+                if rng.next_bit() {
+                    bits.set(j, true);
+                }
+            }
+            planes.push(BitPlane::new(bits, base.care.clone()));
+        }
+        planes
+    }
+
+    /// A reduced-size clone for fast tests/benches (same ratios, fewer
+    /// weights). The codec's per-weight statistics are size-invariant.
+    pub fn scaled(&self, weights: usize) -> PaperModel {
+        PaperModel { weights, ..*self }
+    }
+}
+
+/// Look up a paper model by name.
+pub fn by_name(name: &str) -> Option<&'static PaperModel> {
+    PAPER_MODELS.iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table2() {
+        assert_eq!(PAPER_MODELS.len(), 5);
+        let lenet = by_name("lenet5-fc1").unwrap();
+        assert_eq!(lenet.weights, 400_000);
+        assert_eq!(lenet.sparsity, 0.95);
+        assert_eq!(lenet.n_q, 1);
+        let alex = by_name("AlexNet-FC5").unwrap();
+        assert_eq!(alex.sparsity, 0.91);
+        assert_eq!(by_name("nonexistent"), None);
+    }
+
+    #[test]
+    fn synthetic_planes_share_mask_and_match_sparsity() {
+        let mut rng = Rng::new(3);
+        let m = by_name("ResNet32-conv").unwrap().scaled(50_000);
+        let planes = m.synthetic_planes(&mut rng);
+        assert_eq!(planes.len(), 2);
+        assert_eq!(planes[0].care.to_bools(), planes[1].care.to_bools());
+        assert!((planes[0].sparsity() - 0.70).abs() < 0.02);
+    }
+
+    #[test]
+    fn design_points_track_inverse_density() {
+        for m in PAPER_MODELS {
+            let bound = 1.0 / (1.0 - m.sparsity);
+            let ratio = m.n_out as f64 / m.n_in as f64;
+            assert!(
+                ratio <= bound * 1.05 && ratio >= bound * 0.4,
+                "{}: ratio {ratio} vs bound {bound}",
+                m.name
+            );
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Binary-index matrix factorization (Lee et al. [22], "network pruning for
+//! low-rank binary indexing") — the index-compression scheme the paper uses
+//! for its pruning masks: the "(A) bits for index" component of Fig 10.
+//!
+//! A boolean pruning mask `M ∈ {0,1}^{m×n}` is represented as the boolean
+//! product `M ≈ ⋁_{k<r} u_k v_kᵀ`, costing `r(m+n)` bits instead of `mn`.
+//! Two entry points:
+//!
+//! * [`generate_factorized_mask`] — sample `(U, V)` directly at a target
+//!   sparsity (the paper's flow *learns* the mask in factorized form during
+//!   retraining; sampling reproduces the artifact the codec consumes);
+//! * [`factorize_greedy`] — approximate a given unstructured mask with a
+//!   rank-`r` boolean product (greedy rank-1 cover), reporting the
+//!   approximation quality.
+
+use crate::gf2::BitVec;
+use crate::rng::Rng;
+
+/// A rank-`r` boolean factorization of an `m×n` mask.
+#[derive(Clone, Debug)]
+pub struct FactorizedMask {
+    pub m: usize,
+    pub n: usize,
+    /// `u_k ∈ {0,1}^m`, one per rank.
+    pub u: Vec<BitVec>,
+    /// `v_k ∈ {0,1}^n`, one per rank.
+    pub v: Vec<BitVec>,
+}
+
+impl FactorizedMask {
+    pub fn rank(&self) -> usize {
+        self.u.len()
+    }
+
+    /// Storage cost of the factorized index: `r(m+n)` bits.
+    pub fn index_bits(&self) -> usize {
+        self.rank() * (self.m + self.n)
+    }
+
+    /// Index bits per weight (the "(A)" series of Fig 10).
+    pub fn index_bits_per_weight(&self) -> f64 {
+        self.index_bits() as f64 / (self.m * self.n) as f64
+    }
+
+    /// Materialize the full `m×n` mask `⋁_k u_k v_kᵀ` (row-major flat).
+    pub fn materialize(&self) -> BitVec {
+        let mut mask = BitVec::zeros(self.m * self.n);
+        for k in 0..self.rank() {
+            for r in self.u[k].iter_ones() {
+                for c in self.v[k].iter_ones() {
+                    mask.set(r * self.n + c, true);
+                }
+            }
+        }
+        mask
+    }
+}
+
+/// Sample a factorized mask whose materialized density is ≈ `1 − sparsity`.
+///
+/// With iid Bernoulli(`p`) factors, coverage is `1 − (1 − p²)^r`; we solve
+/// for `p` given the target.
+pub fn generate_factorized_mask(
+    m: usize,
+    n: usize,
+    rank: usize,
+    sparsity: f64,
+    seed: u64,
+) -> FactorizedMask {
+    assert!(rank >= 1);
+    assert!((0.0..1.0).contains(&sparsity));
+    let keep = 1.0 - sparsity;
+    // 1 - (1 - p^2)^r = keep  =>  p = sqrt(1 - (1-keep)^(1/r))
+    let p = (1.0 - (1.0 - keep).powf(1.0 / rank as f64)).sqrt().clamp(0.0, 1.0);
+    let mut rng = Rng::new(seed ^ 0x42_4D_46); // "BMF"
+    let u = (0..rank).map(|_| BitVec::from_fn(m, |_| rng.next_bool(p))).collect();
+    let v = (0..rank).map(|_| BitVec::from_fn(n, |_| rng.next_bool(p))).collect();
+    FactorizedMask { m, n, u, v }
+}
+
+/// Quality of `approx` as a stand-in for `target` (both flat `m·n` masks).
+#[derive(Clone, Copy, Debug)]
+pub struct MaskApproxStats {
+    /// target ∧ approx (kept weights correctly indexed).
+    pub true_pos: usize,
+    /// approx ∧ ¬target (weights resurrected by the factorization).
+    pub false_pos: usize,
+    /// target ∧ ¬approx (kept weights the factorization drops).
+    pub false_neg: usize,
+}
+
+impl MaskApproxStats {
+    pub fn recall(&self) -> f64 {
+        let denom = self.true_pos + self.false_neg;
+        if denom == 0 {
+            1.0
+        } else {
+            self.true_pos as f64 / denom as f64
+        }
+    }
+
+    pub fn precision(&self) -> f64 {
+        let denom = self.true_pos + self.false_pos;
+        if denom == 0 {
+            1.0
+        } else {
+            self.true_pos as f64 / denom as f64
+        }
+    }
+}
+
+/// Compare two masks.
+pub fn mask_approx_stats(target: &BitVec, approx: &BitVec) -> MaskApproxStats {
+    assert_eq!(target.len(), approx.len());
+    let mut tp = target.clone();
+    tp.and_assign(approx);
+    let true_pos = tp.count_ones();
+    let false_pos = approx.count_ones() - true_pos;
+    let false_neg = target.count_ones() - true_pos;
+    MaskApproxStats { true_pos, false_pos, false_neg }
+}
+
+/// Greedy rank-1 boolean cover of `mask` (flat row-major `m×n`).
+///
+/// Each round picks the row with the most uncovered ones as the column
+/// pattern `v_k`, then admits every row whose uncovered-overlap with `v_k`
+/// exceeds the false positives it would introduce.
+pub fn factorize_greedy(mask: &BitVec, m: usize, n: usize, rank: usize) -> FactorizedMask {
+    assert_eq!(mask.len(), m * n);
+    let rows: Vec<BitVec> = (0..m).map(|r| mask.slice_padded(r * n, n)).collect();
+    let mut uncovered: Vec<BitVec> = rows.clone();
+    let mut u = Vec::with_capacity(rank);
+    let mut v = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        // Seed column pattern: row with most uncovered ones.
+        let (seed_row, best) = uncovered
+            .iter()
+            .enumerate()
+            .map(|(r, b)| (r, b.count_ones()))
+            .max_by_key(|&(_, c)| c)
+            .unwrap();
+        if best == 0 {
+            break;
+        }
+        let mut vk = uncovered[seed_row].clone();
+        let mut uk = BitVec::zeros(m);
+        // Alternating refinement: rows given columns, then columns given
+        // rows (one round is enough to clean up union-pattern seeds).
+        for _round in 0..2 {
+            // u-step: admit rows where newly covered ones beat introduced
+            // false positives.
+            uk = BitVec::zeros(m);
+            for r in 0..m {
+                let mut cover = uncovered[r].clone();
+                cover.and_assign(&vk);
+                let gain = cover.count_ones() as i64;
+                let mut fp = vk.clone();
+                let not_row = BitVec::from_fn(n, |i| !rows[r].get(i));
+                fp.and_assign(&not_row);
+                let cost = fp.count_ones() as i64;
+                // λ=2 penalty on resurrected zeros keeps factors from
+                // collapsing into unions of true rank-1 patterns.
+                if gain > 2 * cost && gain > 0 {
+                    uk.set(r, true);
+                }
+            }
+            if uk.count_ones() == 0 {
+                uk.set(seed_row, true);
+            }
+            // v-step: keep a column only if, across admitted rows, it covers
+            // more uncovered ones than it resurrects zeros.
+            let admitted: Vec<usize> = uk.iter_ones().collect();
+            vk = BitVec::from_fn(n, |c| {
+                let mut gain = 0i64;
+                let mut cost = 0i64;
+                for &r in &admitted {
+                    if uncovered[r].get(c) {
+                        gain += 1;
+                    } else if !rows[r].get(c) {
+                        cost += 1;
+                    }
+                }
+                gain > 2 * cost && gain > 0
+            });
+            if vk.count_ones() == 0 {
+                vk = uncovered[seed_row].clone();
+                break;
+            }
+        }
+        // Update uncovered: uncovered[r] &= ¬vk for every admitted row.
+        let admitted: Vec<usize> = uk.iter_ones().collect();
+        for r in admitted {
+            for i in vk.iter_ones().collect::<Vec<_>>() {
+                uncovered[r].set(i, false);
+            }
+        }
+        u.push(uk);
+        v.push(vk);
+    }
+    FactorizedMask { m, n, u, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::magnitude::magnitude_mask;
+
+    #[test]
+    fn generated_mask_hits_target_sparsity() {
+        for s in [0.6, 0.9, 0.95] {
+            let f = generate_factorized_mask(400, 500, 32, s, 7);
+            let mask = f.materialize();
+            let density = mask.count_ones() as f64 / (400.0 * 500.0);
+            assert!(
+                (density - (1.0 - s)).abs() < 0.03,
+                "s={s} density={density}"
+            );
+        }
+    }
+
+    #[test]
+    fn index_bits_accounting() {
+        let f = generate_factorized_mask(100, 200, 10, 0.9, 1);
+        assert_eq!(f.index_bits(), 10 * 300);
+        assert!((f.index_bits_per_weight() - 3000.0 / 20_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn materialize_matches_boolean_product() {
+        let f = FactorizedMask {
+            m: 3,
+            n: 4,
+            u: vec![BitVec::from_bools(&[true, false, true])],
+            v: vec![BitVec::from_bools(&[false, true, true, false])],
+        };
+        let mask = f.materialize();
+        let expect = [
+            false, true, true, false, //
+            false, false, false, false, //
+            false, true, true, false,
+        ];
+        assert_eq!(mask.to_bools(), expect);
+    }
+
+    #[test]
+    fn greedy_factorization_of_exact_low_rank_mask_is_good() {
+        // A mask that *is* rank-2 should be covered almost perfectly by a
+        // rank-8 greedy approximation (admission allows a few false
+        // positives — resurrected weights — when the cover gain dominates).
+        let f = generate_factorized_mask(60, 80, 2, 0.8, 3);
+        let target = f.materialize();
+        let g = factorize_greedy(&target, 60, 80, 8);
+        let approx = g.materialize();
+        let st = mask_approx_stats(&target, &approx);
+        assert!(st.recall() > 0.9, "recall {}", st.recall());
+        assert!(st.precision() > 0.8, "precision {}", st.precision());
+    }
+
+    #[test]
+    fn greedy_recall_grows_with_rank() {
+        let mut rng = crate::rng::Rng::new(11);
+        let w: Vec<f32> = (0..128 * 128).map(|_| rng.next_gaussian() as f32).collect();
+        let target = magnitude_mask(&w, 0.9);
+        let r8 = factorize_greedy(&target, 128, 128, 8);
+        let r32 = factorize_greedy(&target, 128, 128, 32);
+        let s8 = mask_approx_stats(&target, &r8.materialize());
+        let s32 = mask_approx_stats(&target, &r32.materialize());
+        assert!(s32.recall() >= s8.recall(), "{} < {}", s32.recall(), s8.recall());
+    }
+
+    #[test]
+    fn approx_stats_math() {
+        let t = BitVec::from_bools(&[true, true, false, false]);
+        let a = BitVec::from_bools(&[true, false, true, false]);
+        let st = mask_approx_stats(&t, &a);
+        assert_eq!((st.true_pos, st.false_pos, st.false_neg), (1, 1, 1));
+        assert!((st.recall() - 0.5).abs() < 1e-12);
+        assert!((st.precision() - 0.5).abs() < 1e-12);
+    }
+}

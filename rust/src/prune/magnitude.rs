@@ -1,0 +1,180 @@
+//! Fine-grained unstructured magnitude pruning (Han et al. [11]) plus the
+//! structured-granularity baselines of Fig 2 (row / block pruning), used to
+//! demonstrate the pruning-rate ↔ structure trade-off the paper motivates.
+
+use crate::gf2::BitVec;
+
+/// Keep the largest-magnitude `(1−sparsity)` fraction of weights.
+/// Returns the care mask (set = kept).
+pub fn magnitude_mask(w: &[f32], sparsity: f64) -> BitVec {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let n = w.len();
+    let keep = ((1.0 - sparsity) * n as f64).round() as usize;
+    if keep == 0 {
+        return BitVec::zeros(n);
+    }
+    if keep >= n {
+        return BitVec::ones(n);
+    }
+    // Threshold = keep-th largest |w| via select_nth on a copy.
+    let mut mags: Vec<f32> = w.iter().map(|x| x.abs()).collect();
+    let idx = n - keep;
+    mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let thresh = mags[idx];
+    // Take strictly-greater first, then fill ties up to exactly `keep`.
+    let mut mask = BitVec::zeros(n);
+    let mut taken = 0usize;
+    for (j, x) in w.iter().enumerate() {
+        if x.abs() > thresh {
+            mask.set(j, true);
+            taken += 1;
+        }
+    }
+    for (j, x) in w.iter().enumerate() {
+        if taken >= keep {
+            break;
+        }
+        if !mask.get(j) && x.abs() >= thresh {
+            mask.set(j, true);
+            taken += 1;
+        }
+    }
+    mask
+}
+
+/// Row-granular structured pruning (Fig 2 "row" case): prune whole rows of
+/// an `m×n` matrix by row L1 norm until at least `sparsity` is reached.
+pub fn row_mask(w: &[f32], m: usize, n: usize, sparsity: f64) -> BitVec {
+    assert_eq!(w.len(), m * n);
+    let mut norms: Vec<(f32, usize)> = (0..m)
+        .map(|r| (w[r * n..(r + 1) * n].iter().map(|x| x.abs()).sum::<f32>(), r))
+        .collect();
+    norms.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let rows_to_prune = ((sparsity * m as f64).ceil() as usize).min(m);
+    let mut mask = BitVec::ones(m * n);
+    for &(_, r) in norms.iter().take(rows_to_prune) {
+        for c in 0..n {
+            mask.set(r * n + c, false);
+        }
+    }
+    mask
+}
+
+/// Block-granular pruning (Fig 2 "block" case): prune `bs×bs` blocks of an
+/// `m×n` matrix by block L1 norm until at least `sparsity` is reached.
+pub fn block_mask(w: &[f32], m: usize, n: usize, bs: usize, sparsity: f64) -> BitVec {
+    assert_eq!(w.len(), m * n);
+    let bm = m.div_ceil(bs);
+    let bn = n.div_ceil(bs);
+    let mut norms: Vec<(f32, usize, usize)> = Vec::with_capacity(bm * bn);
+    for bi in 0..bm {
+        for bj in 0..bn {
+            let mut s = 0.0f32;
+            for r in (bi * bs)..((bi + 1) * bs).min(m) {
+                for c in (bj * bs)..((bj + 1) * bs).min(n) {
+                    s += w[r * n + c].abs();
+                }
+            }
+            norms.push((s, bi, bj));
+        }
+    }
+    norms.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let blocks_to_prune = ((sparsity * norms.len() as f64).ceil() as usize).min(norms.len());
+    let mut mask = BitVec::ones(m * n);
+    for &(_, bi, bj) in norms.iter().take(blocks_to_prune) {
+        for r in (bi * bs)..((bi + 1) * bs).min(m) {
+            for c in (bj * bs)..((bj + 1) * bs).min(n) {
+                mask.set(r * n + c, false);
+            }
+        }
+    }
+    mask
+}
+
+/// Empirical sparsity of a mask.
+pub fn mask_sparsity(mask: &BitVec) -> f64 {
+    if mask.len() == 0 {
+        return 0.0;
+    }
+    1.0 - mask.count_ones() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn magnitude_hits_exact_sparsity() {
+        let w = weights(10_000, 1);
+        for s in [0.0, 0.5, 0.9, 0.95, 1.0] {
+            let m = magnitude_mask(&w, s);
+            let keep = ((1.0 - s) * 10_000.0).round() as usize;
+            assert_eq!(m.count_ones(), keep, "s={s}");
+        }
+    }
+
+    #[test]
+    fn magnitude_keeps_largest() {
+        let w = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let m = magnitude_mask(&w, 0.5);
+        assert!(m.get(1) && m.get(3) && m.get(5));
+        assert!(!m.get(0) && !m.get(2) && !m.get(4));
+    }
+
+    #[test]
+    fn magnitude_handles_ties() {
+        let w = vec![1.0f32; 100];
+        let m = magnitude_mask(&w, 0.73);
+        assert_eq!(m.count_ones(), 27);
+    }
+
+    #[test]
+    fn row_mask_prunes_whole_rows() {
+        let (m, n) = (20, 30);
+        let w = weights(m * n, 2);
+        let mask = row_mask(&w, m, n, 0.5);
+        for r in 0..m {
+            let kept: usize = (0..n).filter(|&c| mask.get(r * n + c)).count();
+            assert!(kept == 0 || kept == n, "row {r} partially pruned");
+        }
+        assert!(mask_sparsity(&mask) >= 0.5);
+    }
+
+    #[test]
+    fn block_mask_prunes_whole_blocks() {
+        let (m, n, bs) = (16, 16, 4);
+        let w = weights(m * n, 3);
+        let mask = block_mask(&w, m, n, bs, 0.75);
+        for bi in 0..4 {
+            for bj in 0..4 {
+                let kept: usize = (0..bs)
+                    .flat_map(|r| (0..bs).map(move |c| (r, c)))
+                    .filter(|&(r, c)| mask.get((bi * bs + r) * n + (bj * bs + c)))
+                    .count();
+                assert!(kept == 0 || kept == bs * bs);
+            }
+        }
+        assert!((mask_sparsity(&mask) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn structured_loses_more_signal_than_unstructured() {
+        // Fig 2's message: at equal sparsity, coarse granularity removes
+        // more large-magnitude weights.
+        let (m, n) = (64, 64);
+        let w = weights(m * n, 4);
+        let s = 0.9;
+        let unstr = magnitude_mask(&w, s);
+        let blocked = block_mask(&w, m, n, 8, s);
+        let kept_mag = |mask: &BitVec| -> f32 {
+            mask.iter_ones().map(|j| w[j].abs()).sum()
+        };
+        assert!(kept_mag(&unstr) > kept_mag(&blocked));
+    }
+}

@@ -1,0 +1,13 @@
+//! Pruning substrate: fine-grained unstructured magnitude pruning (the
+//! paper's preferred regime, Fig 2), structured baselines (row/block), and
+//! binary-index matrix factorization [22] for compressed pruning indices —
+//! the "(A)" bits of Fig 10.
+
+pub mod binmf;
+pub mod magnitude;
+
+pub use binmf::{
+    factorize_greedy, generate_factorized_mask, mask_approx_stats, FactorizedMask,
+    MaskApproxStats,
+};
+pub use magnitude::{block_mask, magnitude_mask, mask_sparsity, row_mask};

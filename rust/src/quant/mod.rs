@@ -1,0 +1,9 @@
+//! Quantization substrate (paper §4): the alternating multi-bit quantizer
+//! [32] used to produce SQNN bit-planes, plus ternary baselines [23, 36]
+//! for the Fig 10 comparison.
+
+pub mod multibit;
+pub mod ternary;
+
+pub use multibit::{quantize_multibit, MultibitQuant};
+pub use ternary::{baseline_bits_per_weight, quantize_ternary, TernaryQuant};

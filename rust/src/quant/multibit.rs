@@ -1,0 +1,290 @@
+//! Alternating multi-bit quantization (Xu et al., ICLR 2018) — the
+//! quantizer the paper uses for its SQNN experiments (§4: "alternating
+//! multi-bit quantization [32]").
+//!
+//! A weight vector `w` is approximated by `Σ_{i=1..n_q} α_i b_i` with
+//! binary bases `b_i ∈ {−1,+1}` and non-negative coefficients, found by
+//! alternating minimization:
+//!   * fix `{b_i}` → the optimal `{α_i}` solve the `n_q × n_q` normal
+//!     equations (exact least squares);
+//!   * fix `{α_i}` → the optimal `{b_i}` per weight is the nearest of the
+//!     `2^{n_q}` codebook values `Σ ±α_i` (we enumerate; `n_q ≤ 8`).
+//!
+//! Pruned weights are excluded from the fit (they are *don't cares*, which
+//! is precisely what the XOR encoder exploits). The produced bit-planes are
+//! near-balanced in 0/1 — the property §3 requires of a quantizer.
+
+use crate::gf2::BitVec;
+use crate::xorenc::BitPlane;
+
+/// A multi-bit quantized tensor: `n_q` coefficients + `n_q` bit-planes.
+#[derive(Clone, Debug)]
+pub struct MultibitQuant {
+    /// Basis coefficients `α_i` (not necessarily sorted).
+    pub alphas: Vec<f32>,
+    /// Bit-plane `i`: bit set ⇔ `b_i = +1`. Care mask = unpruned positions
+    /// (shared across planes).
+    pub planes: Vec<BitPlane>,
+    /// Number of weight positions (`m·n` flattened).
+    pub len: usize,
+}
+
+impl MultibitQuant {
+    /// Reconstruct the dequantized weights (pruned positions → 0.0).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        for (i, &a) in self.alphas.iter().enumerate() {
+            let plane = &self.planes[i];
+            for j in 0..self.len {
+                if plane.care.get(j) {
+                    out[j] += if plane.bits.get(j) { a } else { -a };
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean squared quantization error against the original (unpruned
+    /// positions only).
+    pub fn mse(&self, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.len);
+        let deq = self.dequantize();
+        let care = &self.planes[0].care;
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for j in 0..self.len {
+            if care.get(j) {
+                let d = (w[j] - deq[j]) as f64;
+                sum += d * d;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+/// Quantize `w` (with pruning mask `mask`, true = keep) to `n_q` bits using
+/// `iters` alternating refinement rounds (0 = greedy residual init only).
+pub fn quantize_multibit(w: &[f32], mask: &BitVec, n_q: usize, iters: usize) -> MultibitQuant {
+    assert!(n_q >= 1 && n_q <= 8, "n_q must be 1..=8");
+    assert_eq!(w.len(), mask.len());
+    let len = w.len();
+    let kept: Vec<usize> = mask.iter_ones().collect();
+
+    // Greedy residual initialization: α_i = mean |residual|, b_i = sign.
+    let mut b: Vec<Vec<bool>> = vec![vec![false; kept.len()]; n_q]; // per plane, kept order
+    let mut alphas = vec![0.0f32; n_q];
+    let mut resid: Vec<f32> = kept.iter().map(|&j| w[j]).collect();
+    for i in 0..n_q {
+        let mean_abs = if resid.is_empty() {
+            0.0
+        } else {
+            resid.iter().map(|x| x.abs()).sum::<f32>() / resid.len() as f32
+        };
+        alphas[i] = mean_abs;
+        for (t, r) in resid.iter_mut().enumerate() {
+            let s = *r >= 0.0;
+            b[i][t] = s;
+            *r -= if s { mean_abs } else { -mean_abs };
+        }
+    }
+
+    for _ in 0..iters {
+        // α-step: solve (BᵀB) α = Bᵀ w over kept positions.
+        let mut ata = vec![0.0f64; n_q * n_q];
+        let mut atw = vec![0.0f64; n_q];
+        for (t, &j) in kept.iter().enumerate() {
+            let row: Vec<f64> = (0..n_q).map(|i| if b[i][t] { 1.0 } else { -1.0 }).collect();
+            for p in 0..n_q {
+                for q in 0..n_q {
+                    ata[p * n_q + q] += row[p] * row[q];
+                }
+                atw[p] += row[p] * w[j] as f64;
+            }
+        }
+        if let Some(sol) = solve_dense(&mut ata, &mut atw, n_q) {
+            for i in 0..n_q {
+                alphas[i] = sol[i] as f32;
+            }
+        }
+        // b-step: nearest codebook value per weight.
+        let codebook = enumerate_codebook(&alphas);
+        for (t, &j) in kept.iter().enumerate() {
+            let target = w[j];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (ci, &cv) in codebook.iter().enumerate() {
+                let d = (target - cv).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = ci;
+                }
+            }
+            for i in 0..n_q {
+                b[i][t] = (best >> i) & 1 == 1;
+            }
+        }
+    }
+
+    // Materialize planes over the full index space.
+    let planes = (0..n_q)
+        .map(|i| {
+            let mut bits = BitVec::zeros(len);
+            for (t, &j) in kept.iter().enumerate() {
+                if b[i][t] {
+                    bits.set(j, true);
+                }
+            }
+            BitPlane::new(bits, mask.clone())
+        })
+        .collect();
+    MultibitQuant { alphas, planes, len }
+}
+
+/// All `2^{n_q}` codebook values; index bit `i` = sign of basis `i`.
+fn enumerate_codebook(alphas: &[f32]) -> Vec<f32> {
+    let n_q = alphas.len();
+    (0..(1usize << n_q))
+        .map(|m| {
+            (0..n_q)
+                .map(|i| if (m >> i) & 1 == 1 { alphas[i] } else { -alphas[i] })
+                .sum()
+        })
+        .collect()
+}
+
+/// Tiny in-place Gaussian elimination with partial pivoting for the
+/// `n × n` normal equations. Returns `None` if singular.
+fn solve_dense(a: &mut [f64], rhs: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            rhs.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in 0..n {
+            if r != col {
+                let f = a[r * n + col] / d;
+                for c in col..n {
+                    a[r * n + c] -= f * a[col * n + c];
+                }
+                rhs[r] -= f * rhs[col];
+            }
+        }
+    }
+    Some((0..n).map(|i| rhs[i] / a[i * n + i]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_gaussian() as f32 * 0.05).collect()
+    }
+
+    fn random_mask(n: usize, keep: f64, seed: u64) -> BitVec {
+        let mut rng = Rng::new(seed);
+        BitVec::from_fn(n, |_| rng.next_bool(keep))
+    }
+
+    #[test]
+    fn one_bit_is_sign_times_mean_abs() {
+        let w = vec![0.5f32, -0.3, 0.2, -0.4];
+        let mask = BitVec::ones(4);
+        let q = quantize_multibit(&w, &mask, 1, 0);
+        let a = (0.5 + 0.3 + 0.2 + 0.4) / 4.0;
+        assert!((q.alphas[0] - a).abs() < 1e-6);
+        assert_eq!(q.planes[0].bits.to_bools(), vec![true, false, true, false]);
+        let d = q.dequantize();
+        assert!((d[0] - a).abs() < 1e-6 && (d[1] + a).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alternating_never_increases_mse() {
+        let w = gaussian_weights(4_000, 3);
+        let mask = random_mask(4_000, 0.4, 4);
+        let mut prev = f64::INFINITY;
+        for iters in [0usize, 1, 3, 8] {
+            let q = quantize_multibit(&w, &mask, 2, iters);
+            let e = q.mse(&w);
+            assert!(e <= prev + 1e-9, "iters={iters}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = gaussian_weights(3_000, 5);
+        let mask = BitVec::ones(3_000);
+        let e1 = quantize_multibit(&w, &mask, 1, 4).mse(&w);
+        let e2 = quantize_multibit(&w, &mask, 2, 4).mse(&w);
+        let e3 = quantize_multibit(&w, &mask, 3, 4).mse(&w);
+        assert!(e2 < e1 && e3 < e2, "e1={e1} e2={e2} e3={e3}");
+    }
+
+    #[test]
+    fn pruned_positions_are_dont_care_and_zero() {
+        let w = gaussian_weights(1_000, 7);
+        let mask = random_mask(1_000, 0.1, 8);
+        let q = quantize_multibit(&w, &mask, 2, 3);
+        let d = q.dequantize();
+        for j in 0..1_000 {
+            if !mask.get(j) {
+                assert_eq!(d[j], 0.0);
+                assert!(!q.planes[0].care.get(j));
+            }
+        }
+        assert_eq!(q.planes[0].care_count(), mask.count_ones());
+    }
+
+    #[test]
+    fn bit_planes_are_roughly_balanced() {
+        // §3's precondition: quantization bits ~ Bernoulli(1/2) on care bits.
+        let w = gaussian_weights(50_000, 9);
+        let mask = random_mask(50_000, 0.2, 10);
+        let q = quantize_multibit(&w, &mask, 2, 4);
+        for (i, plane) in q.planes.iter().enumerate() {
+            let mut ones = plane.bits.clone();
+            ones.and_assign(&plane.care);
+            let frac = ones.count_ones() as f64 / plane.care_count() as f64;
+            assert!((frac - 0.5).abs() < 0.12, "plane {i} balance {frac}");
+        }
+    }
+
+    #[test]
+    fn empty_mask_is_safe() {
+        let w = gaussian_weights(64, 11);
+        let mask = BitVec::zeros(64);
+        let q = quantize_multibit(&w, &mask, 2, 2);
+        assert_eq!(q.dequantize(), vec![0.0; 64]);
+        assert_eq!(q.mse(&w), 0.0);
+    }
+
+    #[test]
+    fn solve_dense_known_system() {
+        // 2x + y = 5 ; x + 3y = 10  =>  x = 1, y = 3
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut r = vec![5.0, 10.0];
+        let sol = solve_dense(&mut a, &mut r, 2).unwrap();
+        assert!((sol[0] - 1.0).abs() < 1e-9 && (sol[1] - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,139 @@
+//! Ternary quantization baselines (TWN [23] / TTQ-style), the comparator of
+//! Fig 10: ternary = "1-bit quantization + 1-bit pruning indication per
+//! weight", i.e. 2 bits/weight with *whatever sparsity the threshold
+//! induces* — typically far lower than the 90%+ of unstructured pruning,
+//! which is exactly the paper's argument for prune-first-then-quantize.
+
+use crate::gf2::BitVec;
+
+/// A ternary-quantized tensor: weights in `{−α, 0, +α}`.
+#[derive(Clone, Debug)]
+pub struct TernaryQuant {
+    pub alpha: f32,
+    /// Nonzero positions (the implicit pruning mask).
+    pub mask: BitVec,
+    /// Sign bit per position (set = +α); meaningful where `mask` is set.
+    pub signs: BitVec,
+}
+
+/// Ternary Weight Networks quantization: threshold `δ = 0.7·E|w|`, values
+/// outside `[−δ, δ]` map to `±α` with `α = E[|w| : |w| > δ]`.
+pub fn quantize_ternary(w: &[f32]) -> TernaryQuant {
+    let n = w.len();
+    let mean_abs = if n == 0 { 0.0 } else { w.iter().map(|x| x.abs()).sum::<f32>() / n as f32 };
+    let delta = 0.7 * mean_abs;
+    let mut mask = BitVec::zeros(n);
+    let mut signs = BitVec::zeros(n);
+    let mut sum = 0.0f32;
+    let mut cnt = 0usize;
+    for (j, &x) in w.iter().enumerate() {
+        if x.abs() > delta {
+            mask.set(j, true);
+            if x > 0.0 {
+                signs.set(j, true);
+            }
+            sum += x.abs();
+            cnt += 1;
+        }
+    }
+    let alpha = if cnt == 0 { 0.0 } else { sum / cnt as f32 };
+    TernaryQuant { alpha, mask, signs }
+}
+
+impl TernaryQuant {
+    pub fn len(&self) -> usize {
+        self.mask.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mask.is_empty()
+    }
+
+    /// Fraction of zeroed weights.
+    pub fn sparsity(&self) -> f64 {
+        if self.len() == 0 {
+            return 0.0;
+        }
+        1.0 - self.mask.count_ones() as f64 / self.len() as f64
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        (0..self.len())
+            .map(|j| {
+                if self.mask.get(j) {
+                    if self.signs.get(j) {
+                        self.alpha
+                    } else {
+                        -self.alpha
+                    }
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Storage in the paper's accounting: 2 bits per weight
+    /// (1 quantization bit + 1 index bit), Fig 10's ternary bar.
+    pub fn bits_per_weight(&self) -> f64 {
+        2.0
+    }
+}
+
+/// Fig 10's uncompressed SQNN baseline: `n_q`-bit quantization plus a 1-bit
+/// dense pruning index per weight.
+pub fn baseline_bits_per_weight(n_q: usize) -> f64 {
+    (n_q + 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn ternary_values_are_three_level() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..10_000).map(|_| rng.next_gaussian() as f32).collect();
+        let q = quantize_ternary(&w);
+        let d = q.dequantize();
+        for x in d {
+            assert!(x == 0.0 || (x - q.alpha).abs() < 1e-6 || (x + q.alpha).abs() < 1e-6);
+        }
+        assert!(q.alpha > 0.0);
+    }
+
+    #[test]
+    fn ternary_sparsity_is_moderate_for_gaussian() {
+        // TWN on gaussian weights prunes roughly half — much lower than the
+        // 0.9+ of magnitude pruning, the paper's §3.3 point about ternary.
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..50_000).map(|_| rng.next_gaussian() as f32).collect();
+        let s = quantize_ternary(&w).sparsity();
+        assert!(s > 0.3 && s < 0.75, "sparsity {s}");
+    }
+
+    #[test]
+    fn signs_follow_weights() {
+        let w = vec![1.0f32, -1.0, 0.0, 2.0];
+        let q = quantize_ternary(&w);
+        assert!(q.mask.get(0) && q.signs.get(0));
+        assert!(q.mask.get(1) && !q.signs.get(1));
+        assert!(!q.mask.get(2));
+    }
+
+    #[test]
+    fn baseline_accounting() {
+        assert_eq!(baseline_bits_per_weight(1), 2.0);
+        assert_eq!(baseline_bits_per_weight(2), 3.0);
+        let q = quantize_ternary(&[1.0, -2.0]);
+        assert_eq!(q.bits_per_weight(), 2.0);
+    }
+
+    #[test]
+    fn empty_input() {
+        let q = quantize_ternary(&[]);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.alpha, 0.0);
+    }
+}

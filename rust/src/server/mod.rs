@@ -1,0 +1,201 @@
+//! TCP inference server (std::net — the offline image has no tokio; a
+//! thread-per-connection acceptor over the batching coordinator is
+//! entirely adequate for the CPU-PJRT testbed).
+//!
+//! Wire protocol (little-endian):
+//!   request:  `b'I'` + u32 n + n×f32   → infer one input vector
+//!             `b'S'`                   → metrics snapshot (JSON line)
+//!             `b'Q'`                   → close connection
+//!   response: `b'O'` + u32 n + n×f32 (logits) | `b'E'` + u32 len + msg
+//!             for `S`: u32 len + JSON bytes
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::CoordinatorHandle;
+
+/// Serve until `stop` flips. Returns the bound port (0 → ephemeral).
+pub struct Server {
+    pub port: u16,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn start(handle: CoordinatorHandle, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new().name("sqnn-accept".into()).spawn(
+            move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nodelay(true);
+                            let h = handle.clone();
+                            let st = stop2.clone();
+                            conns.push(
+                                std::thread::Builder::new()
+                                    .name("sqnn-conn".into())
+                                    .spawn(move || {
+                                        let _ = handle_conn(stream, h, st);
+                                    })
+                                    .expect("spawn conn thread"),
+                            );
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            },
+        )?;
+        Ok(Server { port, accept_thread: Some(accept_thread), stop })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn read_exact(s: &mut TcpStream, buf: &mut [u8]) -> std::io::Result<()> {
+    s.read_exact(buf)
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    handle: CoordinatorHandle,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    // Idle connections poll the stop flag so `Server::stop` can join this
+    // thread even while a client keeps the socket open.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    loop {
+        let mut op = [0u8; 1];
+        match stream.read(&mut op) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(_) => return Ok(()),
+        }
+        match op[0] {
+            b'I' => {
+                let mut nb = [0u8; 4];
+                read_exact(&mut stream, &mut nb)?;
+                let n = u32::from_le_bytes(nb) as usize;
+                if n > 1 << 20 {
+                    anyhow::bail!("oversized request ({n} floats)");
+                }
+                let mut raw = vec![0u8; n * 4];
+                read_exact(&mut stream, &mut raw)?;
+                let input: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                match handle.infer(input) {
+                    Ok(logits) => {
+                        let mut msg = Vec::with_capacity(5 + logits.len() * 4);
+                        msg.push(b'O');
+                        msg.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+                        for v in logits {
+                            msg.extend_from_slice(&v.to_le_bytes());
+                        }
+                        stream.write_all(&msg)?;
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        stream.write_all(b"E")?;
+                        stream.write_all(&(msg.len() as u32).to_le_bytes())?;
+                        stream.write_all(msg.as_bytes())?;
+                    }
+                }
+            }
+            b'S' => {
+                let s = handle.metrics().snapshot();
+                let json = format!(
+                    "{{\"requests\":{},\"batches\":{},\"errors\":{},\"mean_batch\":{:.3},\"p50_ms\":{:.3},\"p99_ms\":{:.3}}}",
+                    s.requests, s.batches, s.errors, s.mean_batch_size,
+                    s.latency_p50_ms, s.latency_p99_ms
+                );
+                stream.write_all(&(json.len() as u32).to_le_bytes())?;
+                stream.write_all(json.as_bytes())?;
+            }
+            b'Q' => return Ok(()),
+            other => anyhow::bail!("unknown opcode {other}"),
+        }
+    }
+}
+
+/// Minimal blocking client (used by tests, examples, and `sqnn client`).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        // One buffered write per request: 784 tiny write()s would hit
+        // Nagle + syscall overhead and dominate end-to-end latency.
+        let mut msg = Vec::with_capacity(5 + input.len() * 4);
+        msg.push(b'I');
+        msg.extend_from_slice(&(input.len() as u32).to_le_bytes());
+        for v in input {
+            msg.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&msg)?;
+        let mut op = [0u8; 1];
+        self.stream.read_exact(&mut op)?;
+        let mut nb = [0u8; 4];
+        self.stream.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        let mut raw = vec![0u8; if op[0] == b'O' { n * 4 } else { n }];
+        self.stream.read_exact(&mut raw)?;
+        if op[0] == b'E' {
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw));
+        }
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn stats_json(&mut self) -> Result<String> {
+        self.stream.write_all(b"S")?;
+        let mut nb = [0u8; 4];
+        self.stream.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        let mut raw = vec![0u8; n];
+        self.stream.read_exact(&mut raw)?;
+        Ok(String::from_utf8_lossy(&raw).into_owned())
+    }
+}

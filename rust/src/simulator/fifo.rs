@@ -1,0 +1,88 @@
+//! Multi-bank FIFO for patch data (paper §5.1, Fig 11).
+//!
+//! `d_patch` is decoupled from the encrypted weight stream and delivered
+//! through `n_FIFO` banks, each accepting one patch entry per cycle from
+//! memory. The decoder pops `n_patch(j)` entries when it decodes slice `j`;
+//! it stalls when the banks cannot supply them, and the fill side stalls
+//! when every bank is full — the two stall sources Fig 12 sweeps.
+
+/// A bank-parallel patch FIFO.
+#[derive(Clone, Debug)]
+pub struct PatchFifo {
+    /// Number of banks (`n_FIFO`): max entries loadable per cycle.
+    pub n_banks: usize,
+    /// Capacity per bank, in entries ("FIFO size can be small, say 256").
+    pub depth: usize,
+    occupancy: usize,
+}
+
+impl PatchFifo {
+    pub fn new(n_banks: usize, depth: usize) -> Self {
+        assert!(n_banks >= 1 && depth >= 1);
+        PatchFifo { n_banks, depth, occupancy: 0 }
+    }
+
+    /// Total capacity.
+    pub fn capacity(&self) -> usize {
+        self.n_banks * self.depth
+    }
+
+    /// Entries currently buffered.
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    /// One memory-side fill cycle: stream in up to `n_banks` entries from
+    /// `available` (the not-yet-fetched patch stream). Returns entries
+    /// actually accepted.
+    pub fn fill_cycle(&mut self, available: usize) -> usize {
+        let take = available.min(self.n_banks).min(self.capacity() - self.occupancy);
+        self.occupancy += take;
+        take
+    }
+
+    /// Decoder-side pop of `n` entries; returns `true` if satisfied this
+    /// cycle (otherwise the decoder stalls and retries after more fills).
+    pub fn try_pop(&mut self, n: usize) -> bool {
+        if n <= self.occupancy {
+            self.occupancy -= n;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_respects_bank_width_and_capacity() {
+        let mut f = PatchFifo::new(4, 8);
+        assert_eq!(f.fill_cycle(100), 4); // bank width caps per-cycle fill
+        assert_eq!(f.occupancy(), 4);
+        for _ in 0..7 {
+            f.fill_cycle(100);
+        }
+        assert_eq!(f.occupancy(), 32); // full
+        assert_eq!(f.fill_cycle(100), 0);
+    }
+
+    #[test]
+    fn pop_stalls_until_enough() {
+        let mut f = PatchFifo::new(2, 4);
+        f.fill_cycle(3); // 2 in
+        assert!(!f.try_pop(3), "must stall with 2 < 3");
+        assert_eq!(f.occupancy(), 2, "failed pop must not consume");
+        f.fill_cycle(1);
+        assert!(f.try_pop(3));
+        assert_eq!(f.occupancy(), 0);
+    }
+
+    #[test]
+    fn zero_pop_always_succeeds() {
+        let mut f = PatchFifo::new(1, 1);
+        assert!(f.try_pop(0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Hardware decode-path simulation (paper §5.1, Figs 1, 11, 12): the
+//! multi-bank patch FIFO, cycle-level XOR/CSR decoder models, and the
+//! first-order DRAM traffic model behind Fig 1.
+
+pub mod decoder;
+pub mod dram;
+pub mod fifo;
+
+pub use decoder::{simulate_csr_decode, simulate_xor_decode, DecodeSim};
+pub use dram::{warp_imbalance, GpuModel, TrafficReport};
+pub use fifo::PatchFifo;

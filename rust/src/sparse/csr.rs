@@ -1,0 +1,199 @@
+//! Compressed Sparse Row format — the conventional representation the paper
+//! measures against (Table 1, Figs 1/3/12). Deep Compression [10] ships
+//! pruned layers in CSR; its two pathologies motivate the whole paper:
+//! per-row decode work is proportional to that row's nonzeros (load
+//! imbalance), and index data erodes the compression ratio.
+
+use crate::gf2::BitVec;
+
+/// CSR matrix over `f32` values.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from a dense row-major matrix, keeping entries where
+    /// `mask` is set (or all nonzeros if `mask` is `None`).
+    pub fn from_dense(w: &[f32], rows: usize, cols: usize, mask: Option<&BitVec>) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        if let Some(m) = mask {
+            assert_eq!(m.len(), rows * cols);
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let j = r * cols + c;
+                let keep = match mask {
+                    Some(m) => m.get(j),
+                    None => w[j] != 0.0,
+                };
+                if keep {
+                    col_idx.push(c as u32);
+                    vals.push(w[j]);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Nonzeros in row `r` — the per-row decode work of Fig 3.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// Per-row nnz histogram (drives the load-imbalance model).
+    pub fn row_nnz_distribution(&self) -> Vec<usize> {
+        (0..self.rows).map(|r| self.row_nnz(r)).collect()
+    }
+
+    /// Sparsity of the represented matrix.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Storage footprint in bits with `val_bits` per value (paper counts
+    /// quantized values): values + column indices (⌈lg cols⌉ each) +
+    /// row pointers (⌈lg(nnz+1)⌉ each).
+    pub fn storage_bits(&self, val_bits: usize) -> usize {
+        let col_bits = crate::util::ceil_log2(self.cols.max(2));
+        let ptr_bits = crate::util::bits_for_max(self.nnz());
+        self.nnz() * (val_bits + col_bits) + (self.rows + 1) * ptr_bits
+    }
+
+    /// Reconstruct the dense matrix.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                out[r * self.cols + self.col_idx[k] as usize] = self.vals[k];
+            }
+        }
+        out
+    }
+
+    /// Sparse × dense: `Y (rows×k) = self (rows×cols) · X (cols×k)`.
+    /// Row-major `X`, row-major `Y` — the Fig 1 workload.
+    pub fn spmm(&self, x: &[f32], k: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols * k);
+        let mut y = vec![0.0f32; self.rows * k];
+        for r in 0..self.rows {
+            let yrow = &mut y[r * k..(r + 1) * k];
+            for t in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let c = self.col_idx[t] as usize;
+                let v = self.vals[t];
+                let xrow = &x[c * k..(c + 1) * k];
+                for (yy, xx) in yrow.iter_mut().zip(xrow) {
+                    *yy += v * xx;
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Dense row-major GEMM `Y (m×k) = W (m×n) · X (n×k)` — the Fig 1 baseline.
+pub fn dense_matmul(w: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(w.len(), m * n);
+    assert_eq!(x.len(), n * k);
+    let mut y = vec![0.0f32; m * k];
+    for r in 0..m {
+        for c in 0..n {
+            let v = w[r * n + c];
+            let xrow = &x[c * k..(c + 1) * k];
+            let yrow = &mut y[r * k..(r + 1) * k];
+            for (yy, xx) in yrow.iter_mut().zip(xrow) {
+                *yy += v * xx;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::magnitude_mask;
+    use crate::rng::Rng;
+
+    fn rand_dense(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let w = rand_dense(20 * 30, 1);
+        let mask = magnitude_mask(&w, 0.8);
+        let csr = CsrMatrix::from_dense(&w, 20, 30, Some(&mask));
+        let back = csr.to_dense();
+        for j in 0..w.len() {
+            if mask.get(j) {
+                assert_eq!(back[j], w[j]);
+            } else {
+                assert_eq!(back[j], 0.0);
+            }
+        }
+        assert_eq!(csr.nnz(), mask.count_ones());
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul_on_masked() {
+        let (m, n, k) = (17, 23, 5);
+        let w = rand_dense(m * n, 2);
+        let mask = magnitude_mask(&w, 0.7);
+        let mut wm = w.clone();
+        for j in 0..w.len() {
+            if !mask.get(j) {
+                wm[j] = 0.0;
+            }
+        }
+        let x = rand_dense(n * k, 3);
+        let csr = CsrMatrix::from_dense(&w, m, n, Some(&mask));
+        let ys = csr.spmm(&x, k);
+        let yd = dense_matmul(&wm, &x, m, n, k);
+        for (a, b) in ys.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn row_nnz_accounting() {
+        let w = vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 5.0];
+        let csr = CsrMatrix::from_dense(&w, 3, 3, None);
+        assert_eq!(csr.row_nnz_distribution(), vec![2, 0, 3]);
+        assert_eq!(csr.nnz(), 5);
+        assert!((csr.sparsity() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn storage_bits_grow_with_nnz() {
+        let w = rand_dense(64 * 64, 4);
+        let hi = CsrMatrix::from_dense(&w, 64, 64, Some(&magnitude_mask(&w, 0.5)));
+        let lo = CsrMatrix::from_dense(&w, 64, 64, Some(&magnitude_mask(&w, 0.9)));
+        assert!(hi.storage_bits(2) > lo.storage_bits(2));
+        // CSR index overhead: at 2-bit values the index dominates.
+        let bits_per_weight = lo.storage_bits(2) as f64 / (64.0 * 64.0);
+        assert!(bits_per_weight > 2.0 * (1.0 - 0.9) * 0.9, "{bits_per_weight}");
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = CsrMatrix::from_dense(&[], 0, 0, None);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), Vec::<f32>::new());
+    }
+}

@@ -1,0 +1,6 @@
+//! Conventional sparse-matrix representations — the formats the paper
+//! compares against (Table 1, Fig 1): CSR and the dense-bitmask layout.
+
+pub mod csr;
+
+pub use csr::{dense_matmul, CsrMatrix};

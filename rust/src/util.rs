@@ -1,0 +1,88 @@
+//! Small shared helpers (bit arithmetic, summary statistics).
+
+/// Bits needed to represent any value in `0..=max_value`
+/// (`⌈lg(max+1)⌉`; 0 when `max_value == 0`).
+///
+/// Note: the paper's Eq. (2) writes `⌈lg max(p)⌉`; taken literally that
+/// cannot distinguish `max(p)` values, so we use the representable form —
+/// this matches the paper's own numeric examples within rounding.
+pub fn bits_for_max(max_value: usize) -> usize {
+    if max_value == 0 {
+        0
+    } else {
+        (usize::BITS - max_value.leading_zeros()) as usize
+    }
+}
+
+/// `⌈lg n⌉` — index width for positions in `0..n` (paper's `⌈lg n_out⌉`).
+pub fn ceil_log2(n: usize) -> usize {
+    assert!(n > 0);
+    if n == 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile by nearest-rank on a sorted copy (`q` in `[0,1]`).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_max_values() {
+        assert_eq!(bits_for_max(0), 0);
+        assert_eq!(bits_for_max(1), 1);
+        assert_eq!(bits_for_max(2), 2);
+        assert_eq!(bits_for_max(3), 2);
+        assert_eq!(bits_for_max(4), 3);
+        assert_eq!(bits_for_max(255), 8);
+        assert_eq!(bits_for_max(256), 9);
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(200), 8);
+        assert_eq!(ceil_log2(256), 8);
+        assert_eq!(ceil_log2(257), 9);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!(stddev(&xs) > 0.0);
+    }
+}

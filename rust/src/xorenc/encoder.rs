@@ -1,0 +1,403 @@
+//! Encryption: Algorithm 1 (patch-searching) and the compressed plane format.
+//!
+//! For each `n_out`-bit slice `w^q` of a flattened bit-plane, the encoder
+//! builds the reduced system `M̂⊕ w^c = w^q_{care}` one care bit at a time
+//! (paper Algorithm 1). A care bit whose equation is inconsistent with the
+//! rows accepted so far is demoted to a don't-care and recorded in `d_patch`;
+//! decryption XOR-decodes the seed and flips exactly those positions, making
+//! the representation lossless (§3.2).
+
+use crate::gf2::{AddOutcome, BitVec, IncrementalSolver};
+use crate::util::{bits_for_max, ceil_log2};
+
+use super::network::XorNetwork;
+use super::plane::BitPlane;
+
+/// Encoder configuration: the `(n_in, n_out)` design point plus the seed
+/// that fixes `M⊕`, and the §5.2 "blocked n_patch assignment" granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EncryptConfig {
+    /// Seed-vector width (paper: practical up to ~30, ≤ 64 supported).
+    pub n_in: usize,
+    /// Slice width decoded per step by the XOR network.
+    pub n_out: usize,
+    /// PRNG seed fixing `M⊕`.
+    pub seed: u64,
+    /// Slices per `n_patch` block (§5.2 *Blocked n_patch Assignment*).
+    /// `0` = one global block (the baseline scheme of §3.2).
+    pub block_slices: usize,
+}
+
+impl Default for EncryptConfig {
+    fn default() -> Self {
+        // The paper's running synthetic design point (§3.3 / Fig 7).
+        EncryptConfig { n_in: 20, n_out: 200, seed: 0x5153_4E4E, block_slices: 0 }
+    }
+}
+
+/// One encrypted bit-plane: seeds + patch data (the on-device format).
+#[derive(Clone, Debug)]
+pub struct EncryptedPlane {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub seed: u64,
+    /// Original flattened length `mn` (the last slice may be partial).
+    pub plane_len: usize,
+    /// `w^c` per slice, low `n_in` bits of each word.
+    pub codes: Vec<u64>,
+    /// `d_patch` per slice: positions (within the slice) to flip after
+    /// decode. `patches[j].len()` is the paper's `p_j` (= `n_patch`).
+    pub patches: Vec<Vec<u32>>,
+    /// §5.2 blocking granularity used for the `n_patch` field accounting.
+    pub block_slices: usize,
+}
+
+/// Bit-accounting of Eq. (2), split by component.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressionStats {
+    /// `(n_in/n_out)·mn` term: total seed bits.
+    pub code_bits: usize,
+    /// `l·⌈lg max(p)⌉` term: fixed-width per-slice patch-count fields.
+    pub npatch_bits: usize,
+    /// `Σ p_j ⌈lg n_out⌉` term: patch position data.
+    pub dpatch_bits: usize,
+    /// Sum of the three components.
+    pub total_bits: usize,
+    /// Uncompressed plane bits (`mn`).
+    pub original_bits: usize,
+    /// Total number of patches `Σ p_j`.
+    pub total_patches: usize,
+    /// `max(p)` across the plane.
+    pub max_npatch: usize,
+}
+
+impl CompressionStats {
+    /// Eq. (2) compression ratio `r` (original / compressed).
+    pub fn ratio(&self) -> f64 {
+        self.original_bits as f64 / self.total_bits.max(1) as f64
+    }
+
+    /// Memory reduction `1 − r⁻¹` (the y-axis of Figs 7–9).
+    pub fn memory_reduction(&self) -> f64 {
+        1.0 - self.total_bits as f64 / self.original_bits.max(1) as f64
+    }
+
+    /// Compressed bits per original weight position.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.total_bits as f64 / self.original_bits.max(1) as f64
+    }
+}
+
+/// The XOR-network encoder/decoder pair for one `(n_in, n_out, seed)` design.
+#[derive(Clone, Debug)]
+pub struct XorEncoder {
+    cfg: EncryptConfig,
+    net: XorNetwork,
+}
+
+/// Per-slice encryption result (exposed for the exhaustive-search ablation).
+#[derive(Clone, Debug)]
+pub struct SliceEncryption {
+    pub code: u64,
+    pub d_patch: Vec<u32>,
+}
+
+impl XorEncoder {
+    pub fn new(cfg: EncryptConfig) -> Self {
+        let net = XorNetwork::generate(cfg.n_in, cfg.n_out, cfg.seed);
+        XorEncoder { cfg, net }
+    }
+
+    pub fn config(&self) -> &EncryptConfig {
+        &self.cfg
+    }
+
+    pub fn network(&self) -> &XorNetwork {
+        &self.net
+    }
+
+    /// Algorithm 1 on one slice. `bits`/`care` are the slice's value and
+    /// care masks (length `n_out`; a trailing partial slice is zero-padded
+    /// with don't-cares by the caller).
+    pub fn encrypt_slice(&self, bits: &BitVec, care: &BitVec) -> SliceEncryption {
+        debug_assert_eq!(bits.len(), self.cfg.n_out);
+        debug_assert_eq!(care.len(), self.cfg.n_out);
+        let mut solver = IncrementalSolver::new(self.cfg.n_in);
+        let mut d_patch: Vec<u32> = Vec::new();
+        // Lines 2–8: grow the RREF system care bit by care bit; an
+        // inconsistent row is dropped (its index becomes a patch).
+        for i in care.iter_ones() {
+            let row = self.net.row(i);
+            let rhs = bits.get(i);
+            if solver.try_add_equation(row, rhs) == AddOutcome::Inconsistent {
+                d_patch.push(i as u32);
+            }
+        }
+        // Line 9: solve for w^c (free variables canonically 0 — patches are
+        // exactly the dropped rows regardless of the fill, since a dropped
+        // row contradicts the stored system for *every* solution).
+        let code = solver.solve(0);
+        debug_assert_eq!(
+            {
+                let decoded = self.net.decode(code);
+                let mut diff = bits.clone();
+                diff.xor_assign(&decoded);
+                diff.and_assign(care);
+                diff.iter_ones().map(|i| i as u32).collect::<Vec<_>>()
+            },
+            d_patch,
+            "patches must equal decode mismatches on care bits"
+        );
+        SliceEncryption { code, d_patch }
+    }
+
+    /// Encrypt a full bit-plane (lines 1–12 of Algorithm 1 over all slices).
+    pub fn encrypt_plane(&self, plane: &BitPlane) -> EncryptedPlane {
+        let n_out = self.cfg.n_out;
+        let len = plane.len();
+        let l = len.div_ceil(n_out);
+        let mut codes = Vec::with_capacity(l);
+        let mut patches = Vec::with_capacity(l);
+        for k in 0..l {
+            let start = k * n_out;
+            let bits = plane.bits.slice_padded(start, n_out);
+            // slice_padded zero-fills past `len`, so tail positions are
+            // don't-cares automatically (care = 0).
+            let care = plane.care.slice_padded(start, n_out);
+            let enc = self.encrypt_slice(&bits, &care);
+            codes.push(enc.code);
+            patches.push(enc.d_patch);
+        }
+        EncryptedPlane {
+            n_in: self.cfg.n_in,
+            n_out,
+            seed: self.cfg.seed,
+            plane_len: len,
+            codes,
+            patches,
+            block_slices: self.cfg.block_slices,
+        }
+    }
+
+    /// Decrypt an encrypted plane: XOR-decode every seed, apply patches,
+    /// truncate to the original length. Don't-care positions carry whatever
+    /// the random decode produced (paper Fig 4c).
+    pub fn decrypt_plane(&self, enc: &EncryptedPlane) -> BitVec {
+        assert_eq!(enc.n_in, self.cfg.n_in);
+        assert_eq!(enc.n_out, self.cfg.n_out);
+        assert_eq!(enc.seed, self.cfg.seed, "decoder must rebuild the same M⊕");
+        let n_out = self.cfg.n_out;
+        let mut out = BitVec::zeros(enc.plane_len);
+        let mut tmp = BitVec::zeros(n_out);
+        for (k, &code) in enc.codes.iter().enumerate() {
+            self.net.decode_into(code, &mut tmp);
+            for &p in &enc.patches[k] {
+                tmp.flip(p as usize);
+            }
+            let base = k * n_out;
+            let len = n_out.min(enc.plane_len - base);
+            out.splice_from(base, &tmp, len);
+        }
+        out
+    }
+
+    /// Losslessness check (§3.2): decrypt and compare on care positions.
+    pub fn verify_lossless(&self, plane: &BitPlane, enc: &EncryptedPlane) -> bool {
+        plane.matches(&self.decrypt_plane(enc))
+    }
+}
+
+impl EncryptedPlane {
+    /// Number of slices `l = ⌈mn / n_out⌉`.
+    pub fn num_slices(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Eq. (2) bit accounting, honouring §5.2 blocked `n_patch` fields:
+    /// with `block_slices = B > 0`, each block of `B` slices gets its own
+    /// `⌈lg(max p in block)⌉` field width, plus a 6-bit per-block header
+    /// declaring that width (the paper elides this header; we charge it).
+    pub fn stats(&self) -> CompressionStats {
+        let l = self.codes.len();
+        let code_bits = l * self.n_in;
+        let pos_bits = ceil_log2(self.n_out.max(2));
+        let total_patches: usize = self.patches.iter().map(|p| p.len()).sum();
+        let dpatch_bits = total_patches * pos_bits;
+        let npatch_bits = if self.block_slices == 0 {
+            let max_p = self.patches.iter().map(|p| p.len()).max().unwrap_or(0);
+            l * bits_for_max(max_p)
+        } else {
+            let mut bits = 0usize;
+            for chunk in self.patches.chunks(self.block_slices) {
+                let max_p = chunk.iter().map(|p| p.len()).max().unwrap_or(0);
+                bits += chunk.len() * bits_for_max(max_p) + 6;
+            }
+            bits
+        };
+        let max_npatch = self.patches.iter().map(|p| p.len()).max().unwrap_or(0);
+        CompressionStats {
+            code_bits,
+            npatch_bits,
+            dpatch_bits,
+            total_bits: code_bits + npatch_bits + dpatch_bits,
+            original_bits: self.plane_len,
+            total_patches,
+            max_npatch,
+        }
+    }
+
+    /// Re-account the same encryption under a different §5.2 blocking.
+    pub fn stats_with_blocking(&self, block_slices: usize) -> CompressionStats {
+        let mut alt = self.clone();
+        alt.block_slices = block_slices;
+        alt.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn enc(n_in: usize, n_out: usize) -> XorEncoder {
+        XorEncoder::new(EncryptConfig { n_in, n_out, seed: 99, block_slices: 0 })
+    }
+
+    #[test]
+    fn lossless_roundtrip_synthetic() {
+        let mut rng = Rng::new(42);
+        let e = enc(20, 100);
+        let plane = BitPlane::synthetic(5_000, 0.9, &mut rng);
+        let c = e.encrypt_plane(&plane);
+        assert!(e.verify_lossless(&plane, &c), "roundtrip must be lossless");
+        assert_eq!(c.num_slices(), 50);
+    }
+
+    #[test]
+    fn lossless_at_many_design_points() {
+        let mut rng = Rng::new(7);
+        for &(n_in, n_out, s) in
+            &[(8usize, 16usize, 0.5), (12, 60, 0.8), (20, 200, 0.9), (30, 120, 0.75), (64, 256, 0.7)]
+        {
+            let e = enc(n_in, n_out);
+            let plane = BitPlane::synthetic(3 * n_out + 17, s, &mut rng);
+            let c = e.encrypt_plane(&plane);
+            assert!(e.verify_lossless(&plane, &c), "n_in={n_in} n_out={n_out} s={s}");
+        }
+    }
+
+    #[test]
+    fn all_care_dense_plane_still_lossless() {
+        // S = 0: every equation matters; most become patches once rank
+        // saturates, but the result must stay exact.
+        let mut rng = Rng::new(9);
+        let e = enc(16, 64);
+        let plane = BitPlane::synthetic(640, 0.0, &mut rng);
+        let c = e.encrypt_plane(&plane);
+        assert!(e.verify_lossless(&plane, &c));
+        let st = c.stats();
+        // With no sparsity there is nothing to exploit: ratio < 1 is expected.
+        assert!(st.ratio() < 1.0);
+    }
+
+    #[test]
+    fn all_dont_care_plane_needs_no_patches() {
+        let plane = BitPlane::new(BitVec::zeros(400), BitVec::zeros(400));
+        let e = enc(20, 100);
+        let c = e.encrypt_plane(&plane);
+        assert_eq!(c.stats().total_patches, 0);
+        assert!(e.verify_lossless(&plane, &c));
+    }
+
+    #[test]
+    fn high_sparsity_reaches_high_reduction() {
+        // §3.3: at S=0.9, n_in=20, n_out≈200 memory reduction ≈ 0.83.
+        let mut rng = Rng::new(11);
+        let e = enc(20, 200);
+        let plane = BitPlane::synthetic(100_000, 0.9, &mut rng);
+        let c = e.encrypt_plane(&plane);
+        assert!(e.verify_lossless(&plane, &c));
+        let red = c.stats().memory_reduction();
+        assert!(red > 0.75, "memory reduction {red} too low for S=0.9");
+        assert!(red < 0.9, "cannot beat the sparsity bound");
+    }
+
+    #[test]
+    fn partial_tail_slice_is_handled() {
+        let mut rng = Rng::new(13);
+        let e = enc(10, 64);
+        let plane = BitPlane::synthetic(100, 0.6, &mut rng); // 1 full + 36-bit tail
+        let c = e.encrypt_plane(&plane);
+        assert_eq!(c.num_slices(), 2);
+        assert!(e.verify_lossless(&plane, &c));
+        let d = e.decrypt_plane(&c);
+        assert_eq!(d.len(), 100);
+    }
+
+    #[test]
+    fn empty_plane() {
+        let plane = BitPlane::new(BitVec::zeros(0), BitVec::zeros(0));
+        let e = enc(8, 32);
+        let c = e.encrypt_plane(&plane);
+        assert_eq!(c.num_slices(), 0);
+        assert_eq!(c.stats().total_bits, 0);
+    }
+
+    #[test]
+    fn stats_components_add_up() {
+        let mut rng = Rng::new(17);
+        let e = enc(20, 200);
+        let plane = BitPlane::synthetic(10_000, 0.9, &mut rng);
+        let c = e.encrypt_plane(&plane);
+        let st = c.stats();
+        assert_eq!(st.total_bits, st.code_bits + st.npatch_bits + st.dpatch_bits);
+        assert_eq!(st.code_bits, c.num_slices() * 20);
+        assert_eq!(st.original_bits, 10_000);
+        assert!((st.memory_reduction() - (1.0 - st.total_bits as f64 / 10_000.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocked_npatch_never_worse_than_global_minus_headers() {
+        // §5.2: per-block max(p) field widths ≤ global max(p) width.
+        let mut rng = Rng::new(19);
+        let e = enc(20, 100);
+        // Nonuniform plane → one dense region inflates global max(p).
+        let plane = BitPlane::synthetic_nonuniform(50_000, 0.9, 0.5, 5_000, &mut rng);
+        let c = e.encrypt_plane(&plane);
+        let global = c.stats();
+        let blocked = c.stats_with_blocking(16);
+        let headers = c.num_slices().div_ceil(16) * 6;
+        assert!(
+            blocked.npatch_bits <= global.npatch_bits + headers,
+            "blocked={} global={} headers={}",
+            blocked.npatch_bits,
+            global.npatch_bits,
+            headers
+        );
+        assert!(e.verify_lossless(&plane, &c));
+    }
+
+    #[test]
+    fn patch_rate_drops_with_larger_n_in() {
+        // Fig 8's mechanism: larger seed space ⇒ fewer patches.
+        let mut rng = Rng::new(23);
+        let plane = BitPlane::synthetic(40_000, 0.9, &mut rng);
+        let p_small = enc(12, 100).encrypt_plane(&plane).stats().total_patches;
+        let p_large = enc(32, 100).encrypt_plane(&plane).stats().total_patches;
+        assert!(
+            p_large < p_small,
+            "n_in=32 patches {p_large} should be < n_in=12 patches {p_small}"
+        );
+    }
+
+    #[test]
+    fn decrypt_rejects_wrong_design_point() {
+        let mut rng = Rng::new(29);
+        let e1 = enc(20, 100);
+        let plane = BitPlane::synthetic(1_000, 0.9, &mut rng);
+        let c = e1.encrypt_plane(&plane);
+        let e2 = enc(20, 200);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e2.decrypt_plane(&c)));
+        assert!(r.is_err(), "mismatched n_out must be rejected");
+    }
+}

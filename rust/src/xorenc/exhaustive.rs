@@ -1,0 +1,174 @@
+//! Exhaustive minimum-patch encryption (§5.2 *Minimizing n_patch for Small
+//! n_in*).
+//!
+//! Enumerates all `2^n_in` seed vectors and keeps the one with the fewest
+//! care-bit mismatches. Exponential in `n_in` ("n_in below 30 is a practical
+//! value"), so it serves as the optimality oracle that Algorithm 1 is
+//! benchmarked against (the paper reports the heuristic is within ~10%).
+//!
+//! Enumeration walks seeds in Gray-code order so each step updates the
+//! decoded vector with a *single* column XOR instead of a full decode.
+
+use crate::gf2::BitVec;
+
+use super::encoder::{SliceEncryption, XorEncoder};
+use super::plane::BitPlane;
+
+/// Hard cap: beyond this the table of `2^n_in` decodes is impractical.
+pub const MAX_EXHAUSTIVE_N_IN: usize = 26;
+
+impl XorEncoder {
+    /// Minimum-patch encryption of one slice by exhaustive search.
+    pub fn encrypt_slice_exhaustive(&self, bits: &BitVec, care: &BitVec) -> SliceEncryption {
+        let n_in = self.config().n_in;
+        assert!(
+            n_in <= MAX_EXHAUSTIVE_N_IN,
+            "exhaustive search is limited to n_in <= {MAX_EXHAUSTIVE_N_IN} (got {n_in})"
+        );
+        debug_assert_eq!(bits.len(), self.config().n_out);
+
+        // diff(code) = decode(code) ^ bits, restricted to care positions;
+        // popcount is the patch count for that seed.
+        let mut diff = bits.clone(); // decode(0) = 0 ⇒ diff = bits
+        diff.and_assign(care);
+
+        let net = self.network();
+        // Pre-mask each column by the care mask so the Gray step stays O(words).
+        let masked_cols: Vec<BitVec> = (0..n_in)
+            .map(|j| {
+                let mut c = BitVec::from_fn(net.n_out(), |i| net.get(i, j));
+                c.and_assign(care);
+                c
+            })
+            .collect();
+
+        let mut best_code = 0u64;
+        let mut best_count = diff.count_ones();
+        let mut gray_prev = 0u64;
+        for k in 1u64..(1u64 << n_in) {
+            let gray = k ^ (k >> 1);
+            let flipped = (gray ^ gray_prev).trailing_zeros() as usize;
+            gray_prev = gray;
+            diff.xor_assign(&masked_cols[flipped]);
+            let cnt = diff.count_ones();
+            if cnt < best_count {
+                best_count = cnt;
+                best_code = gray;
+                if cnt == 0 {
+                    break;
+                }
+            }
+        }
+
+        // Materialize d_patch for the winning seed.
+        let mut d = bits.clone();
+        d.xor_assign(&net.decode(best_code));
+        d.and_assign(care);
+        let d_patch = d.iter_ones().map(|i| i as u32).collect();
+        SliceEncryption { code: best_code, d_patch }
+    }
+
+    /// Exhaustive encryption of a whole plane (ablation/oracle path).
+    pub fn encrypt_plane_exhaustive(&self, plane: &BitPlane) -> super::encoder::EncryptedPlane {
+        let n_out = self.config().n_out;
+        let l = plane.len().div_ceil(n_out);
+        let mut codes = Vec::with_capacity(l);
+        let mut patches = Vec::with_capacity(l);
+        for k in 0..l {
+            let bits = plane.bits.slice_padded(k * n_out, n_out);
+            let care = plane.care.slice_padded(k * n_out, n_out);
+            let enc = self.encrypt_slice_exhaustive(&bits, &care);
+            codes.push(enc.code);
+            patches.push(enc.d_patch);
+        }
+        super::encoder::EncryptedPlane {
+            n_in: self.config().n_in,
+            n_out,
+            seed: self.config().seed,
+            plane_len: plane.len(),
+            codes,
+            patches,
+            block_slices: self.config().block_slices,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::xorenc::encoder::EncryptConfig;
+
+    fn enc(n_in: usize, n_out: usize) -> XorEncoder {
+        XorEncoder::new(EncryptConfig { n_in, n_out, seed: 4242, block_slices: 0 })
+    }
+
+    #[test]
+    fn exhaustive_is_lossless() {
+        let mut rng = Rng::new(1);
+        let e = enc(10, 60);
+        let plane = BitPlane::synthetic(600, 0.85, &mut rng);
+        let c = e.encrypt_plane_exhaustive(&plane);
+        assert!(e.verify_lossless(&plane, &c));
+    }
+
+    #[test]
+    fn exhaustive_never_more_patches_than_heuristic() {
+        let mut rng = Rng::new(2);
+        for s in [0.5, 0.7, 0.9] {
+            let e = enc(12, 80);
+            let plane = BitPlane::synthetic(1_600, s, &mut rng);
+            let h = e.encrypt_plane(&plane).stats().total_patches;
+            let x = e.encrypt_plane_exhaustive(&plane).stats().total_patches;
+            assert!(x <= h, "s={s}: exhaustive {x} > heuristic {h}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_finds_zero_patch_solution_when_rank_allows() {
+        // With #care ≤ n_in and independent rows, a perfect seed exists;
+        // exhaustive must find *a* zero-patch seed whenever the heuristic does.
+        let mut rng = Rng::new(3);
+        let e = enc(14, 64);
+        let plane = BitPlane::synthetic(640, 0.9, &mut rng);
+        let h = e.encrypt_plane(&plane);
+        let x = e.encrypt_plane_exhaustive(&plane);
+        for (hp, xp) in h.patches.iter().zip(&x.patches) {
+            if hp.is_empty() {
+                assert!(xp.is_empty(), "oracle missed a zero-patch seed");
+            }
+        }
+    }
+
+    #[test]
+    fn gray_walk_matches_naive_search_small() {
+        // Cross-check the Gray-code enumeration against a naive full decode
+        // per seed on a tiny design point.
+        let e = enc(6, 24);
+        let mut rng = Rng::new(5);
+        let plane = BitPlane::synthetic(24, 0.5, &mut rng);
+        let bits = plane.bits.slice_padded(0, 24);
+        let care = plane.care.slice_padded(0, 24);
+        let fast = e.encrypt_slice_exhaustive(&bits, &care);
+        // naive
+        let mut best = usize::MAX;
+        for code in 0u64..(1 << 6) {
+            let mut d = bits.clone();
+            d.xor_assign(&e.network().decode(code));
+            d.and_assign(&care);
+            best = best.min(d.count_ones());
+        }
+        assert_eq!(fast.d_patch.len(), best);
+    }
+
+    #[test]
+    fn rejects_large_n_in() {
+        let e = enc(30, 64);
+        let bits = BitVec::zeros(64);
+        let care = BitVec::zeros(64);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.encrypt_slice_exhaustive(&bits, &care)
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's core contribution: structured compression by weight
+//! encryption through a fixed XOR-gate network (§3).
+//!
+//! - [`network`] — the fixed random GF(2) generator matrix `M⊕` (Fig 5);
+//! - [`plane`] — quantized `{0, x, 1}` bit-planes (care / don't-care);
+//! - [`encoder`] — Algorithm 1 patch-searching encryption, Eq. (2)
+//!   accounting, §5.2 blocked `n_patch`, and lossless decryption;
+//! - [`exhaustive`] — the `2^n_in` minimum-patch oracle (§5.2).
+
+pub mod encoder;
+pub mod exhaustive;
+pub mod network;
+pub mod plane;
+
+pub use encoder::{CompressionStats, EncryptConfig, EncryptedPlane, SliceEncryption, XorEncoder};
+pub use network::XorNetwork;
+pub use plane::BitPlane;

@@ -1,0 +1,195 @@
+//! The XOR-gate network `M⊕` (paper §3.1, Fig 5).
+//!
+//! A fixed random binary matrix `M⊕ ∈ {0,1}^{n_out × n_in}` over GF(2).
+//! Decryption is the mat-vec `w^q = M⊕ w^c`; in hardware this is `n_out`
+//! XOR trees, here it is `popcount(w^c)`-many XORs of packed 64-bit words
+//! (column-major accumulation), which is the software analogue of the
+//! paper's "fixed decoding rate".
+//!
+//! Each element of `M⊕` is drawn iid Bernoulli(1/2) from a seeded PRNG
+//! ("each element is randomly assigned to 0 or 1 with the same
+//! probability"), so encoder and every decoder reconstruct the identical
+//! network from `(seed, n_in, n_out)` — the network itself costs no model
+//! storage (Fig 10 caption).
+
+use crate::gf2::BitVec;
+use crate::rng::Rng;
+
+/// A fixed XOR-gate network: the `n_out × n_in` GF(2) generator matrix.
+#[derive(Clone, Debug)]
+pub struct XorNetwork {
+    n_in: usize,
+    n_out: usize,
+    seed: u64,
+    /// Row `i` packed into a `u64` (requires `n_in ≤ 64`): the coefficients
+    /// of output bit `i`'s XOR tree. Used by the encryption-side solver.
+    rows: Vec<u64>,
+    /// Column `j` packed over `n_out` bits. Used by the decode hot path:
+    /// `M⊕ w^c = XOR of columns j where w^c_j = 1`.
+    cols: Vec<BitVec>,
+}
+
+impl XorNetwork {
+    /// Generate the network for `(seed, n_in, n_out)`.
+    pub fn generate(n_in: usize, n_out: usize, seed: u64) -> Self {
+        assert!((1..=64).contains(&n_in), "n_in must be in 1..=64");
+        assert!(n_out >= 1, "n_out must be >= 1");
+        // Domain-separate from other users of the seed.
+        let mut rng = Rng::new(seed ^ 0x584F_525F_4E45_5421); // "XOR_NET!"
+        let mask = if n_in == 64 { u64::MAX } else { (1u64 << n_in) - 1 };
+        let mut rows = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            rows.push(rng.next_u64() & mask);
+        }
+        let cols = (0..n_in)
+            .map(|j| BitVec::from_fn(n_out, |i| (rows[i] >> j) & 1 == 1))
+            .collect();
+        XorNetwork { n_in, n_out, seed, rows, cols }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Coefficient row for output bit `i` (the equation `M⊕_i · w^c = w^q_i`).
+    #[inline]
+    pub fn row(&self, i: usize) -> u64 {
+        self.rows[i]
+    }
+
+    /// All rows.
+    pub fn rows(&self) -> &[u64] {
+        &self.rows
+    }
+
+    /// Element access (test/debug).
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        (self.rows[i] >> j) & 1 == 1
+    }
+
+    /// Decode a seed vector: `w^q = M⊕ w^c` over GF(2).
+    pub fn decode(&self, code: u64) -> BitVec {
+        let mut out = BitVec::zeros(self.n_out);
+        self.decode_into(code, &mut out);
+        out
+    }
+
+    /// Decode into an existing buffer (hot path; avoids allocation).
+    #[inline]
+    pub fn decode_into(&self, code: u64, out: &mut BitVec) {
+        debug_assert_eq!(out.len(), self.n_out);
+        out.clear();
+        let mut c = code;
+        while c != 0 {
+            let j = c.trailing_zeros() as usize;
+            out.xor_assign(&self.cols[j]);
+            c &= c - 1;
+        }
+    }
+
+    /// Decode many codes into a contiguous flat bit vector of
+    /// `codes.len() * n_out` bits (slice `k` occupies bits
+    /// `[k·n_out, (k+1)·n_out)`). This is the software model of Fig 3's
+    /// "decode each row at one step" — every slice costs the same.
+    pub fn decode_batch(&self, codes: &[u64]) -> BitVec {
+        let mut out = BitVec::zeros(codes.len() * self.n_out);
+        let mut tmp = BitVec::zeros(self.n_out);
+        for (k, &code) in codes.iter().enumerate() {
+            self.decode_into(code, &mut tmp);
+            out.splice_from(k * self.n_out, &tmp, self.n_out);
+        }
+        out
+    }
+
+    /// The network as a dense row-major `{0,1}` byte matrix (for export to
+    /// the JAX/Pallas side, which replays the decode as a matmul mod 2).
+    pub fn to_dense_u8(&self) -> Vec<u8> {
+        let mut m = Vec::with_capacity(self.n_out * self.n_in);
+        for i in 0..self.n_out {
+            for j in 0..self.n_in {
+                m.push(u8::from(self.get(i, j)));
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = XorNetwork::generate(20, 100, 7);
+        let b = XorNetwork::generate(20, 100, 7);
+        assert_eq!(a.rows(), b.rows());
+        let c = XorNetwork::generate(20, 100, 8);
+        assert_ne!(a.rows(), c.rows());
+    }
+
+    #[test]
+    fn elements_are_balanced() {
+        let net = XorNetwork::generate(32, 2000, 42);
+        let ones: usize = net.rows().iter().map(|r| r.count_ones() as usize).sum();
+        let total = 32 * 2000;
+        let frac = ones as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn decode_matches_rowwise_definition() {
+        let net = XorNetwork::generate(12, 50, 3);
+        for code in [0u64, 1, 0b1010, 0xFFF, 0x555] {
+            let out = net.decode(code);
+            for i in 0..50 {
+                let expect = ((net.row(i) & code).count_ones() & 1) == 1;
+                assert_eq!(out.get(i), expect, "bit {i} code {code:b}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_is_linear() {
+        // M(a ^ b) = M(a) ^ M(b): the defining property of a linear code.
+        let net = XorNetwork::generate(16, 77, 9);
+        let (a, b) = (0b1100_1010_0101u64, 0b0011_1111_0000u64);
+        let mut lhs = net.decode(a ^ b);
+        let rhs_a = net.decode(a);
+        let rhs_b = net.decode(b);
+        lhs.xor_assign(&rhs_a);
+        lhs.xor_assign(&rhs_b);
+        assert_eq!(lhs.count_ones(), 0);
+    }
+
+    #[test]
+    fn decode_batch_matches_single() {
+        let net = XorNetwork::generate(10, 33, 5);
+        let codes = [0u64, 7, 1023, 512, 341];
+        let flat = net.decode_batch(&codes);
+        for (k, &c) in codes.iter().enumerate() {
+            let single = net.decode(c);
+            for i in 0..33 {
+                assert_eq!(flat.get(k * 33 + i), single.get(i));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_export_matches_get() {
+        let net = XorNetwork::generate(8, 16, 11);
+        let d = net.to_dense_u8();
+        for i in 0..16 {
+            for j in 0..8 {
+                assert_eq!(d[i * 8 + j] == 1, net.get(i, j));
+            }
+        }
+    }
+}

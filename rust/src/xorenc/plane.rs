@@ -1,0 +1,160 @@
+//! Quantized bit-planes with *don't care* positions (paper §3).
+//!
+//! A pruned + quantized weight matrix `W_i^q ∈ {0, x, 1}^{m×n}` flattens to a
+//! [`BitPlane`]: a value bit-vector plus a *care* mask (care = the weight
+//! survived pruning; don't-care = pruned, the decoder may emit anything
+//! there). The encoder only ever looks at `(care, value)` pairs — exactly the
+//! information content the paper's scheme compresses.
+
+use crate::gf2::BitVec;
+use crate::rng::Rng;
+
+/// A flattened quantized bit-plane over `{0, x, 1}`.
+#[derive(Clone, Debug)]
+pub struct BitPlane {
+    /// Quantization bit values; only meaningful where `care` is set.
+    pub bits: BitVec,
+    /// 1 = care (unpruned weight), 0 = don't care (pruned).
+    pub care: BitVec,
+}
+
+impl BitPlane {
+    /// Construct from explicit bit values and care mask.
+    pub fn new(bits: BitVec, care: BitVec) -> Self {
+        assert_eq!(bits.len(), care.len(), "bits/care length mismatch");
+        BitPlane { bits, care }
+    }
+
+    /// Construct from `Option<bool>` values (`None` = don't care).
+    pub fn from_options(vals: &[Option<bool>]) -> Self {
+        let bits = BitVec::from_fn(vals.len(), |i| vals[i] == Some(true));
+        let care = BitVec::from_fn(vals.len(), |i| vals[i].is_some());
+        BitPlane { bits, care }
+    }
+
+    /// The synthetic workload of paper §3.3: each of `len` positions is a
+    /// don't-care with probability `sparsity`; care positions carry a fair
+    /// coin ("assignment of 0 or 1 to weights with the same probability").
+    pub fn synthetic(len: usize, sparsity: f64, rng: &mut Rng) -> Self {
+        let mut bits = BitVec::zeros(len);
+        let mut care = BitVec::zeros(len);
+        for i in 0..len {
+            if !rng.next_bool(sparsity) {
+                care.set(i, true);
+                if rng.next_bit() {
+                    bits.set(i, true);
+                }
+            }
+        }
+        BitPlane { bits, care }
+    }
+
+    /// Synthetic plane with *nonuniform* sparsity (paper §4/§5.2: real
+    /// weights show unevenly distributed don't-cares, which drives up
+    /// `n_patch`). Sparsity varies sinusoidally around `mean_sparsity` with
+    /// the given peak-to-peak `amplitude` over `period` positions.
+    pub fn synthetic_nonuniform(
+        len: usize,
+        mean_sparsity: f64,
+        amplitude: f64,
+        period: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut bits = BitVec::zeros(len);
+        let mut care = BitVec::zeros(len);
+        for i in 0..len {
+            let phase = (i % period.max(1)) as f64 / period.max(1) as f64;
+            let s = (mean_sparsity
+                + 0.5 * amplitude * (2.0 * std::f64::consts::PI * phase).sin())
+            .clamp(0.0, 1.0);
+            if !rng.next_bool(s) {
+                care.set(i, true);
+                if rng.next_bit() {
+                    bits.set(i, true);
+                }
+            }
+        }
+        BitPlane { bits, care }
+    }
+
+    /// Total positions.
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.len() == 0
+    }
+
+    /// Number of care (unpruned) positions.
+    pub fn care_count(&self) -> usize {
+        self.care.count_ones()
+    }
+
+    /// Empirical sparsity (fraction of don't-care positions).
+    pub fn sparsity(&self) -> f64 {
+        if self.len() == 0 {
+            return 0.0;
+        }
+        1.0 - self.care_count() as f64 / self.len() as f64
+    }
+
+    /// True iff `decoded` agrees with this plane on every care position —
+    /// the paper's losslessness criterion (§3.2).
+    pub fn matches(&self, decoded: &BitVec) -> bool {
+        assert_eq!(decoded.len(), self.len());
+        self.mismatch_count(decoded) == 0
+    }
+
+    /// Number of care positions where `decoded` disagrees.
+    pub fn mismatch_count(&self, decoded: &BitVec) -> usize {
+        let mut diff = self.bits.clone();
+        diff.xor_assign(decoded);
+        diff.and_assign(&self.care);
+        diff.count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_options_roundtrip() {
+        let p = BitPlane::from_options(&[Some(true), None, Some(false), None, Some(true)]);
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.care_count(), 3);
+        assert!(p.bits.get(0) && !p.bits.get(2) && p.bits.get(4));
+        assert!(p.care.get(0) && !p.care.get(1));
+    }
+
+    #[test]
+    fn synthetic_sparsity_close() {
+        let mut rng = Rng::new(1);
+        let p = BitPlane::synthetic(100_000, 0.9, &mut rng);
+        assert!((p.sparsity() - 0.9).abs() < 0.01, "s={}", p.sparsity());
+        // care values balanced
+        let mut ones = p.bits.clone();
+        ones.and_assign(&p.care);
+        let frac = ones.count_ones() as f64 / p.care_count() as f64;
+        assert!((frac - 0.5).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn nonuniform_mean_sparsity_close() {
+        let mut rng = Rng::new(2);
+        let p = BitPlane::synthetic_nonuniform(200_000, 0.8, 0.3, 1000, &mut rng);
+        assert!((p.sparsity() - 0.8).abs() < 0.02, "s={}", p.sparsity());
+    }
+
+    #[test]
+    fn matches_ignores_dont_care() {
+        let p = BitPlane::from_options(&[Some(true), None, Some(false)]);
+        // decoded differs only at the don't-care slot
+        let d = BitVec::from_bools(&[true, true, false]);
+        assert!(p.matches(&d));
+        let bad = BitVec::from_bools(&[false, true, false]);
+        assert_eq!(p.mismatch_count(&bad), 1);
+        assert!(!p.matches(&bad));
+    }
+}

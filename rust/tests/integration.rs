@@ -1,0 +1,198 @@
+//! Integration tests over the full stack: python-exported artifacts →
+//! rust compression → PJRT serving → coordinator/server.
+//!
+//! These need `make artifacts` to have run (the Makefile orders it before
+//! `cargo test`); they are skipped gracefully when artifacts are absent so
+//! `cargo test` still works in a fresh checkout.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use sqnn_xor::coordinator::{
+    compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, SqnnEngine,
+};
+use sqnn_xor::io::npy::read_npy;
+use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::runtime::Runtime;
+use sqnn_xor::server::{Client, Server};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() && dir.join("sqnn_mlp_b1.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// Compress once per test binary (Algorithm 1 over 392k weights ≈ fast,
+/// but no need to repeat it in every test).
+fn compressed_model(dir: &Path) -> &'static SqnnModel {
+    static MODEL: OnceLock<SqnnModel> = OnceLock::new();
+    MODEL.get_or_init(|| compress_bundle(dir).expect("compress bundle"))
+}
+
+#[test]
+fn bundle_compression_is_lossless_and_small() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = compressed_model(&dir);
+    let st = model.fc1.quant_stats();
+    // Paper Table 2 / Fig 10: LeNet5-FC1 at S=0.95 with 1-bit quantization
+    // compresses to ≈0.19 bits/weight *including* index bits; the quant
+    // payload alone must land well under 1 bit and the ratio near
+    // n_out/n_in.
+    assert!(st.bits_per_weight() < 0.30, "bits/weight {}", st.bits_per_weight());
+    assert!(st.ratio() > 5.0);
+    // losslessness against the exported planes
+    let bits_arr = read_npy(dir.join("weights/fc1_bits.npy")).unwrap();
+    let bits = bits_arr.as_u8().unwrap();
+    let decoded = model.fc1.decode_planes();
+    let plane_len = model.fc1.rows * model.fc1.cols;
+    for q in 0..model.meta.fc1_nq {
+        for j in 0..plane_len {
+            if model.fc1.mask.get(j) {
+                assert_eq!(decoded[q].get(j), bits[q * plane_len + j] != 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn container_roundtrip_preserves_serving() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = compressed_model(&dir).clone();
+    let tmp = std::env::temp_dir().join("sqnn_integration_model.sqnn");
+    model.save(&tmp).unwrap();
+    let reloaded = SqnnModel::load(&tmp).unwrap();
+    assert_eq!(reloaded.fc1.planes[0].codes, model.fc1.planes[0].codes);
+    assert_eq!(reloaded.meta, model.meta);
+}
+
+#[test]
+fn served_logits_match_python_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = read_bundle_meta(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let engine =
+        SqnnEngine::load(&runtime, compressed_model(&dir).clone(), &dir, &meta.batch_sizes)
+            .unwrap();
+
+    let x = read_npy(dir.join("weights/x_test.npy")).unwrap();
+    let logits_ref = read_npy(dir.join("weights/logits_ref.npy")).unwrap();
+    let n = logits_ref.shape[0];
+    let n_cls = logits_ref.shape[1];
+    let dim = x.shape[1];
+    let xs: Vec<Vec<f32>> =
+        x.as_f32().unwrap().chunks(dim).take(n).map(|c| c.to_vec()).collect();
+    let got = engine.infer(&xs).unwrap();
+    let want = logits_ref.as_f32().unwrap();
+    // The decode is bit-exact; fp reassociation across the two backends
+    // allows tiny numeric drift only.
+    for i in 0..n {
+        for c in 0..n_cls {
+            let (a, b) = (got[i][c], want[i * n_cls + c]);
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                "logit [{i},{c}]: served {a} vs python {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_handles_all_batch_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = read_bundle_meta(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let engine =
+        SqnnEngine::load(&runtime, compressed_model(&dir).clone(), &dir, &meta.batch_sizes)
+            .unwrap();
+    let dim = meta.input_dim;
+    for n in [1usize, 2, 7, 8, 9, 33, 70] {
+        let xs: Vec<Vec<f32>> = (0..n).map(|i| vec![(i % 7) as f32 * 0.1; dim]).collect();
+        let out = engine.infer(&xs).unwrap();
+        assert_eq!(out.len(), n, "batch {n}");
+        assert!(out.iter().all(|l| l.len() == meta.num_classes));
+        // padding must not leak: identical inputs give identical logits
+        // regardless of batch composition.
+        let single = engine.infer(&xs[..1]).unwrap();
+        for c in 0..meta.num_classes {
+            assert!((single[0][c] - out[0][c]).abs() < 1e-4);
+        }
+    }
+    // malformed input is rejected, not UB
+    assert!(engine.infer(&[vec![0.0; dim - 1]]).is_err());
+}
+
+#[test]
+fn coordinator_batches_and_serves_over_tcp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = read_bundle_meta(&dir).unwrap();
+    let dir2 = dir.clone();
+    let batch_sizes = meta.batch_sizes.clone();
+    let policy = BatchPolicy {
+        max_batch: 32,
+        max_wait: std::time::Duration::from_millis(5),
+    };
+    let coordinator = Coordinator::spawn(policy, move || {
+        let runtime = Runtime::cpu()?;
+        let model = compress_bundle(&dir2)?;
+        SqnnEngine::load(&runtime, model, &dir2, &batch_sizes)
+    })
+    .unwrap();
+    let mut server = Server::start(coordinator.handle.clone(), "127.0.0.1:0").unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+
+    // Concurrent clients hammer the server; all must get 10 logits.
+    let x = read_npy(dir.join("weights/x_test.npy")).unwrap();
+    let dim = x.shape[1];
+    let inputs: Vec<Vec<f32>> =
+        x.as_f32().unwrap().chunks(dim).take(16).map(|c| c.to_vec()).collect();
+    let mut joins = Vec::new();
+    for (t, input) in inputs.into_iter().enumerate() {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).expect("connect");
+            let logits = c.infer(&input).expect("infer");
+            assert_eq!(logits.len(), 10, "client {t}");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // Metrics flowed.
+    let snap = coordinator.handle.metrics().snapshot();
+    assert_eq!(snap.requests, 16);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.mean_batch_size >= 1.0);
+    // Stats endpoint answers.
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats_json().unwrap();
+    assert!(stats.contains("\"requests\""));
+    server.stop();
+}
+
+#[test]
+fn decode_planes_hlo_matches_rust_decoder() {
+    // The standalone decode graph must agree with the rust GF(2) decoder.
+    let Some(dir) = artifacts_dir() else { return };
+    let model = compressed_model(&dir);
+    let runtime = Runtime::cpu().unwrap();
+    let exe = runtime.load_hlo_text(dir.join("decode_planes.hlo.txt")).unwrap();
+
+    let statics = sqnn_xor::coordinator::build_static_inputs(model);
+    // args: codes [nq, l, n_in], m_xor [n_out, n_in]
+    let out = exe.run(&[statics.tensors[1].clone(), statics.tensors[0].clone()]).unwrap();
+
+    let n_out = model.meta.n_out;
+    let enc = model.fc1.encoder();
+    let plane = &model.fc1.planes[0];
+    for (s, &code) in plane.codes.iter().enumerate().take(50) {
+        let bits = enc.network().decode(code);
+        for o in 0..n_out {
+            let hlo_bit = out.data[s * n_out + o];
+            assert_eq!(hlo_bit == 1.0, bits.get(o), "slice {s} bit {o}");
+        }
+    }
+}
