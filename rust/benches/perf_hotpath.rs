@@ -5,6 +5,7 @@
 
 use sqnn_xor::benchutil::{bench, print_table, write_csv};
 use sqnn_xor::rng::Rng;
+use sqnn_xor::runtime::parallel::{decode_plane_parallel, decode_plane_serial, DecodePlan};
 use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
 
 fn main() {
@@ -44,6 +45,57 @@ fn main() {
         ]);
     }
 
+    // --- thread-sharded decode: single-thread vs N-worker sweep ---
+    // (runtime::parallel — the serving hot path; outputs must be
+    // bit-identical across all thread counts.)
+    {
+        let len = 4_000_000usize;
+        let (n_in, n_out, s) = (20usize, 200usize, 0.9f64);
+        let plane = BitPlane::synthetic(len, s, &mut rng);
+        let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed: 2, block_slices: 0 });
+        let ep = enc.encrypt_plane(&plane);
+        let plan = DecodePlan::for_plane(&ep);
+        let reference = decode_plane_serial(&plan, &ep);
+        for t in [2usize, 4, 8] {
+            assert_eq!(
+                decode_plane_parallel(&plan, &ep, t).words(),
+                reference.words(),
+                "parallel decode (t={t}) must be bit-identical to serial"
+            );
+        }
+        let serial = bench("decode serial", 2, 10, || {
+            std::hint::black_box(decode_plane_serial(&plan, &ep));
+        });
+        rows.push(vec![
+            format!("decode serial {n_in}/{n_out} ({}Mbit)", len / 1_000_000),
+            format!("{:.2}", serial.mean_s * 1e3),
+            format!("{:.2}", len as f64 / serial.mean_s / 1e9),
+            "Gbit/s".into(),
+        ]);
+        let mut speedup_at_4 = 0.0f64;
+        for t in [1usize, 2, 4, 8] {
+            let r = bench(&format!("decode parallel t={t}"), 2, 10, || {
+                std::hint::black_box(decode_plane_parallel(&plan, &ep, t));
+            });
+            if t == 4 {
+                speedup_at_4 = serial.mean_s / r.mean_s;
+            }
+            rows.push(vec![
+                format!("decode parallel t={t} {n_in}/{n_out}"),
+                format!("{:.2}", r.mean_s * 1e3),
+                format!("{:.2}", len as f64 / r.mean_s / 1e9),
+                "Gbit/s".into(),
+            ]);
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        println!(
+            "parallel decode: {speedup_at_4:.2}x speedup at 4 threads vs serial ({cores} cores available)"
+        );
+        if cores >= 4 && speedup_at_4 < 1.5 {
+            println!("WARN: expected >= 1.5x at 4 threads on a multi-core host");
+        }
+    }
+
     // --- GF(2) mat-vec alone (the innermost XOR-network primitive) ---
     {
         let net = sqnn_xor::xorenc::XorNetwork::generate(20, 392, 9);
@@ -74,6 +126,7 @@ fn main() {
                     "artifacts",
                     &meta.batch_sizes,
                     variant,
+                    sqnn_xor::coordinator::EngineOptions::default(),
                 ) else {
                     continue;
                 };

@@ -1,30 +1,50 @@
-//! The serving engine: a compressed model + its AOT executables.
+//! The serving engine: a compressed model + an execution backend.
 //!
 //! At load time the engine materializes the *graph-side* tensors from the
 //! `.sqnn` container exactly once — codes, patch bit-planes (scattered from
-//! `d_patch`), `M⊕`, mask, alphas — then serves batches by picking the
-//! smallest compiled batch bucket, padding, executing, and slicing. This is
-//! the paper's deployment story: encrypted weights live in (device) memory,
-//! decode happens inside the compute graph at a fixed rate.
+//! `d_patch`), `M⊕`, mask, alphas — then serves batches. Two backends:
+//!
+//! * **native** (default): FC1 is reconstructed through the thread-sharded
+//!   XOR decoder (`runtime::parallel`, plan cache keyed by layer id) and
+//!   the MLP forward runs in plain Rust. No external runtime needed.
+//! * **pjrt** (feature `xla`): batches execute through AOT-compiled XLA
+//!   executables, picking the smallest compiled batch bucket, padding,
+//!   executing, and slicing — the paper's deployment story: encrypted
+//!   weights live in (device) memory, decode happens inside the compute
+//!   graph at a fixed rate.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::io::sqnn_file::SqnnModel;
-use crate::runtime::{LoadedExecutable, Runtime, Tensor};
+use crate::runtime::parallel::{CacheStats, DecodeConfig, ParallelDecoder};
+use crate::runtime::{Runtime, Tensor};
+
+#[cfg(feature = "xla")]
+use std::collections::BTreeMap;
+
+#[cfg(feature = "xla")]
+use anyhow::{anyhow, Context};
+
+#[cfg(feature = "xla")]
+use crate::runtime::LoadedExecutable;
+
+/// Decode-plan cache key for the (single) compressed FC1 layer.
+pub const FC1_LAYER_ID: u64 = 0;
 
 /// The static (per-model, batch-independent) graph inputs, in the HLO
 /// parameter order after `x`: m_xor, codes, patch, mask, alphas, b1,
 /// w2, b2, w3, b3.
 pub struct StaticInputs {
+    /// The tensors, in HLO parameter order.
     pub tensors: Vec<Tensor>,
 }
 
 /// Which serving-graph lowering to load (both are exported by `aot.py`
 /// and agree bit-for-bit; see `forward_compressed_ref` in
-/// `python/compile/model.py`).
+/// `python/compile/model.py`). Without the `xla` feature both variants
+/// resolve to the native backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GraphVariant {
     /// Interpreted-Pallas decode kernel — the TPU deployment graph, also
@@ -35,6 +55,7 @@ pub enum GraphVariant {
     Ref,
 }
 
+#[cfg(feature = "xla")]
 impl GraphVariant {
     fn file(&self, b: usize) -> String {
         match self {
@@ -44,30 +65,45 @@ impl GraphVariant {
     }
 }
 
+/// Engine construction knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineOptions {
+    /// Worker threads for XOR-plane decode (0 = auto: `SQNN_DECODE_THREADS`
+    /// env var, else the machine's core count).
+    pub decode_threads: usize,
+}
+
 /// A ready-to-serve engine.
 pub struct SqnnEngine {
+    /// The compressed model being served.
     pub model: SqnnModel,
-    /// Host-side copies of the static graph inputs (kept for debugging
-    /// and the decode-offload path; the serving path uses the staged
-    /// device buffers below).
-    pub statics: StaticInputs,
+    /// Supported batch buckets, ascending.
+    buckets: Vec<usize>,
+    backend: Backend,
+}
+
+enum Backend {
+    Native(NativeExec),
+    #[cfg(feature = "xla")]
+    Pjrt(PjrtExec),
+}
+
+/// Pure-Rust execution state: FC1 reconstructed through the sharded
+/// decoder once at load; dense tails used as-is.
+struct NativeExec {
+    /// Dense FC1 weights (rows × cols, row-major), decoded in parallel.
+    w1: Vec<f32>,
+    decoder: ParallelDecoder,
+}
+
+#[cfg(feature = "xla")]
+struct PjrtExec {
     /// Statics staged on-device once at load (§Perf: saves ~4 MB of host→
     /// device literal traffic per request).
     static_buffers: Vec<xla::PjRtBuffer>,
-    runtime_client: RuntimeHandle,
+    client: xla::PjRtClient,
     /// batch size → compiled executable.
     executables: BTreeMap<usize, LoadedExecutable>,
-}
-
-/// Cheap handle used to stage per-request activations.
-struct RuntimeHandle {
-    client: xla::PjRtClient,
-}
-
-impl RuntimeHandle {
-    fn stage(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
-    }
 }
 
 /// Build the static graph inputs from a compressed model.
@@ -121,81 +157,253 @@ pub fn build_static_inputs(model: &SqnnModel) -> StaticInputs {
     StaticInputs { tensors }
 }
 
+/// Validate the layer chain of a container before serving it natively:
+/// `from_bytes` checks each layer internally but not that consecutive
+/// layers agree, and `affine`'s zip would silently truncate a mismatch
+/// in release builds.
+fn validate_layer_chain(model: &SqnnModel) -> Result<()> {
+    let fc1 = &model.fc1;
+    if fc1.cols != model.meta.input_dim {
+        bail!("fc1 expects {} inputs but meta.input_dim is {}", fc1.cols, model.meta.input_dim);
+    }
+    if fc1.bias.len() != fc1.rows {
+        bail!("fc1 bias length {} != {} rows", fc1.bias.len(), fc1.rows);
+    }
+    let mut width = fc1.rows;
+    for d in &model.dense {
+        if d.cols != width {
+            bail!("dense layer {} expects {} inputs but previous layer emits {width}", d.name, d.cols);
+        }
+        width = d.rows;
+    }
+    if width != model.meta.num_classes {
+        bail!("model head emits {width} logits, expected {}", model.meta.num_classes);
+    }
+    Ok(())
+}
+
+fn sorted_buckets(batch_sizes: &[usize]) -> Result<Vec<usize>> {
+    let mut buckets: Vec<usize> = batch_sizes.iter().copied().filter(|&b| b > 0).collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    if buckets.is_empty() {
+        bail!("no batch sizes to serve");
+    }
+    Ok(buckets)
+}
+
 impl SqnnEngine {
-    /// Load a `.sqnn` model plus the HLO executables for `batch_sizes`
-    /// from `artifacts_dir`, preferring the XLA-fused `Ref` lowering and
-    /// falling back to the Pallas artifact when the ref file is absent.
+    /// Load a `.sqnn` model. With the `xla` feature this loads the HLO
+    /// executables for `batch_sizes` from `artifacts_dir`, preferring the
+    /// XLA-fused `Ref` lowering and falling back to the Pallas artifact
+    /// when the ref file is absent; without it, the native backend is
+    /// built and `artifacts_dir` is ignored.
     pub fn load(
         runtime: &Runtime,
         model: SqnnModel,
         artifacts_dir: impl AsRef<Path>,
         batch_sizes: &[usize],
     ) -> Result<Self> {
-        let dir = artifacts_dir.as_ref();
-        let variant = if !batch_sizes.is_empty()
-            && dir.join(GraphVariant::Ref.file(batch_sizes[0])).exists()
+        Self::load_with(runtime, model, artifacts_dir, batch_sizes, EngineOptions::default())
+    }
+
+    /// [`SqnnEngine::load`] with explicit [`EngineOptions`].
+    pub fn load_with(
+        runtime: &Runtime,
+        model: SqnnModel,
+        artifacts_dir: impl AsRef<Path>,
+        batch_sizes: &[usize],
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        #[cfg(feature = "xla")]
         {
-            GraphVariant::Ref
-        } else {
-            GraphVariant::Pallas
-        };
-        Self::load_variant(runtime, model, dir, batch_sizes, variant)
+            let dir = artifacts_dir.as_ref();
+            let variant = if !batch_sizes.is_empty()
+                && dir.join(GraphVariant::Ref.file(batch_sizes[0])).exists()
+            {
+                GraphVariant::Ref
+            } else {
+                GraphVariant::Pallas
+            };
+            Self::load_variant(runtime, model, dir, batch_sizes, variant, opts)
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = (runtime, artifacts_dir);
+            Self::load_native(model, batch_sizes, opts)
+        }
     }
 
     /// Load a specific graph variant (perf comparisons, TPU-path testing).
+    /// Without the `xla` feature every variant resolves to the native
+    /// backend (honoring `opts.decode_threads`), so comparisons degenerate
+    /// to identical runs.
     pub fn load_variant(
         runtime: &Runtime,
         model: SqnnModel,
         artifacts_dir: impl AsRef<Path>,
         batch_sizes: &[usize],
         variant: GraphVariant,
+        opts: EngineOptions,
     ) -> Result<Self> {
-        let dir = artifacts_dir.as_ref();
-        let mut executables = BTreeMap::new();
-        for &b in batch_sizes {
-            let path = dir.join(variant.file(b));
-            let exe = runtime
-                .load_hlo_text(&path)
-                .with_context(|| format!("loading serve graph for batch {b}"))?;
-            executables.insert(b, exe);
+        #[cfg(feature = "xla")]
+        {
+            // PJRT decodes in-graph; the native decode knob does not apply.
+            let _ = opts;
+            let dir = artifacts_dir.as_ref();
+            let mut executables = BTreeMap::new();
+            for &b in batch_sizes {
+                let path = dir.join(variant.file(b));
+                let exe = runtime
+                    .load_hlo_text(&path)
+                    .with_context(|| format!("loading serve graph for batch {b}"))?;
+                executables.insert(b, exe);
+            }
+            let buckets = sorted_buckets(batch_sizes)?;
+            let statics = build_static_inputs(&model);
+            let client = runtime.clone_client();
+            let static_buffers = statics
+                .tensors
+                .iter()
+                .map(|t| {
+                    client
+                        .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                        .map_err(anyhow::Error::from)
+                })
+                .collect::<Result<Vec<_>>>()
+                .context("staging static inputs on device")?;
+            Ok(SqnnEngine {
+                model,
+                buckets,
+                backend: Backend::Pjrt(PjrtExec { static_buffers, client, executables }),
+            })
         }
-        if executables.is_empty() {
-            bail!("no batch sizes to serve");
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = (runtime, artifacts_dir, variant);
+            Self::load_native(model, batch_sizes, opts)
         }
-        let statics = build_static_inputs(&model);
-        let handle = RuntimeHandle { client: runtime.clone_client() };
-        let static_buffers = statics
-            .tensors
-            .iter()
-            .map(|t| handle.stage(t))
-            .collect::<Result<Vec<_>>>()
-            .context("staging static inputs on device")?;
-        Ok(SqnnEngine { model, statics, static_buffers, runtime_client: handle, executables })
+    }
+
+    /// Build the native backend: decode FC1 through the thread-sharded
+    /// XOR decoder (plan cached under [`FC1_LAYER_ID`]) and keep the
+    /// reconstructed dense weights for serving.
+    pub fn load_native(
+        model: SqnnModel,
+        batch_sizes: &[usize],
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let buckets = sorted_buckets(batch_sizes)?;
+        validate_layer_chain(&model)?;
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(opts.decode_threads));
+        let bits = decoder.decode_layer(FC1_LAYER_ID, &model.fc1.planes);
+        let w1 = model.fc1.reconstruct_dense_from(&bits);
+        Ok(SqnnEngine {
+            model,
+            buckets,
+            backend: Backend::Native(NativeExec { w1, decoder }),
+        })
+    }
+
+    /// Materialize the static graph inputs for this model on demand
+    /// (debugging / decode-offload; the PJRT backend stages its own copy
+    /// on-device at load, and the native backend never needs them).
+    pub fn static_inputs(&self) -> StaticInputs {
+        build_static_inputs(&self.model)
+    }
+
+    /// Backend identifier: `"native"` or `"pjrt"`.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Native(_) => "native",
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Worker threads the native decode path uses (`None` on PJRT).
+    pub fn decode_threads(&self) -> Option<usize> {
+        match &self.backend {
+            Backend::Native(ne) => Some(ne.decoder.threads()),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
+    /// Decode-plan cache counters (`None` on PJRT).
+    pub fn decode_cache_stats(&self) -> Option<CacheStats> {
+        match &self.backend {
+            Backend::Native(ne) => Some(ne.decoder.cache_stats()),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => None,
+        }
     }
 
     /// Supported batch buckets (ascending).
     pub fn buckets(&self) -> Vec<usize> {
-        self.executables.keys().copied().collect()
+        self.buckets.clone()
     }
 
     /// Smallest bucket that fits `n` requests (or the largest bucket —
     /// callers split bigger batches).
     pub fn pick_bucket(&self, n: usize) -> usize {
-        for (&b, _) in &self.executables {
+        for &b in &self.buckets {
             if b >= n {
                 return b;
             }
         }
-        *self.executables.keys().next_back().unwrap()
+        *self.buckets.last().unwrap()
     }
 
     /// Run one batch of inputs (each of length `input_dim`); returns one
     /// logit vector per input. Splits over buckets as needed.
     pub fn infer(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match &self.backend {
+            Backend::Native(ne) => self.infer_native(ne, inputs),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(pe) => self.infer_pjrt(pe, inputs),
+        }
+    }
+
+    /// Native forward: relu(x·W1ᵀ+b1) → relu(·W2ᵀ+b2) → … → ·Wlastᵀ+blast
+    /// (matches `forward_dense` in `python/compile/model.py`).
+    fn infer_native(&self, ne: &NativeExec, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let in_dim = self.model.meta.input_dim;
+        let n_cls = self.model.meta.num_classes;
+        let fc1 = &self.model.fc1;
+        let mut out = Vec::with_capacity(inputs.len());
+        for (k, row) in inputs.iter().enumerate() {
+            if row.len() != in_dim {
+                bail!("input {k} has length {} != {in_dim}", row.len());
+            }
+            // ReLU after every layer except the last — FC1 included, so
+            // an (unusual but representable) model with no dense tail
+            // returns raw FC1 logits unclamped.
+            let n_dense = self.model.dense.len();
+            let mut h = affine(&ne.w1, fc1.rows, fc1.cols, row, &fc1.bias);
+            if n_dense > 0 {
+                relu(&mut h);
+            }
+            for (di, d) in self.model.dense.iter().enumerate() {
+                h = affine(&d.w, d.rows, d.cols, &h, &d.b);
+                if di + 1 < n_dense {
+                    relu(&mut h);
+                }
+            }
+            if h.len() != n_cls {
+                bail!("model head emits {} logits, expected {n_cls}", h.len());
+            }
+            out.push(h);
+        }
+        Ok(out)
+    }
+
+    #[cfg(feature = "xla")]
+    fn infer_pjrt(&self, pe: &PjrtExec, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let in_dim = self.model.meta.input_dim;
         let n_cls = self.model.meta.num_classes;
         let mut out = Vec::with_capacity(inputs.len());
-        let max_bucket = *self.executables.keys().next_back().unwrap();
+        let max_bucket = *self.buckets.last().unwrap();
         let mut i = 0;
         while i < inputs.len() {
             let take = (inputs.len() - i).min(max_bucket);
@@ -208,12 +416,14 @@ impl SqnnEngine {
                 }
                 x[k * in_dim..(k + 1) * in_dim].copy_from_slice(row);
             }
-            let exe = self.executables.get(&bucket).ok_or_else(|| anyhow!("no bucket"))?;
+            let exe = pe.executables.get(&bucket).ok_or_else(|| anyhow!("no bucket"))?;
             // Stage only the activations; statics live on-device already.
-            let x_buf = self.runtime_client.stage(&Tensor::new(vec![bucket, in_dim], x))?;
-            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.static_buffers.len());
+            let xt = Tensor::new(vec![bucket, in_dim], x);
+            let x_buf = pe.client.buffer_from_host_buffer::<f32>(&xt.data, &xt.shape, None)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(1 + pe.static_buffers.len());
             args.push(&x_buf);
-            args.extend(self.static_buffers.iter());
+            args.extend(pe.static_buffers.iter());
             let logits = exe.run_buffers(&args)?;
             if logits.data.len() != bucket * n_cls {
                 bail!("unexpected logits size {}", logits.data.len());
@@ -243,10 +453,34 @@ impl SqnnEngine {
     }
 }
 
+/// `y = W x + b` for a row-major `rows × cols` matrix.
+fn affine(w: &[f32], rows: usize, cols: usize, x: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(b.len(), rows);
+    let mut y = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let wrow = &w[r * cols..(r + 1) * cols];
+        let mut acc = b[r];
+        for (wv, xv) in wrow.iter().zip(x) {
+            acc += wv * xv;
+        }
+        y.push(acc);
+    }
+    y
+}
+
+fn relu(xs: &mut [f32]) {
+    for x in xs {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gf2::BitVec;
     use crate::io::sqnn_file::{CompressedLayer, DenseLayer, ModelMeta};
     use crate::rng::Rng;
     use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
@@ -343,5 +577,86 @@ mod tests {
         for j in 0..n {
             assert!((w_float[j] - w_codec[j]).abs() < 1e-6, "j={j}");
         }
+    }
+
+    #[test]
+    fn native_engine_serves_toy_model() {
+        let m = toy_model();
+        let engine = SqnnEngine::load_native(
+            m.clone(),
+            &[4, 1, 4],
+            EngineOptions { decode_threads: 2 },
+        )
+        .unwrap();
+        assert_eq!(engine.backend_name(), "native");
+        assert_eq!(engine.buckets(), vec![1, 4]);
+        assert_eq!(engine.pick_bucket(3), 4);
+        assert_eq!(engine.pick_bucket(9), 4);
+        assert_eq!(engine.decode_threads(), Some(2));
+        let st = engine.decode_cache_stats().unwrap();
+        assert_eq!(st.misses, 1, "one plan build for FC1");
+
+        // Reference forward from the codec-reconstructed dense weights.
+        let w1 = m.fc1.reconstruct_dense();
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut h1 = vec![0.0f32; 6];
+        for r in 0..6 {
+            let mut acc = m.fc1.bias[r];
+            for c in 0..32 {
+                acc += w1[r * 32 + c] * x[c];
+            }
+            h1[r] = acc.max(0.0);
+        }
+        let mut h2 = vec![0.0f32; 3];
+        for r in 0..3 {
+            let mut acc = m.dense[0].b[r];
+            for c in 0..6 {
+                acc += m.dense[0].w[r * 6 + c] * h1[c];
+            }
+            h2[r] = acc.max(0.0);
+        }
+        let mut logits = vec![0.0f32; 2];
+        for r in 0..2 {
+            let mut acc = m.dense[1].b[r];
+            for c in 0..3 {
+                acc += m.dense[1].w[r * 3 + c] * h2[c];
+            }
+            logits[r] = acc;
+        }
+
+        let got = engine.infer(&[x.clone()]).unwrap();
+        assert_eq!(got.len(), 1);
+        for c in 0..2 {
+            assert!((got[0][c] - logits[c]).abs() < 1e-5, "logit {c}");
+        }
+        // Batch composition must not change single-input results.
+        let batch = engine.infer(&[x.clone(), x.clone(), x]).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0], got[0]);
+        // Malformed input is rejected, not UB.
+        assert!(engine.infer(&[vec![0.0; 31]]).is_err());
+        // classify agrees with argmax of infer.
+        let preds = engine.classify(&[vec![0.5; 32]]).unwrap();
+        assert!(preds[0] < 2);
+    }
+
+    #[test]
+    fn empty_batch_sizes_rejected() {
+        let m = toy_model();
+        assert!(SqnnEngine::load_native(m, &[], EngineOptions::default()).is_err());
+    }
+
+    #[test]
+    fn inconsistent_layer_chain_rejected() {
+        // Internally consistent dense layer whose input width disagrees
+        // with FC1's output width must be rejected at load, not served.
+        let mut m = toy_model();
+        m.dense[0].cols = 5;
+        m.dense[0].w = vec![0.1; 3 * 5];
+        assert!(SqnnEngine::load_native(m, &[1], EngineOptions::default()).is_err());
+        // Wrong head width is also rejected.
+        let mut m2 = toy_model();
+        m2.meta.num_classes = 4;
+        assert!(SqnnEngine::load_native(m2, &[1], EngineOptions::default()).is_err());
     }
 }

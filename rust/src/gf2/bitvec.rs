@@ -66,6 +66,7 @@ impl BitVec {
         self.len
     }
 
+    /// True iff the vector holds zero bits.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0

@@ -105,9 +105,27 @@ impl CompressedLayer {
         self.planes.iter().map(|p| enc.decrypt_plane(p)).collect()
     }
 
+    /// Decode every plane through the thread-sharded decoder, reusing (or
+    /// populating) `decoder`'s plan cache under `layer_id`. Bit-identical
+    /// to [`CompressedLayer::decode_planes`].
+    pub fn decode_planes_parallel(
+        &self,
+        decoder: &crate::runtime::parallel::ParallelDecoder,
+        layer_id: u64,
+    ) -> Vec<BitVec> {
+        decoder.decode_layer(layer_id, &self.planes)
+    }
+
     /// Reconstruct the dense f32 weight matrix (pruned → 0).
     pub fn reconstruct_dense(&self) -> Vec<f32> {
-        let bits = self.decode_planes();
+        self.reconstruct_dense_from(&self.decode_planes())
+    }
+
+    /// Reconstruct the dense matrix from already-decoded bit-planes (the
+    /// serving path decodes them in parallel first; see
+    /// [`CompressedLayer::decode_planes_parallel`]).
+    pub fn reconstruct_dense_from(&self, bits: &[BitVec]) -> Vec<f32> {
+        assert_eq!(bits.len(), self.planes.len(), "plane count mismatch");
         let n = self.rows * self.cols;
         let mut w = vec![0.0f32; n];
         for (i, plane) in bits.iter().enumerate() {

@@ -7,16 +7,20 @@
 //! short seeds for a fixed XOR-gate network, decoded at a fixed rate with
 //! perfect load balance, plus the substrates the paper measures against
 //! (CSR, Viterbi encoding), the pruning/quantization pipeline that produces
-//! SQNNs, a cycle-level decoder simulator, and a Rust inference coordinator
-//! that serves compressed models through AOT-compiled XLA executables.
+//! SQNNs, a cycle-level decoder simulator, a thread-sharded parallel decode
+//! runtime, and a Rust inference coordinator that serves compressed models
+//! (natively by default; through AOT-compiled XLA executables with the
+//! `xla` feature).
 //!
 //! See `DESIGN.md` for the module ↔ paper-section map and `EXPERIMENTS.md`
 //! for reproduced tables/figures.
 
 pub mod benchutil;
 pub mod coordinator;
+#[warn(missing_docs)]
 pub mod gf2;
 pub mod rng;
+#[warn(missing_docs)]
 pub mod runtime;
 pub mod server;
 pub mod util;
@@ -27,4 +31,5 @@ pub mod simulator;
 pub mod sparse;
 pub mod viterbi;
 pub mod quant;
+#[warn(missing_docs)]
 pub mod xorenc;

@@ -13,7 +13,9 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use sqnn_xor::coordinator::{compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, SqnnEngine};
+use sqnn_xor::coordinator::{
+    compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, EngineOptions, SqnnEngine,
+};
 use sqnn_xor::io::npy::read_npy;
 use sqnn_xor::io::sqnn_file::SqnnModel;
 use sqnn_xor::runtime::Runtime;
@@ -49,6 +51,14 @@ fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> 
     flags.get(key).map(String::as_str).unwrap_or(default)
 }
 
+fn engine_options(flags: &HashMap<String, String>) -> Result<EngineOptions> {
+    Ok(EngineOptions {
+        decode_threads: flag(flags, "decode-threads", "0")
+            .parse()
+            .context("bad --decode-threads")?,
+    })
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
@@ -81,7 +91,11 @@ fn print_help() {
            verify    --artifacts DIR --model M.sqnn     lossless + served-accuracy check\n\
            info      --model M.sqnn                     container statistics\n\
            serve     --artifacts DIR --model M.sqnn --port 7433   TCP inference server\n\
-           demo      --artifacts DIR                    compress + serve a demo batch"
+           demo      --artifacts DIR                    compress + serve a demo batch\n\
+         \n\
+         decode knobs (verify/serve/demo):\n\
+           --decode-threads N   XOR-decode worker threads (0 = auto; also\n\
+                                settable via SQNN_DECODE_THREADS)"
     );
 }
 
@@ -160,7 +174,13 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
     // 2. served accuracy == pipeline accuracy
     let (xs, ys) = load_eval_set(&artifacts)?;
     let runtime = Runtime::cpu()?;
-    let engine = SqnnEngine::load(&runtime, model, &artifacts, &meta.batch_sizes)?;
+    let engine =
+        SqnnEngine::load_with(&runtime, model, &artifacts, &meta.batch_sizes, engine_options(flags)?)?;
+    println!(
+        "engine backend: {} (decode threads: {:?})",
+        engine.backend_name(),
+        engine.decode_threads()
+    );
     let preds = engine.classify(&xs)?;
     let correct = preds.iter().zip(&ys).filter(|(p, y)| **p == **y as usize).count();
     let acc = correct as f64 / ys.len() as f64;
@@ -188,10 +208,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         ),
     };
     let batch_sizes = meta.batch_sizes.clone();
+    let opts = engine_options(flags)?;
     let coordinator = Coordinator::spawn(policy, move || {
         let runtime = Runtime::cpu()?;
         let model = SqnnModel::load(&model_path)?;
-        SqnnEngine::load(&runtime, model, &artifacts, &batch_sizes)
+        SqnnEngine::load_with(&runtime, model, &artifacts, &batch_sizes, opts)
     })?;
     let server = Server::start(coordinator.handle.clone(), &format!("127.0.0.1:{port}"))?;
     println!("serving on 127.0.0.1:{} (Ctrl-C to stop)", server.port);
@@ -209,7 +230,13 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     println!("  {:.3} bits/weight, ratio {:.2}x", st.bits_per_weight(), st.ratio());
     let (xs, ys) = load_eval_set(&artifacts)?;
     let runtime = Runtime::cpu()?;
-    let engine = SqnnEngine::load(&runtime, model, &artifacts, &meta.batch_sizes)?;
+    let engine =
+        SqnnEngine::load_with(&runtime, model, &artifacts, &meta.batch_sizes, engine_options(flags)?)?;
+    println!(
+        "engine backend: {} (decode threads: {:?})",
+        engine.backend_name(),
+        engine.decode_threads()
+    );
     let n = xs.len().min(256);
     let preds = engine.classify(&xs[..n])?;
     let correct = preds.iter().zip(&ys[..n]).filter(|(p, y)| **p == **y as usize).count();

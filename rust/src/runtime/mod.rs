@@ -1,117 +1,104 @@
-//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//! Execution runtimes for compressed-model inference.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT). The interchange
-//! format is HLO *text* — jax ≥ 0.5 emits protos with 64-bit instruction
-//! ids that this XLA rejects; the text parser reassigns ids (see
-//! /opt/xla-example/README.md). All exported graphs return a 1-tuple
-//! (`return_tuple=True` at lowering), unwrapped here.
+//! Two backends live here:
+//!
+//! * [`parallel`] — the pure-Rust decode runtime: a thread-sharded
+//!   XOR-plane decoder with a per-layer decode-plan cache. This is what
+//!   the default build serves through, and the software analogue of the
+//!   paper's "decoding through XOR-gate network … in a parallel manner"
+//!   (§3.1): every worker decodes its own contiguous tile of output rows
+//!   at the same fixed rate, so load balance is perfect by construction.
+//! * [`pjrt`] (feature `xla`) — the PJRT runtime: load AOT-lowered HLO
+//!   text, compile once, execute many. Requires the vendored `xla` crate
+//!   (xla_extension 0.5.1, CPU PJRT); see `rust/Cargo.toml` for how to
+//!   enable it. Without the feature, [`Runtime`] is a thin native marker
+//!   whose [`Runtime::load_hlo_text`] reports that XLA is unavailable, so
+//!   every caller compiles unchanged and falls back to the native engine
+//!   backend in `coordinator::engine`.
 
-use std::path::Path;
+pub mod parallel;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-/// A PJRT client + the executables loaded into it.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{LoadedExecutable, Runtime};
 
-/// One compiled HLO module ready to execute.
-pub struct LoadedExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-/// A host-side f32 tensor (row-major) convertible to/from XLA literals.
+/// A host-side f32 tensor (row-major), the interchange type between the
+/// engine, the native backend, and (when enabled) XLA literals.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major elements; `data.len() == shape.iter().product()`.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Construct from a shape and matching row-major data.
+    ///
+    /// Panics if the element count does not match the shape.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
-    }
 }
 
+/// Native (no-XLA) runtime marker. Construction always succeeds; it
+/// carries no device state. The engine's native backend does all real
+/// work in plain Rust (see `coordinator::engine`).
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    _private: (),
+}
+
+/// Placeholder for a compiled HLO module in native builds. Never
+/// constructed: [`Runtime::load_hlo_text`] always errors without the
+/// `xla` feature, so [`LoadedExecutable::run`] is unreachable.
+#[cfg(not(feature = "xla"))]
+pub struct LoadedExecutable {
+    /// Module name (file stem of the HLO text it was loaded from).
+    pub name: String,
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
 impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    /// Create the native CPU runtime (always succeeds).
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(Runtime { _private: () })
     }
 
-    /// Upload a tensor to the device once; the returned buffer can be
-    /// passed to [`LoadedExecutable::run_buffers`] any number of times
-    /// (the §Perf fix: static model inputs should not be re-uploaded per
-    /// request).
-    pub fn to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
-    }
-
+    /// Backend identifier (`"native-cpu"` without the `xla` feature).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
-    /// Clone the underlying PJRT client handle (shares the runtime).
-    pub fn clone_client(&self) -> xla::PjRtClient {
-        self.client.clone()
-    }
-
-    /// Load + compile an HLO text file produced by `python/compile/aot.py`.
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedExecutable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    /// HLO execution requires the `xla` feature; this always errors in
+    /// native builds so callers fall back to the native engine backend.
+    pub fn load_hlo_text(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> anyhow::Result<LoadedExecutable> {
+        anyhow::bail!(
+            "cannot load HLO {}: built without the `xla` feature (native backend only)",
+            path.as_ref().display()
         )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(LoadedExecutable {
-            exe,
-            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
-        })
     }
 }
 
+#[cfg(not(feature = "xla"))]
 impl LoadedExecutable {
-    /// Execute with f32 tensors; the module must return a 1-tuple whose
-    /// element is an f32 array, returned as a [`Tensor`] (shape flattened
-    /// to the element count — callers know their logical shape).
-    pub fn run(&self, args: &[Tensor]) -> Result<Tensor> {
-        let literals: Vec<xla::Literal> =
-            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        Self::unpack(result)
-    }
-
-    /// Execute with pre-staged device buffers (hot path; see
-    /// [`Runtime::to_device`]).
-    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Tensor> {
-        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
-        Self::unpack(result)
-    }
-
-    fn unpack(result: xla::Literal) -> Result<Tensor> {
-        let out = result.to_tuple1()?;
-        let shape = out.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = out.to_vec::<f32>()?;
-        Ok(Tensor::new(dims, data))
+    /// Execute with f32 tensors. Unreachable in native builds (no
+    /// constructor exists), kept so call sites compile unchanged.
+    pub fn run(&self, _args: &[Tensor]) -> anyhow::Result<Tensor> {
+        anyhow::bail!("executable '{}' cannot run: built without the `xla` feature", self.name)
     }
 }
 
@@ -119,56 +106,25 @@ impl LoadedExecutable {
 mod tests {
     use super::*;
 
-    /// HLO text for `f(x, y) = (x + y,)` over f32[2,2], hand-written in the
-    /// dialect the 0.5.1 parser accepts — keeps the runtime tests
-    /// independent of the Python build path.
-    const ADD_HLO: &str = r#"HloModule add_test, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
-
-ENTRY main {
-  p0 = f32[2,2]{1,0} parameter(0)
-  p1 = f32[2,2]{1,0} parameter(1)
-  sum = f32[2,2]{1,0} add(p0, p1)
-  ROOT out = (f32[2,2]{1,0}) tuple(sum)
-}
-"#;
-
-    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
-        let dir = std::env::temp_dir().join("sqnn_runtime_tests");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join(name);
-        std::fs::write(&p, text).unwrap();
-        p
-    }
-
-    #[test]
-    fn load_and_execute_handwritten_hlo() {
-        let rt = Runtime::cpu().unwrap();
-        assert_eq!(rt.platform(), "cpu");
-        let path = write_tmp("add.hlo.txt", ADD_HLO);
-        let exe = rt.load_hlo_text(&path).unwrap();
-        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let y = Tensor::new(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]);
-        let out = exe.run(&[x, y]).unwrap();
-        assert_eq!(out.shape, vec![2, 2]);
-        assert_eq!(out.data, vec![11.0, 22.0, 33.0, 44.0]);
-    }
-
-    #[test]
-    fn bad_hlo_is_an_error() {
-        let rt = Runtime::cpu().unwrap();
-        let path = write_tmp("bad.hlo.txt", "this is not hlo");
-        assert!(rt.load_hlo_text(&path).is_err());
-    }
-
-    #[test]
-    fn missing_file_is_an_error() {
-        let rt = Runtime::cpu().unwrap();
-        assert!(rt.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
-    }
-
     #[test]
     fn tensor_shape_validation() {
         let r = std::panic::catch_unwind(|| Tensor::new(vec![2, 3], vec![0.0; 5]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn tensor_zeros_shape() {
+        let t = Tensor::zeros(vec![3, 4]);
+        assert_eq!(t.data.len(), 12);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn native_runtime_reports_platform_and_rejects_hlo() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "native-cpu");
+        let err = rt.load_hlo_text("/nonexistent/x.hlo.txt").unwrap_err();
+        assert!(format!("{err:#}").contains("xla"), "{err:#}");
     }
 }

@@ -1,0 +1,380 @@
+//! Thread-sharded XOR-plane decoding — the serving-side decode runtime.
+//!
+//! The paper's decoder is an array of XOR gates that expands every
+//! `n_in`-bit seed into `n_out` plane bits at a fixed rate, "in a parallel
+//! manner" with full memory-bandwidth usage (§3.1, Fig 3). The software
+//! analogue here shards a plane's slice range across a scoped worker pool:
+//! each worker owns a *contiguous tile of output rows* (slices), decodes
+//! its seeds through the shared [`XorNetwork`] column tables with u64-word
+//! GF(2) ops from [`gf2::bitvec`](crate::gf2), and applies its `d_patch`
+//! flips locally — no cross-thread synchronization exists inside a plane,
+//! because every slice writes a disjoint bit range. Worker tiles are
+//! spliced into the output by the calling thread (an `O(bits/64)` word
+//! copy, negligible next to the decode itself).
+//!
+//! Because the per-slice computation is identical to the serial decoder
+//! ([`XorEncoder::decrypt_plane`](crate::xorenc::XorEncoder)), the
+//! parallel output is **bit-identical** to the serial output — including
+//! don't-care positions, which are a deterministic function of the seed.
+//!
+//! [`PlanCache`] keys reusable decode state ("plans") by layer id so the
+//! serving hot path regenerates the `M⊕` column tables once per layer, not
+//! once per request.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::gf2::BitVec;
+use crate::xorenc::{EncryptedPlane, XorNetwork};
+
+/// Environment variable overriding the worker count (`0`/unset = one
+/// worker per available core).
+pub const THREADS_ENV: &str = "SQNN_DECODE_THREADS";
+
+/// Decode-runtime configuration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeConfig {
+    /// Worker threads per plane decode. `0` = resolve automatically from
+    /// [`THREADS_ENV`] or `std::thread::available_parallelism()`.
+    pub threads: usize,
+}
+
+impl DecodeConfig {
+    /// Automatic sizing (env override, then core count).
+    pub fn auto() -> Self {
+        Self::default()
+    }
+
+    /// Fixed worker count (`n >= 1`; `0` behaves like [`DecodeConfig::auto`]).
+    pub fn with_threads(n: usize) -> Self {
+        DecodeConfig { threads: n }
+    }
+
+    /// Resolve the effective worker count (always `>= 1`).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Ok(v) = std::env::var(THREADS_ENV) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Reusable decode state for one layer: the XOR network regenerated for
+/// that layer's `(n_in, n_out, seed)` design point.
+#[derive(Clone, Debug)]
+pub struct DecodePlan {
+    net: XorNetwork,
+}
+
+impl DecodePlan {
+    /// Build the plan for a plane's design point (regenerates `M⊕` from
+    /// the seed — the decoder-side half of the paper's "the network itself
+    /// costs no model storage").
+    pub fn for_plane(p: &EncryptedPlane) -> DecodePlan {
+        DecodePlan { net: XorNetwork::generate(p.n_in, p.n_out, p.seed) }
+    }
+
+    /// True iff this plan decodes planes with `p`'s design point.
+    pub fn matches(&self, p: &EncryptedPlane) -> bool {
+        self.net.n_in() == p.n_in && self.net.n_out() == p.n_out && self.net.seed() == p.seed
+    }
+
+    /// The regenerated XOR-gate network.
+    pub fn network(&self) -> &XorNetwork {
+        &self.net
+    }
+
+    /// Slice width decoded per step.
+    pub fn n_out(&self) -> usize {
+        self.net.n_out()
+    }
+}
+
+/// Cache hit/miss counters (observability for the serving path).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Plan lookups answered from the cache.
+    pub hits: u64,
+    /// Plan lookups that (re)built the network tables.
+    pub misses: u64,
+}
+
+/// Decode-plan cache keyed by layer id.
+///
+/// A layer's planes all share one `(n_in, n_out, seed)` design point, so
+/// one plan serves every quantization bit-plane of that layer. A lookup
+/// whose cached plan no longer matches the plane's design point (e.g. the
+/// model was hot-swapped) transparently rebuilds.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    slots: Mutex<HashMap<u64, Arc<DecodePlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the plan for `layer_id`, building (or rebuilding) it from
+    /// `plane`'s design point when absent or stale.
+    pub fn plan_for(&self, layer_id: u64, plane: &EncryptedPlane) -> Arc<DecodePlan> {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(plan) = slots.get(&layer_id) {
+            if plan.matches(plane) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return plan.clone();
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(DecodePlan::for_plane(plane));
+        slots.insert(layer_id, plan.clone());
+        plan
+    }
+
+    /// Number of cached layer plans.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when no plans are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss counters since construction.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Serial reference decode through a prebuilt plan. Identical math to
+/// [`XorEncoder::decrypt_plane`](crate::xorenc::XorEncoder::decrypt_plane),
+/// minus the per-call network regeneration.
+pub fn decode_plane_serial(plan: &DecodePlan, enc: &EncryptedPlane) -> BitVec {
+    assert!(plan.matches(enc), "decode plan does not match the plane's design point");
+    // One tile spanning every slice — the parallel path runs the same
+    // loop per tile, which is what makes the two bit-identical.
+    decode_tile(plan, enc, 0, enc.codes.len())
+}
+
+/// Thread-sharded decode: slices are partitioned into `threads` contiguous
+/// tiles, each decoded by its own scoped worker with zero intra-plane
+/// synchronization. Output is bit-identical to [`decode_plane_serial`].
+pub fn decode_plane_parallel(
+    plan: &DecodePlan,
+    enc: &EncryptedPlane,
+    threads: usize,
+) -> BitVec {
+    assert!(plan.matches(enc), "decode plan does not match the plane's design point");
+    let l = enc.codes.len();
+    let workers = threads.max(1).min(l);
+    if workers <= 1 {
+        return decode_plane_serial(plan, enc);
+    }
+    let n_out = plan.n_out();
+
+    // Contiguous tile bounds: worker i owns slices [bounds[i], bounds[i+1]).
+    let base_chunk = l / workers;
+    let remainder = l % workers;
+    let mut bounds = Vec::with_capacity(workers + 1);
+    bounds.push(0usize);
+    for i in 0..workers {
+        bounds.push(bounds[i] + base_chunk + usize::from(i < remainder));
+    }
+
+    let mut out = BitVec::zeros(enc.plane_len);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (k0, k1) = (bounds[w], bounds[w + 1]);
+            handles.push(scope.spawn(move || decode_tile(plan, enc, k0, k1)));
+        }
+        for (w, h) in handles.into_iter().enumerate() {
+            let seg = h.join().expect("decode worker panicked");
+            let start_bit = bounds[w] * n_out;
+            out.splice_from(start_bit, &seg, seg.len());
+        }
+    });
+    out
+}
+
+/// Decode slices `[k0, k1)` into a tile-local bit vector (bit 0 of the
+/// result = bit `k0 * n_out` of the plane).
+fn decode_tile(plan: &DecodePlan, enc: &EncryptedPlane, k0: usize, k1: usize) -> BitVec {
+    let n_out = plan.n_out();
+    let start_bit = k0 * n_out;
+    let end_bit = (k1 * n_out).min(enc.plane_len);
+    let mut seg = BitVec::zeros(end_bit - start_bit);
+    let mut tmp = BitVec::zeros(n_out);
+    for k in k0..k1 {
+        plan.net.decode_into(enc.codes[k], &mut tmp);
+        for &p in &enc.patches[k] {
+            tmp.flip(p as usize);
+        }
+        let base = k * n_out;
+        let len = n_out.min(enc.plane_len - base);
+        seg.splice_from(base - start_bit, &tmp, len);
+    }
+    seg
+}
+
+/// The engine-facing decoder: a plan cache plus a resolved thread count.
+#[derive(Debug)]
+pub struct ParallelDecoder {
+    cache: PlanCache,
+    threads: usize,
+}
+
+impl ParallelDecoder {
+    /// Build a decoder with the given configuration.
+    pub fn new(cfg: DecodeConfig) -> Self {
+        ParallelDecoder { cache: PlanCache::new(), threads: cfg.effective_threads() }
+    }
+
+    /// Resolved worker count used per plane decode.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Decode one plane of `layer_id`, reusing that layer's cached plan.
+    pub fn decode_plane(&self, layer_id: u64, enc: &EncryptedPlane) -> BitVec {
+        let plan = self.cache.plan_for(layer_id, enc);
+        decode_plane_parallel(&plan, enc, self.threads)
+    }
+
+    /// Decode every quantization bit-plane of a layer (planes share one
+    /// design point, hence one cached plan).
+    pub fn decode_layer(&self, layer_id: u64, planes: &[EncryptedPlane]) -> Vec<BitVec> {
+        planes.iter().map(|p| self.decode_plane(layer_id, p)).collect()
+    }
+
+    /// Plan-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+    fn encrypted(n_in: usize, n_out: usize, len: usize, s: f64, seed: u64) -> EncryptedPlane {
+        let mut rng = Rng::new(seed);
+        let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed: seed ^ 0xABCD, block_slices: 0 });
+        let plane = BitPlane::synthetic(len, s, &mut rng);
+        enc.encrypt_plane(&plane)
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_identical() {
+        for &(n_in, n_out, len) in &[
+            (10usize, 32usize, 10usize),    // shorter than one slice
+            (10, 32, 32 * 7),               // exact slice multiple
+            (20, 200, 200 * 13 + 57),       // partial tail slice
+            (8, 16, 16 * 100),              // many small slices
+        ] {
+            let ep = encrypted(n_in, n_out, len, 0.85, len as u64);
+            let plan = DecodePlan::for_plane(&ep);
+            let serial = decode_plane_serial(&plan, &ep);
+            for threads in [1usize, 2, 3, 4, 8, 64] {
+                let par = decode_plane_parallel(&plan, &ep, threads);
+                assert_eq!(par.len(), serial.len());
+                assert_eq!(
+                    par.words(),
+                    serial.words(),
+                    "n_in={n_in} n_out={n_out} len={len} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_encoder_decrypt() {
+        let mut rng = Rng::new(77);
+        let enc = XorEncoder::new(EncryptConfig { n_in: 20, n_out: 100, seed: 5, block_slices: 0 });
+        let plane = BitPlane::synthetic(25_000, 0.9, &mut rng);
+        let ep = enc.encrypt_plane(&plane);
+        let reference = enc.decrypt_plane(&ep);
+        let plan = DecodePlan::for_plane(&ep);
+        let par = decode_plane_parallel(&plan, &ep, 4);
+        assert_eq!(par.words(), reference.words());
+        assert!(plane.matches(&par), "parallel decode must stay lossless");
+    }
+
+    #[test]
+    fn empty_plane_decodes_to_empty() {
+        let ep = encrypted(8, 16, 0, 0.5, 1);
+        let plan = DecodePlan::for_plane(&ep);
+        assert_eq!(decode_plane_parallel(&plan, &ep, 8).len(), 0);
+    }
+
+    #[test]
+    fn plan_cache_reuses_and_rebuilds() {
+        let cache = PlanCache::new();
+        let a = encrypted(10, 32, 1000, 0.8, 2);
+        let p1 = cache.plan_for(7, &a);
+        let p2 = cache.plan_for(7, &a);
+        assert!(Arc::ptr_eq(&p1, &p2), "same layer id + design point must hit");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        // A different design point under the same layer id rebuilds.
+        let b = encrypted(12, 48, 1000, 0.8, 3);
+        let p3 = cache.plan_for(7, &b);
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert!(p3.matches(&b) && !p3.matches(&a));
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.len(), 1);
+        // Distinct layer ids occupy distinct slots.
+        cache.plan_for(8, &a);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn decoder_facade_decodes_through_cache() {
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(3));
+        assert_eq!(decoder.threads(), 3);
+        let mut rng = Rng::new(9);
+        let enc = XorEncoder::new(EncryptConfig { n_in: 10, n_out: 40, seed: 11, block_slices: 0 });
+        let p0 = enc.encrypt_plane(&BitPlane::synthetic(4_000, 0.9, &mut rng));
+        let p1 = enc.encrypt_plane(&BitPlane::synthetic(4_000, 0.9, &mut rng));
+        let decoded = decoder.decode_layer(0, &[p0.clone(), p1.clone()]);
+        assert_eq!(decoded.len(), 2);
+        assert_eq!(decoded[0].words(), enc.decrypt_plane(&p0).words());
+        assert_eq!(decoded[1].words(), enc.decrypt_plane(&p1).words());
+        let st = decoder.cache_stats();
+        assert_eq!(st.misses, 1, "one plan build for the layer");
+        assert_eq!(st.hits, 1, "second plane reuses the plan");
+    }
+
+    #[test]
+    fn mismatched_plan_is_rejected() {
+        let a = encrypted(10, 32, 320, 0.8, 4);
+        let b = encrypted(12, 48, 480, 0.8, 5);
+        let plan = DecodePlan::for_plane(&a);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decode_plane_parallel(&plan, &b, 2)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn config_resolution() {
+        assert_eq!(DecodeConfig::with_threads(5).effective_threads(), 5);
+        assert!(DecodeConfig::auto().effective_threads() >= 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! PJRT runtime (feature `xla`): load AOT-lowered HLO text, compile once,
+//! execute many.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT). The interchange
+//! format is HLO *text* — jax ≥ 0.5 emits protos with 64-bit instruction
+//! ids that this XLA rejects; the text parser reassigns ids. All exported
+//! graphs return a 1-tuple (`return_tuple=True` at lowering), unwrapped
+//! here.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Tensor;
+
+/// A PJRT client + the executables loaded into it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module ready to execute.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Module name (file stem of the HLO text it was loaded from).
+    pub name: String,
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Upload a tensor to the device once; the returned buffer can be
+    /// passed to [`LoadedExecutable::run_buffers`] any number of times
+    /// (the §Perf fix: static model inputs should not be re-uploaded per
+    /// request).
+    pub fn to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
+    }
+
+    /// Backend identifier reported by PJRT (`"cpu"` for the CPU plugin).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Clone the underlying PJRT client handle (shares the runtime).
+    pub fn clone_client(&self) -> xla::PjRtClient {
+        self.client.clone()
+    }
+
+    /// Load + compile an HLO text file produced by `python/compile/aot.py`.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(LoadedExecutable {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl LoadedExecutable {
+    /// Execute with f32 tensors; the module must return a 1-tuple whose
+    /// element is an f32 array, returned as a [`Tensor`] (shape flattened
+    /// to the element count — callers know their logical shape).
+    pub fn run(&self, args: &[Tensor]) -> Result<Tensor> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        Self::unpack(result)
+    }
+
+    /// Execute with pre-staged device buffers (hot path; see
+    /// [`Runtime::to_device`]).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Tensor> {
+        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        Self::unpack(result)
+    }
+
+    fn unpack(result: xla::Literal) -> Result<Tensor> {
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// HLO text for `f(x, y) = (x + y,)` over f32[2,2], hand-written in the
+    /// dialect the 0.5.1 parser accepts — keeps the runtime tests
+    /// independent of the Python build path.
+    const ADD_HLO: &str = r#"HloModule add_test, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main {
+  p0 = f32[2,2]{1,0} parameter(0)
+  p1 = f32[2,2]{1,0} parameter(1)
+  sum = f32[2,2]{1,0} add(p0, p1)
+  ROOT out = (f32[2,2]{1,0}) tuple(sum)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sqnn_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_execute_handwritten_hlo() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        let path = write_tmp("add.hlo.txt", ADD_HLO);
+        let exe = rt.load_hlo_text(&path).unwrap();
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = Tensor::new(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        let out = exe.run(&[x, y]).unwrap();
+        assert_eq!(out.shape, vec![2, 2]);
+        assert_eq!(out.data, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn bad_hlo_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        let path = write_tmp("bad.hlo.txt", "this is not hlo");
+        assert!(rt.load_hlo_text(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}

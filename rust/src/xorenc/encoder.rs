@@ -38,8 +38,11 @@ impl Default for EncryptConfig {
 /// One encrypted bit-plane: seeds + patch data (the on-device format).
 #[derive(Clone, Debug)]
 pub struct EncryptedPlane {
+    /// Seed-vector width the plane was encrypted with.
     pub n_in: usize,
+    /// Slice width decoded per step.
     pub n_out: usize,
+    /// PRNG seed fixing the `M⊕` the decoder must regenerate.
     pub seed: u64,
     /// Original flattened length `mn` (the last slice may be partial).
     pub plane_len: usize,
@@ -98,20 +101,25 @@ pub struct XorEncoder {
 /// Per-slice encryption result (exposed for the exhaustive-search ablation).
 #[derive(Clone, Debug)]
 pub struct SliceEncryption {
+    /// The seed vector `w^c` (low `n_in` bits).
     pub code: u64,
+    /// Patch positions within the slice.
     pub d_patch: Vec<u32>,
 }
 
 impl XorEncoder {
+    /// Build the encoder/decoder pair for a design point (generates `M⊕`).
     pub fn new(cfg: EncryptConfig) -> Self {
         let net = XorNetwork::generate(cfg.n_in, cfg.n_out, cfg.seed);
         XorEncoder { cfg, net }
     }
 
+    /// The design point this encoder was built for.
     pub fn config(&self) -> &EncryptConfig {
         &self.cfg
     }
 
+    /// The generated XOR-gate network.
     pub fn network(&self) -> &XorNetwork {
         &self.net
     }

@@ -47,14 +47,17 @@ impl XorNetwork {
         XorNetwork { n_in, n_out, seed, rows, cols }
     }
 
+    /// Seed-vector width (matrix columns).
     pub fn n_in(&self) -> usize {
         self.n_in
     }
 
+    /// Decoded slice width (matrix rows).
     pub fn n_out(&self) -> usize {
         self.n_out
     }
 
+    /// PRNG seed the network was generated from.
     pub fn seed(&self) -> u64 {
         self.seed
     }

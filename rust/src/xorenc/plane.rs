@@ -82,6 +82,7 @@ impl BitPlane {
         self.bits.len()
     }
 
+    /// True iff the plane holds zero positions.
     pub fn is_empty(&self) -> bool {
         self.bits.len() == 0
     }

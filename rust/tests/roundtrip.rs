@@ -1,0 +1,150 @@
+//! Property tests for the `.sqnn` container round-trip and for
+//! parallel-vs-serial decode equivalence (pure Rust; no artifacts needed).
+
+use sqnn_xor::gf2::BitVec;
+use sqnn_xor::io::sqnn_file::{CompressedLayer, DenseLayer, ModelMeta, SqnnModel};
+use sqnn_xor::rng::Rng;
+use sqnn_xor::runtime::parallel::{
+    decode_plane_parallel, decode_plane_serial, DecodeConfig, DecodePlan, ParallelDecoder,
+};
+use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+/// Build a random compressed model: prune/quantize-shaped planes, random
+/// dense tails. Returns the model plus the original (pre-encryption)
+/// bit-planes for losslessness checks.
+fn random_model(trial: u64, rng: &mut Rng) -> (SqnnModel, Vec<BitPlane>) {
+    let rows = 4 + (trial % 7) as usize;
+    let cols = 32 + 8 * (trial % 5) as usize;
+    let nq = 1 + (trial % 3) as usize;
+    let n_in = 8 + (trial % 4) as usize * 4;
+    let n_out = n_in * (2 + (trial % 4) as usize);
+    let seed = 1000 + trial;
+    let sparsity = 0.6 + 0.08 * (trial % 4) as f64;
+
+    let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed, block_slices: 0 });
+    let mask_plane = BitPlane::synthetic(rows * cols, sparsity, rng);
+    let mask = mask_plane.care.clone();
+    let mut planes = Vec::new();
+    let mut encrypted = Vec::new();
+    for _ in 0..nq {
+        let bits = BitVec::from_fn(rows * cols, |j| mask.get(j) && rng.next_bit());
+        let plane = BitPlane::new(bits, mask.clone());
+        encrypted.push(enc.encrypt_plane(&plane));
+        planes.push(plane);
+    }
+
+    let h2 = 3 + (trial % 3) as usize;
+    let n_cls = 2 + (trial % 3) as usize;
+    let model = SqnnModel {
+        meta: ModelMeta {
+            input_dim: cols,
+            hidden1: rows,
+            hidden2: h2,
+            num_classes: n_cls,
+            fc1_sparsity: sparsity,
+            fc1_nq: nq,
+            n_in,
+            n_out,
+            xor_seed: seed,
+        },
+        fc1: CompressedLayer {
+            rows,
+            cols,
+            planes: encrypted,
+            alphas: (0..nq).map(|i| 0.5 / (i + 1) as f32).collect(),
+            mask,
+            bias: (0..rows).map(|r| r as f32 * 0.01).collect(),
+        },
+        dense: vec![
+            DenseLayer {
+                name: "w2".into(),
+                rows: h2,
+                cols: rows,
+                w: (0..h2 * rows).map(|_| rng.next_gaussian() as f32 * 0.1).collect(),
+                b: vec![0.0; h2],
+            },
+            DenseLayer {
+                name: "w3".into(),
+                rows: n_cls,
+                cols: h2,
+                w: (0..n_cls * h2).map(|_| rng.next_gaussian() as f32 * 0.1).collect(),
+                b: vec![0.0; n_cls],
+            },
+        ],
+    };
+    (model, planes)
+}
+
+/// encode → serialize → deserialize → decode must reproduce the original
+/// bit-planes exactly on every care position, and the decoded bit vectors
+/// (including don't-cares) must be identical pre- and post-serialization.
+#[test]
+fn property_sqnn_file_roundtrip_preserves_decode() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..25u64 {
+        let (model, originals) = random_model(trial, &mut rng);
+        let bytes = model.to_bytes();
+        let back = SqnnModel::from_bytes(&bytes).unwrap_or_else(|e| {
+            panic!("trial {trial}: deserialize failed: {e:#}");
+        });
+        assert_eq!(back.meta, model.meta, "trial {trial}: meta drift");
+        assert_eq!(back.fc1.rows, model.fc1.rows);
+        assert_eq!(back.fc1.alphas, model.fc1.alphas);
+
+        let before = model.fc1.decode_planes();
+        let after = back.fc1.decode_planes();
+        assert_eq!(before.len(), after.len());
+        for (q, (a, b)) in before.iter().zip(&after).enumerate() {
+            assert_eq!(
+                a.words(),
+                b.words(),
+                "trial {trial} plane {q}: decode changed across serialization"
+            );
+            assert!(
+                originals[q].matches(b),
+                "trial {trial} plane {q}: care bits not reproduced after round-trip"
+            );
+        }
+        // Dense tails and mask survive byte-exactly.
+        assert_eq!(back.fc1.mask.words(), model.fc1.mask.words());
+        for (da, db) in model.dense.iter().zip(&back.dense) {
+            assert_eq!(da.w, db.w);
+            assert_eq!(da.b, db.b);
+            assert_eq!(da.name, db.name);
+        }
+    }
+}
+
+/// The thread-sharded decoder must agree bit-for-bit with the serial
+/// decoder for every plane of every random model, at several worker
+/// counts, both through raw plans and through the cached-decoder facade.
+#[test]
+fn property_parallel_decode_equals_serial() {
+    let mut rng = Rng::new(0xDECODE);
+    let decoder = ParallelDecoder::new(DecodeConfig::with_threads(4));
+    for trial in 0..25u64 {
+        let (model, originals) = random_model(trial, &mut rng);
+        for (q, ep) in model.fc1.planes.iter().enumerate() {
+            let plan = DecodePlan::for_plane(ep);
+            let serial = decode_plane_serial(&plan, ep);
+            for threads in [1usize, 2, 3, 5, 16] {
+                let par = decode_plane_parallel(&plan, ep, threads);
+                assert_eq!(
+                    par.words(),
+                    serial.words(),
+                    "trial {trial} plane {q} threads {threads}: divergence"
+                );
+            }
+            assert!(originals[q].matches(&serial), "trial {trial} plane {q}: lossy");
+        }
+        // Facade path (plan cache keyed by layer id).
+        let via_cache = model.fc1.decode_planes_parallel(&decoder, trial);
+        let reference = model.fc1.decode_planes();
+        for (q, (a, b)) in via_cache.iter().zip(&reference).enumerate() {
+            assert_eq!(a.words(), b.words(), "trial {trial} plane {q}: cache path diverged");
+        }
+    }
+    let st = decoder.cache_stats();
+    assert_eq!(st.misses, 25, "one plan build per layer id");
+    assert!(st.hits >= 1, "multi-plane layers must reuse their plan");
+}
