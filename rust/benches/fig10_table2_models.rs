@@ -78,18 +78,14 @@ fn main() {
 
     // Real trained LeNet-style FC1 from the end-to-end bundle, if present.
     if let Ok(model) = sqnn_xor::coordinator::compress_bundle("artifacts") {
-        let st = model.fc1.quant_stats();
-        let fm = sqnn_xor::prune::factorize_greedy(
-            &model.fc1.mask,
-            model.fc1.rows,
-            model.fc1.cols,
-            64,
-        );
+        let fc1 = model.first_encrypted().expect("bundle has an encrypted head");
+        let st = fc1.quant_stats();
+        let fm = sqnn_xor::prune::factorize_greedy(&fc1.mask, fc1.rows, fc1.cols, 64);
         out.push(Row {
             name: "MLP-FC1 (real, e2e bundle)".to_string(),
             index_bpw: fm.index_bits_per_weight(),
             quant_bpw: st.bits_per_weight(),
-            baseline: (model.meta.fc1_nq + 1) as f64,
+            baseline: (fc1.planes.len() + 1) as f64,
         });
     }
 

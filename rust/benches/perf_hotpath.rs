@@ -4,6 +4,8 @@
 //! §Perf before/after log.
 
 use sqnn_xor::benchutil::{bench, print_table, write_csv};
+use sqnn_xor::coordinator::{DecodeMode, EngineOptions, SqnnEngine};
+use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
 use sqnn_xor::rng::Rng;
 use sqnn_xor::runtime::parallel::{decode_plane_parallel, decode_plane_serial, DecodePlan};
 use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
@@ -109,6 +111,80 @@ fn main() {
             format!("{:.2}", 10_000.0 * 392.0 / r.mean_s / 1e9),
             "Gbit/s".into(),
         ]);
+    }
+
+    // --- eager vs per-batch serving (layer-graph engine, no artifacts) ---
+    // Two encrypted layers decoded through the plan cache: Eager decodes
+    // once at load, PerBatch re-decodes on every batch (the in-graph
+    // streaming-decode model). Outputs must be bit-identical; the sweep
+    // quantifies what streaming decode costs per batch.
+    {
+        let model = synthetic_layer_graph(
+            0xBE7C,
+            256,
+            &[
+                SynthEncrypted { out_dim: 128, sparsity: 0.9, n_in: 16, n_out: 120, nq: 1 },
+                SynthEncrypted { out_dim: 64, sparsity: 0.85, n_in: 12, n_out: 60, nq: 2 },
+            ],
+            &[32],
+            10,
+        );
+        let batch = 16usize;
+        let mut rng2 = Rng::new(77);
+        let xs: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..256).map(|_| rng2.next_gaussian() as f32 * 0.5).collect())
+            .collect();
+        let mut eager_mean = 0.0f64;
+        for threads in [1usize, 4] {
+            for mode in [DecodeMode::Eager, DecodeMode::PerBatch] {
+                let engine = SqnnEngine::load_native(
+                    model.clone(),
+                    &[batch],
+                    EngineOptions { decode_threads: threads, decode_mode: mode },
+                )
+                .expect("load native engine");
+                let r = bench(&format!("engine {mode:?} t={threads} b{batch}"), 2, 10, || {
+                    std::hint::black_box(engine.infer(&xs).unwrap());
+                });
+                if mode == DecodeMode::Eager {
+                    eager_mean = r.mean_s;
+                }
+                rows.push(vec![
+                    format!("engine native {mode:?} t={threads} batch={batch}"),
+                    format!("{:.3}", r.mean_s * 1e3),
+                    format!("{:.1}", batch as f64 / r.mean_s),
+                    "req/s".into(),
+                ]);
+                if mode == DecodeMode::PerBatch {
+                    println!(
+                        "per-batch decode overhead at t={threads}: {:.2}x eager latency",
+                        r.mean_s / eager_mean.max(1e-12)
+                    );
+                }
+            }
+        }
+        // The acceptance property, asserted on the bench workload too:
+        // per-batch serving is bit-identical to eager at every thread
+        // count.
+        let want = SqnnEngine::load_native(
+            model.clone(),
+            &[batch],
+            EngineOptions { decode_threads: 1, decode_mode: DecodeMode::Eager },
+        )
+        .unwrap()
+        .infer(&xs)
+        .unwrap();
+        for threads in [1usize, 2, 8] {
+            let got = SqnnEngine::load_native(
+                model.clone(),
+                &[batch],
+                EngineOptions { decode_threads: threads, decode_mode: DecodeMode::PerBatch },
+            )
+            .unwrap()
+            .infer(&xs)
+            .unwrap();
+            assert_eq!(got, want, "per-batch (t={threads}) must be bit-identical to eager");
+        }
     }
 
     // --- end-to-end engine latency (needs artifacts) ---

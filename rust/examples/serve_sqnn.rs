@@ -41,8 +41,9 @@ fn main() -> anyhow::Result<()> {
     let t = Instant::now();
     let model = compress_bundle(&artifacts)?;
     let compress_s = t.elapsed().as_secs_f64();
-    let st = model.fc1.quant_stats();
-    println!("\n[1] compression (Algorithm 1 over {} slices per plane):", model.fc1.planes[0].num_slices());
+    let fc1 = model.first_encrypted().expect("bundle has an encrypted head");
+    let st = fc1.quant_stats();
+    println!("\n[1] compression (Algorithm 1 over {} slices per plane):", fc1.planes[0].num_slices());
     println!(
         "    quant payload (B): {:.3} bits/weight  (ratio {:.2}x, {} patches)",
         st.bits_per_weight(),
@@ -50,9 +51,9 @@ fn main() -> anyhow::Result<()> {
         st.total_patches
     );
     // Index bits (A) via greedy binary-index factorization of the real mask.
-    let fm = factorize_greedy(&model.fc1.mask, model.fc1.rows, model.fc1.cols, 64);
+    let fm = factorize_greedy(&fc1.mask, fc1.rows, fc1.cols, 64);
     let approx = fm.materialize();
-    let stats = sqnn_xor::prune::mask_approx_stats(&model.fc1.mask, &approx);
+    let stats = sqnn_xor::prune::mask_approx_stats(&fc1.mask, &approx);
     println!(
         "    index (A), rank-64 factorization: {:.3} bits/weight (recall {:.3}) vs 1.0 dense",
         fm.index_bits_per_weight(),
@@ -63,18 +64,18 @@ fn main() -> anyhow::Result<()> {
         st.bits_per_weight() + fm.index_bits_per_weight(),
         (2.0 / (st.bits_per_weight() + fm.index_bits_per_weight())) as u32,
         compress_s,
-        model.fc1.rows as f64 * model.fc1.cols as f64 * meta.fc1_nq as f64 / compress_s / 1e6,
+        fc1.rows as f64 * fc1.cols as f64 * meta.fc1_nq as f64 / compress_s / 1e6,
     );
 
     // 2. Lossless check against the exported planes.
     let bits_arr = read_npy(format!("{artifacts}/weights/fc1_bits.npy"))?;
     let bits = bits_arr.as_u8()?;
-    let decoded = model.fc1.decode_planes();
-    let plane_len = model.fc1.rows * model.fc1.cols;
+    let decoded = fc1.decode_planes();
+    let plane_len = fc1.rows * fc1.cols;
     let mut mismatches = 0usize;
     for q in 0..meta.fc1_nq {
         for j in 0..plane_len {
-            if model.fc1.mask.get(j) && decoded[q].get(j) != (bits[q * plane_len + j] != 0) {
+            if fc1.mask.get(j) && decoded[q].get(j) != (bits[q * plane_len + j] != 0) {
                 mismatches += 1;
             }
         }

@@ -155,7 +155,11 @@ fn executor_loop(
         }
 
         let start = Instant::now();
-        let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+        // Move the inputs out of the batch (replies only need the channel
+        // + enqueue time) — cloning every vector here would put one
+        // allocation + copy per request on the hot path.
+        let inputs: Vec<Vec<f32>> =
+            batch.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
         match engine.infer(&inputs) {
             Ok(outputs) => {
                 let elapsed = start.elapsed();

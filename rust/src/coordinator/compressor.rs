@@ -12,7 +12,9 @@ use anyhow::{bail, Context, Result};
 use crate::gf2::BitVec;
 use crate::io::json;
 use crate::io::npy::read_npy;
-use crate::io::sqnn_file::{CompressedLayer, DenseLayer, ModelMeta, SqnnModel};
+use crate::io::sqnn_file::{
+    Activation, DenseLayer, EncryptedLayer, Layer, ModelMeta, SqnnModel,
+};
 use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
 
 /// Parsed `meta.json` from the Python pipeline.
@@ -97,40 +99,42 @@ pub fn compress_bundle(artifacts_dir: impl AsRef<Path>) -> Result<SqnnModel> {
     }
 
     let bias = read_npy(wdir.join("b1.npy"))?.as_f32()?.to_vec();
-    let mut dense = Vec::new();
-    for (wname, bname, r, c) in [
-        ("w2", "b2", meta.hidden2, meta.hidden1),
-        ("w3", "b3", meta.num_classes, meta.hidden2),
+    // Layer graph: the encrypted head (layer_id 0) + dense tails, with the
+    // pipeline's MLP activations (ReLU everywhere except the logit head).
+    let mut layers = vec![Layer::Encrypted(EncryptedLayer {
+        layer_id: 0,
+        name: "fc1".to_string(),
+        rows,
+        cols,
+        planes,
+        alphas,
+        mask,
+        bias,
+        activation: Activation::Relu,
+    })];
+    for (wname, bname, r, c, activation) in [
+        ("w2", "b2", meta.hidden2, meta.hidden1, Activation::Relu),
+        ("w3", "b3", meta.num_classes, meta.hidden2, Activation::Identity),
     ] {
         let w = read_npy(wdir.join(format!("{wname}.npy")))?;
         let b = read_npy(wdir.join(format!("{bname}.npy")))?;
         if w.shape != vec![r, c] {
             bail!("{wname} shape {:?} != [{r}, {c}]", w.shape);
         }
-        dense.push(DenseLayer {
+        layers.push(Layer::Dense(DenseLayer {
             name: wname.to_string(),
             rows: r,
             cols: c,
             w: w.as_f32()?.to_vec(),
             b: b.as_f32()?.to_vec(),
-        });
+            activation,
+        }));
     }
 
-    Ok(SqnnModel {
-        meta: ModelMeta {
-            input_dim: meta.input_dim,
-            hidden1: meta.hidden1,
-            hidden2: meta.hidden2,
-            num_classes: meta.num_classes,
-            fc1_sparsity: meta.fc1_sparsity,
-            fc1_nq: meta.fc1_nq,
-            n_in: meta.n_in,
-            n_out: meta.n_out,
-            xor_seed: meta.xor_seed,
-        },
-        fc1: CompressedLayer { rows, cols, planes, alphas, mask, bias },
-        dense,
-    })
+    Ok(SqnnModel::new(
+        ModelMeta { input_dim: meta.input_dim, num_classes: meta.num_classes },
+        layers,
+    ))
 }
 
 #[cfg(test)]
@@ -181,14 +185,20 @@ mod tests {
         let dir = tmpdir("basic");
         make_bundle(&dir, 8, 64, 2);
         let model = compress_bundle(&dir).unwrap();
-        assert_eq!(model.fc1.planes.len(), 2);
+        model.validate().unwrap();
+        assert_eq!(model.layers.len(), 3, "fc1 + two dense tails");
+        let fc1 = model.first_encrypted().unwrap();
+        assert_eq!(fc1.planes.len(), 2);
+        assert_eq!(fc1.layer_id, 0);
+        assert_eq!(fc1.activation, Activation::Relu);
+        assert_eq!(model.layers[2].activation(), Activation::Identity);
         // Decoded planes must match the bundle's bits on care positions.
         let bits_arr = read_npy(dir.join("weights/fc1_bits.npy")).unwrap();
         let bits_u8 = bits_arr.as_u8().unwrap();
-        let decoded = model.fc1.decode_planes();
+        let decoded = fc1.decode_planes();
         for q in 0..2 {
             for j in 0..8 * 64 {
-                if model.fc1.mask.get(j) {
+                if fc1.mask.get(j) {
                     assert_eq!(decoded[q].get(j), bits_u8[q * 8 * 64 + j] != 0, "q={q} j={j}");
                 }
             }

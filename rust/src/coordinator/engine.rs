@@ -1,23 +1,30 @@
-//! The serving engine: a compressed model + an execution backend.
+//! The serving engine: a compressed layer-graph model + an execution
+//! backend.
 //!
-//! At load time the engine materializes the *graph-side* tensors from the
-//! `.sqnn` container exactly once — codes, patch bit-planes (scattered from
-//! `d_patch`), `M⊕`, mask, alphas — then serves batches. Two backends:
+//! The engine executes an arbitrary layer chain ([`Layer::Encrypted`] /
+//! [`Layer::Dense`] / [`Layer::Csr`]) with per-layer activations. Two
+//! backends:
 //!
-//! * **native** (default): FC1 is reconstructed through the thread-sharded
-//!   XOR decoder (`runtime::parallel`, plan cache keyed by layer id) and
-//!   the MLP forward runs in plain Rust. No external runtime needed.
+//! * **native** (default): encrypted layers are materialized through the
+//!   thread-sharded XOR decoder (`runtime::parallel`, plan cache keyed by
+//!   each layer's `layer_id`) and the forward pass runs in plain Rust.
+//!   [`DecodeMode`] picks *when* decode happens: `Eager` decodes every
+//!   encrypted layer once at load; `PerBatch` re-decodes them on every
+//!   batch — the software model of the paper's in-graph fixed-rate decode
+//!   (§3.1, §6), exercising the plan cache on the hot path. Both modes are
+//!   bit-identical because the decode is deterministic.
 //! * **pjrt** (feature `xla`): batches execute through AOT-compiled XLA
 //!   executables, picking the smallest compiled batch bucket, padding,
-//!   executing, and slicing — the paper's deployment story: encrypted
-//!   weights live in (device) memory, decode happens inside the compute
-//!   graph at a fixed rate.
+//!   executing, and slicing — encrypted weights live in (device) memory,
+//!   decode happens inside the compute graph at a fixed rate. The HLO
+//!   lowering supports the classic topology (one encrypted head + dense
+//!   tails) only.
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::io::sqnn_file::SqnnModel;
+use crate::io::sqnn_file::{Layer, SqnnModel};
 use crate::runtime::parallel::{CacheStats, DecodeConfig, ParallelDecoder};
 use crate::runtime::{Runtime, Tensor};
 
@@ -30,12 +37,25 @@ use anyhow::{anyhow, Context};
 #[cfg(feature = "xla")]
 use crate::runtime::LoadedExecutable;
 
-/// Decode-plan cache key for the (single) compressed FC1 layer.
-pub const FC1_LAYER_ID: u64 = 0;
+/// When the native backend decodes encrypted layers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Decode every encrypted layer once at load and serve from the
+    /// cached dense weights (lowest steady-state latency).
+    #[default]
+    Eager,
+    /// Re-decode every encrypted layer through the plan cache on each
+    /// batch — streaming decode on the serving hot path, modeling the
+    /// paper's in-graph decoder. Output is bit-identical to [`Eager`]
+    /// at every thread count.
+    ///
+    /// [`Eager`]: DecodeMode::Eager
+    PerBatch,
+}
 
 /// The static (per-model, batch-independent) graph inputs, in the HLO
 /// parameter order after `x`: m_xor, codes, patch, mask, alphas, b1,
-/// w2, b2, w3, b3.
+/// then (w, b) per dense tail layer.
 pub struct StaticInputs {
     /// The tensors, in HLO parameter order.
     pub tensors: Vec<Tensor>,
@@ -71,6 +91,8 @@ pub struct EngineOptions {
     /// Worker threads for XOR-plane decode (0 = auto: `SQNN_DECODE_THREADS`
     /// env var, else the machine's core count).
     pub decode_threads: usize,
+    /// When encrypted layers are decoded (native backend only).
+    pub decode_mode: DecodeMode,
 }
 
 /// A ready-to-serve engine.
@@ -88,12 +110,19 @@ enum Backend {
     Pjrt(PjrtExec),
 }
 
-/// Pure-Rust execution state: FC1 reconstructed through the sharded
-/// decoder once at load; dense tails used as-is.
+/// Pure-Rust execution state: per-layer weight cache over the
+/// thread-sharded decoder.
 struct NativeExec {
-    /// Dense FC1 weights (rows × cols, row-major), decoded in parallel.
-    w1: Vec<f32>,
     decoder: ParallelDecoder,
+    mode: DecodeMode,
+    /// Materialized weights, parallel to `model.layers`, for layers whose
+    /// serving form differs from their stored form: decoded encrypted
+    /// layers (under [`DecodeMode::Eager`] only) and densified CSR
+    /// layers. `Layer::Dense` is always `None` — the forward pass borrows
+    /// its weights straight from the model instead of duplicating them —
+    /// and so are encrypted layers under [`DecodeMode::PerBatch`], which
+    /// re-materialize on every batch.
+    cached: Vec<Option<Vec<f32>>>,
 }
 
 #[cfg(feature = "xla")]
@@ -107,13 +136,31 @@ struct PjrtExec {
 }
 
 /// Build the static graph inputs from a compressed model.
-pub fn build_static_inputs(model: &SqnnModel) -> StaticInputs {
-    let meta = &model.meta;
-    let fc1 = &model.fc1;
-    let n_q = meta.fc1_nq;
-    let n_in = meta.n_in;
-    let n_out = meta.n_out;
-    let l = fc1.planes[0].codes.len();
+///
+/// The HLO lowering expresses the classic topology only — one encrypted
+/// layer at the head of the chain followed by dense tails; anything else
+/// (multiple encrypted layers, CSR layers) errors here and must be served
+/// through the native backend.
+pub fn build_static_inputs(model: &SqnnModel) -> Result<StaticInputs> {
+    let Some(Layer::Encrypted(fc1)) = model.layers.first() else {
+        bail!("HLO lowering requires an encrypted layer at the head of the chain");
+    };
+    let mut dense = Vec::new();
+    for l in &model.layers[1..] {
+        match l {
+            Layer::Dense(d) => dense.push(d),
+            other => bail!(
+                "HLO lowering cannot express layer {} (encrypted head + dense tails only)",
+                other.name()
+            ),
+        }
+    }
+
+    let p0 = &fc1.planes[0];
+    let n_q = fc1.planes.len();
+    let n_in = p0.n_in;
+    let n_out = p0.n_out;
+    let l = p0.codes.len();
 
     // M⊕ as f32 (n_out, n_in) — regenerated from the seed, exactly the
     // matrix the encoder used.
@@ -150,36 +197,11 @@ pub fn build_static_inputs(model: &SqnnModel) -> StaticInputs {
     let b1 = Tensor::new(vec![fc1.rows], fc1.bias.clone());
 
     let mut tensors = vec![m_xor, codes, patch, mask, alphas, b1];
-    for d in &model.dense {
+    for d in dense {
         tensors.push(Tensor::new(vec![d.rows, d.cols], d.w.clone()));
         tensors.push(Tensor::new(vec![d.rows], d.b.clone()));
     }
-    StaticInputs { tensors }
-}
-
-/// Validate the layer chain of a container before serving it natively:
-/// `from_bytes` checks each layer internally but not that consecutive
-/// layers agree, and `affine`'s zip would silently truncate a mismatch
-/// in release builds.
-fn validate_layer_chain(model: &SqnnModel) -> Result<()> {
-    let fc1 = &model.fc1;
-    if fc1.cols != model.meta.input_dim {
-        bail!("fc1 expects {} inputs but meta.input_dim is {}", fc1.cols, model.meta.input_dim);
-    }
-    if fc1.bias.len() != fc1.rows {
-        bail!("fc1 bias length {} != {} rows", fc1.bias.len(), fc1.rows);
-    }
-    let mut width = fc1.rows;
-    for d in &model.dense {
-        if d.cols != width {
-            bail!("dense layer {} expects {} inputs but previous layer emits {width}", d.name, d.cols);
-        }
-        width = d.rows;
-    }
-    if width != model.meta.num_classes {
-        bail!("model head emits {width} logits, expected {}", model.meta.num_classes);
-    }
-    Ok(())
+    Ok(StaticInputs { tensors })
 }
 
 fn sorted_buckets(batch_sizes: &[usize]) -> Result<Vec<usize>> {
@@ -236,8 +258,8 @@ impl SqnnEngine {
 
     /// Load a specific graph variant (perf comparisons, TPU-path testing).
     /// Without the `xla` feature every variant resolves to the native
-    /// backend (honoring `opts.decode_threads`), so comparisons degenerate
-    /// to identical runs.
+    /// backend (honoring `opts`), so comparisons degenerate to identical
+    /// runs.
     pub fn load_variant(
         runtime: &Runtime,
         model: SqnnModel,
@@ -248,7 +270,7 @@ impl SqnnEngine {
     ) -> Result<Self> {
         #[cfg(feature = "xla")]
         {
-            // PJRT decodes in-graph; the native decode knob does not apply.
+            // PJRT decodes in-graph; the native decode knobs do not apply.
             let _ = opts;
             let dir = artifacts_dir.as_ref();
             let mut executables = BTreeMap::new();
@@ -260,7 +282,7 @@ impl SqnnEngine {
                 executables.insert(b, exe);
             }
             let buckets = sorted_buckets(batch_sizes)?;
-            let statics = build_static_inputs(&model);
+            let statics = build_static_inputs(&model)?;
             let client = runtime.clone_client();
             let static_buffers = statics
                 .tensors
@@ -285,30 +307,43 @@ impl SqnnEngine {
         }
     }
 
-    /// Build the native backend: decode FC1 through the thread-sharded
-    /// XOR decoder (plan cached under [`FC1_LAYER_ID`]) and keep the
-    /// reconstructed dense weights for serving.
+    /// Build the native backend. Under [`DecodeMode::Eager`] every layer
+    /// is materialized once here (encrypted layers through the
+    /// thread-sharded XOR decoder, plan cached under their `layer_id`);
+    /// under [`DecodeMode::PerBatch`] encrypted layers stay encrypted and
+    /// are re-decoded on every batch.
     pub fn load_native(
         model: SqnnModel,
         batch_sizes: &[usize],
         opts: EngineOptions,
     ) -> Result<Self> {
         let buckets = sorted_buckets(batch_sizes)?;
-        validate_layer_chain(&model)?;
+        model.validate()?;
         let decoder = ParallelDecoder::new(DecodeConfig::with_threads(opts.decode_threads));
-        let bits = decoder.decode_layer(FC1_LAYER_ID, &model.fc1.planes);
-        let w1 = model.fc1.reconstruct_dense_from(&bits);
+        let cfg = DecodeConfig::with_threads(decoder.threads());
+        let mut cached = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            let materialize_now = match layer {
+                Layer::Encrypted(_) => opts.decode_mode == DecodeMode::Eager,
+                Layer::Dense(_) => false, // served straight from the model
+                Layer::Csr(_) => true,    // densified once
+            };
+            cached.push(
+                materialize_now.then(|| layer.materialize(decoder.cache(), &cfg).data),
+            );
+        }
         Ok(SqnnEngine {
             model,
             buckets,
-            backend: Backend::Native(NativeExec { w1, decoder }),
+            backend: Backend::Native(NativeExec { decoder, mode: opts.decode_mode, cached }),
         })
     }
 
     /// Materialize the static graph inputs for this model on demand
     /// (debugging / decode-offload; the PJRT backend stages its own copy
-    /// on-device at load, and the native backend never needs them).
-    pub fn static_inputs(&self) -> StaticInputs {
+    /// on-device at load, and the native backend never needs them). Errors
+    /// for topologies the HLO lowering cannot express.
+    pub fn static_inputs(&self) -> Result<StaticInputs> {
         build_static_inputs(&self.model)
     }
 
@@ -325,6 +360,16 @@ impl SqnnEngine {
     pub fn decode_threads(&self) -> Option<usize> {
         match &self.backend {
             Backend::Native(ne) => Some(ne.decoder.threads()),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
+    /// The native backend's decode scheduling (`None` on PJRT, which
+    /// always decodes in-graph).
+    pub fn decode_mode(&self) -> Option<DecodeMode> {
+        match &self.backend {
+            Backend::Native(ne) => Some(ne.mode),
             #[cfg(feature = "xla")]
             Backend::Pjrt(_) => None,
         }
@@ -365,30 +410,47 @@ impl SqnnEngine {
         }
     }
 
-    /// Native forward: relu(x·W1ᵀ+b1) → relu(·W2ᵀ+b2) → … → ·Wlastᵀ+blast
-    /// (matches `forward_dense` in `python/compile/model.py`).
+    /// Native forward over the layer chain: `h ← act_i(W_i h + b_i)` per
+    /// layer, with each layer's own activation.
     fn infer_native(&self, ne: &NativeExec, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let in_dim = self.model.meta.input_dim;
         let n_cls = self.model.meta.num_classes;
-        let fc1 = &self.model.fc1;
+        // Streaming decode: encrypted layers without cached weights
+        // (PerBatch mode) are re-materialized here, once per batch,
+        // through the shared plan cache.
+        let cfg = DecodeConfig::with_threads(ne.decoder.threads());
+        let fresh: Vec<Option<Vec<f32>>> = self
+            .model
+            .layers
+            .iter()
+            .zip(&ne.cached)
+            .map(|(layer, cached)| {
+                if cached.is_none() && matches!(layer, Layer::Encrypted(_)) {
+                    Some(layer.materialize(ne.decoder.cache(), &cfg).data)
+                } else {
+                    None
+                }
+            })
+            .collect();
         let mut out = Vec::with_capacity(inputs.len());
         for (k, row) in inputs.iter().enumerate() {
             if row.len() != in_dim {
                 bail!("input {k} has length {} != {in_dim}", row.len());
             }
-            // ReLU after every layer except the last — FC1 included, so
-            // an (unusual but representable) model with no dense tail
-            // returns raw FC1 logits unclamped.
-            let n_dense = self.model.dense.len();
-            let mut h = affine(&ne.w1, fc1.rows, fc1.cols, row, &fc1.bias);
-            if n_dense > 0 {
-                relu(&mut h);
-            }
-            for (di, d) in self.model.dense.iter().enumerate() {
-                h = affine(&d.w, d.rows, d.cols, &h, &d.b);
-                if di + 1 < n_dense {
-                    relu(&mut h);
-                }
+            let mut h: Vec<f32> = Vec::new();
+            for (li, layer) in self.model.layers.iter().enumerate() {
+                let w: &[f32] = match layer {
+                    // Dense layers serve from the model itself (no copy).
+                    Layer::Dense(d) => d.w.as_slice(),
+                    _ => match (&ne.cached[li], &fresh[li]) {
+                        (Some(w), _) | (None, Some(w)) => w.as_slice(),
+                        (None, None) => unreachable!("non-dense layers are cached or fresh"),
+                    },
+                };
+                let x: &[f32] = if li == 0 { row } else { &h };
+                let mut y = affine(w, layer.out_dim(), layer.in_dim(), x, layer.bias());
+                layer.activation().apply(&mut y);
+                h = y;
             }
             if h.len() != n_cls {
                 bail!("model head emits {} logits, expected {n_cls}", h.len());
@@ -470,77 +532,83 @@ fn affine(w: &[f32], rows: usize, cols: usize, x: &[f32], b: &[f32]) -> Vec<f32>
     y
 }
 
-fn relu(xs: &mut [f32]) {
-    for x in xs {
-        if *x < 0.0 {
-            *x = 0.0;
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::sqnn_file::{CompressedLayer, DenseLayer, ModelMeta};
+    use crate::io::sqnn_file::{Activation, DenseLayer, EncryptedLayer, ModelMeta};
+    use crate::models::synth::synthetic_encrypted_layer;
     use crate::rng::Rng;
-    use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
 
     fn toy_model() -> SqnnModel {
         let mut rng = Rng::new(9);
         let (rows, cols) = (6, 32);
-        let cfg = EncryptConfig { n_in: 8, n_out: 16, seed: 3, block_slices: 0 };
-        let enc = XorEncoder::new(cfg);
-        let plane = BitPlane::synthetic(rows * cols, 0.8, &mut rng);
-        let ep = enc.encrypt_plane(&plane);
-        SqnnModel {
-            meta: ModelMeta {
-                input_dim: cols,
-                hidden1: rows,
-                hidden2: 3,
-                num_classes: 2,
-                fc1_sparsity: 0.8,
-                fc1_nq: 1,
-                n_in: 8,
-                n_out: 16,
-                xor_seed: 3,
-            },
-            fc1: CompressedLayer {
-                rows,
-                cols,
-                planes: vec![ep],
-                alphas: vec![0.25],
-                mask: plane.care.clone(),
-                bias: vec![0.0; rows],
-            },
-            dense: vec![
-                DenseLayer { name: "w2".into(), rows: 3, cols: rows, w: vec![0.1; 18], b: vec![0.0; 3] },
-                DenseLayer { name: "w3".into(), rows: 2, cols: 3, w: vec![0.2; 6], b: vec![0.0; 2] },
+        let (fc1, _) = synthetic_encrypted_layer(
+            0,
+            "fc1",
+            rows,
+            cols,
+            1,
+            0.8,
+            8,
+            16,
+            3,
+            Activation::Relu,
+            &mut rng,
+        );
+        SqnnModel::new(
+            ModelMeta { input_dim: cols, num_classes: 2 },
+            vec![
+                Layer::Encrypted(fc1),
+                Layer::Dense(DenseLayer {
+                    name: "w2".into(),
+                    rows: 3,
+                    cols: rows,
+                    w: vec![0.1; 18],
+                    b: vec![0.0; 3],
+                    activation: Activation::Relu,
+                }),
+                Layer::Dense(DenseLayer {
+                    name: "w3".into(),
+                    rows: 2,
+                    cols: 3,
+                    w: vec![0.2; 6],
+                    b: vec![0.0; 2],
+                    activation: Activation::Identity,
+                }),
             ],
-        }
+        )
+    }
+
+    fn fc1(m: &SqnnModel) -> &EncryptedLayer {
+        m.first_encrypted().unwrap()
     }
 
     #[test]
     fn static_inputs_shapes_and_semantics() {
         let m = toy_model();
-        let s = build_static_inputs(&m);
+        let s = build_static_inputs(&m).unwrap();
         // m_xor, codes, patch, mask, alphas, b1, w2, b2, w3, b3
         assert_eq!(s.tensors.len(), 10);
         assert_eq!(s.tensors[0].shape, vec![16, 8]);
-        let l = m.fc1.planes[0].codes.len();
+        let l = fc1(&m).planes[0].codes.len();
         assert_eq!(s.tensors[1].shape, vec![1, l, 8]);
         assert_eq!(s.tensors[2].shape, vec![1, l, 16]);
         assert_eq!(s.tensors[3].shape, vec![6, 32]);
         // codes tensor bit j equals code bit j
-        for (slice, &code) in m.fc1.planes[0].codes.iter().enumerate() {
+        for (slice, &code) in fc1(&m).planes[0].codes.iter().enumerate() {
             for j in 0..8 {
                 let expect = f32::from((code >> j) & 1 == 1);
                 assert_eq!(s.tensors[1].data[slice * 8 + j], expect);
             }
         }
         // every d_patch entry appears in the patch tensor
-        let total_patches: usize = m.fc1.planes[0].patches.iter().map(|p| p.len()).sum();
+        let total_patches: usize = fc1(&m).planes[0].patches.iter().map(|p| p.len()).sum();
         let patch_ones = s.tensors[2].data.iter().filter(|&&x| x == 1.0).count();
         assert_eq!(patch_ones, total_patches);
+        // Non-classic topologies are refused, not mis-lowered.
+        let mut reordered = toy_model();
+        reordered.layers.swap(0, 1);
+        assert!(build_static_inputs(&reordered).is_err());
     }
 
     /// The graph-semantics check: decoding the static inputs with plain
@@ -549,15 +617,15 @@ mod tests {
     #[test]
     fn float_decode_matches_codec_decode() {
         let m = toy_model();
-        let s = build_static_inputs(&m);
-        let (n_out, n_in, l) = (16usize, 8usize, m.fc1.planes[0].codes.len());
+        let s = build_static_inputs(&m).unwrap();
+        let (n_out, n_in, l) = (16usize, 8usize, fc1(&m).planes[0].codes.len());
         let mxor = &s.tensors[0].data;
         let codes = &s.tensors[1].data;
         let patch = &s.tensors[2].data;
         let mask = &s.tensors[3].data;
         let alpha = s.tensors[4].data[0];
 
-        let n = m.fc1.rows * m.fc1.cols;
+        let n = fc1(&m).rows * fc1(&m).cols;
         let mut w_float = vec![0.0f32; n];
         for slice in 0..l {
             for o in 0..n_out {
@@ -573,7 +641,7 @@ mod tests {
                 }
             }
         }
-        let w_codec = m.fc1.reconstruct_dense();
+        let w_codec = fc1(&m).reconstruct_dense();
         for j in 0..n {
             assert!((w_float[j] - w_codec[j]).abs() < 1e-6, "j={j}");
         }
@@ -585,7 +653,7 @@ mod tests {
         let engine = SqnnEngine::load_native(
             m.clone(),
             &[4, 1, 4],
-            EngineOptions { decode_threads: 2 },
+            EngineOptions { decode_threads: 2, decode_mode: DecodeMode::Eager },
         )
         .unwrap();
         assert_eq!(engine.backend_name(), "native");
@@ -593,33 +661,38 @@ mod tests {
         assert_eq!(engine.pick_bucket(3), 4);
         assert_eq!(engine.pick_bucket(9), 4);
         assert_eq!(engine.decode_threads(), Some(2));
+        assert_eq!(engine.decode_mode(), Some(DecodeMode::Eager));
         let st = engine.decode_cache_stats().unwrap();
-        assert_eq!(st.misses, 1, "one plan build for FC1");
+        assert_eq!(st.misses, 1, "one plan build for fc1");
 
         // Reference forward from the codec-reconstructed dense weights.
-        let w1 = m.fc1.reconstruct_dense();
+        let l1 = fc1(&m);
+        let w1 = l1.reconstruct_dense();
         let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
         let mut h1 = vec![0.0f32; 6];
         for r in 0..6 {
-            let mut acc = m.fc1.bias[r];
+            let mut acc = l1.bias[r];
             for c in 0..32 {
                 acc += w1[r * 32 + c] * x[c];
             }
             h1[r] = acc.max(0.0);
         }
+        let (Layer::Dense(d2), Layer::Dense(d3)) = (&m.layers[1], &m.layers[2]) else {
+            panic!("toy model tails must be dense");
+        };
         let mut h2 = vec![0.0f32; 3];
         for r in 0..3 {
-            let mut acc = m.dense[0].b[r];
+            let mut acc = d2.b[r];
             for c in 0..6 {
-                acc += m.dense[0].w[r * 6 + c] * h1[c];
+                acc += d2.w[r * 6 + c] * h1[c];
             }
             h2[r] = acc.max(0.0);
         }
         let mut logits = vec![0.0f32; 2];
         for r in 0..2 {
-            let mut acc = m.dense[1].b[r];
+            let mut acc = d3.b[r];
             for c in 0..3 {
-                acc += m.dense[1].w[r * 3 + c] * h2[c];
+                acc += d3.w[r * 3 + c] * h2[c];
             }
             logits[r] = acc;
         }
@@ -641,6 +714,41 @@ mod tests {
     }
 
     #[test]
+    fn per_batch_decode_is_bit_identical_and_streams() {
+        let m = toy_model();
+        let eager = SqnnEngine::load_native(
+            m.clone(),
+            &[4],
+            EngineOptions { decode_threads: 3, decode_mode: DecodeMode::Eager },
+        )
+        .unwrap();
+        let streaming = SqnnEngine::load_native(
+            m,
+            &[4],
+            EngineOptions { decode_threads: 3, decode_mode: DecodeMode::PerBatch },
+        )
+        .unwrap();
+        assert_eq!(streaming.decode_mode(), Some(DecodeMode::PerBatch));
+        // PerBatch defers decode: nothing hits the plan cache until the
+        // first batch arrives.
+        let st0 = streaming.decode_cache_stats().unwrap();
+        assert_eq!(st0.hits + st0.misses, 0, "streaming engine decoded at load");
+
+        let xs: Vec<Vec<f32>> =
+            (0..3).map(|i| (0..32).map(|j| ((i * 32 + j) as f32 * 0.11).cos()).collect()).collect();
+        let a = eager.infer(&xs).unwrap();
+        let b = streaming.infer(&xs).unwrap();
+        assert_eq!(a, b, "per-batch decode must be bit-identical to eager");
+
+        // Every batch re-decodes: one plan miss then hits on later batches.
+        let st1 = streaming.decode_cache_stats().unwrap();
+        assert_eq!(st1.misses, 1);
+        streaming.infer(&xs).unwrap();
+        let st2 = streaming.decode_cache_stats().unwrap();
+        assert!(st2.hits > st1.hits, "second batch must reuse the cached plan");
+    }
+
+    #[test]
     fn empty_batch_sizes_rejected() {
         let m = toy_model();
         assert!(SqnnEngine::load_native(m, &[], EngineOptions::default()).is_err());
@@ -649,10 +757,12 @@ mod tests {
     #[test]
     fn inconsistent_layer_chain_rejected() {
         // Internally consistent dense layer whose input width disagrees
-        // with FC1's output width must be rejected at load, not served.
+        // with fc1's output width must be rejected at load, not served.
         let mut m = toy_model();
-        m.dense[0].cols = 5;
-        m.dense[0].w = vec![0.1; 3 * 5];
+        if let Layer::Dense(d) = &mut m.layers[1] {
+            d.cols = 5;
+            d.w = vec![0.1; 3 * 5];
+        }
         assert!(SqnnEngine::load_native(m, &[1], EngineOptions::default()).is_err());
         // Wrong head width is also rejected.
         let mut m2 = toy_model();

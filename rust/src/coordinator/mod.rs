@@ -13,6 +13,6 @@ pub mod metrics;
 pub use batcher::{BatchPolicy, Coordinator, CoordinatorHandle};
 pub use compressor::{compress_bundle, read_bundle_meta, BundleMeta};
 pub use engine::{
-    build_static_inputs, EngineOptions, GraphVariant, SqnnEngine, StaticInputs, FC1_LAYER_ID,
+    build_static_inputs, DecodeMode, EngineOptions, GraphVariant, SqnnEngine, StaticInputs,
 };
 pub use metrics::{Metrics, MetricsSnapshot};

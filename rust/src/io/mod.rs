@@ -9,4 +9,6 @@ pub mod sqnn_file;
 
 pub use json::Json;
 pub use npy::{read_npy, write_npy, NpyArray, NpyData};
-pub use sqnn_file::{CompressedLayer, DenseLayer, ModelMeta, SqnnModel};
+pub use sqnn_file::{
+    Activation, CsrLayer, DenseLayer, EncryptedLayer, Layer, ModelMeta, SqnnModel,
+};

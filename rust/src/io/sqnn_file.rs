@@ -1,91 +1,257 @@
-//! The `.sqnn` container: an XOR-compressed SQNN model on disk.
+//! The `.sqnn` container: an XOR-compressed model as an ordered layer graph.
 //!
-//! Layout (all little-endian, see `io::bytes`):
-//! magic `SQNN1\0`, meta block, one compressed layer (FC1: encrypted
-//! bit-planes + alphas + packed pruning mask + bias), then the dense tail
-//! layers. This is the artifact `sqnn compress` produces and the
-//! coordinator serves from.
+//! **v2 layout** (all little-endian, see `io::bytes`): magic `SQNN2\0`, a
+//! model-level meta block (`input_dim`, `num_classes`), then an ordered
+//! list of N layers. Each layer carries a kind tag ([`Layer::Encrypted`]
+//! XOR-plane layer, [`Layer::Dense`] tail, [`Layer::Csr`] sparse
+//! baseline), its own activation function, and its payload. Every
+//! encrypted layer owns its seed/patches/mask/alphas and a stable
+//! `layer_id` that keys the serving-side decode-plan cache.
+//!
+//! **v1 compatibility**: the legacy `SQNN1\0` single-FC1 container (one
+//! compressed layer + dense tails, ReLU between layers implied) is still
+//! readable — [`SqnnModel::from_bytes`] transparently upgrades it to the
+//! layer graph — and [`SqnnModel::to_v1_bytes`] can emit it for models
+//! whose topology the old format can express.
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::gf2::BitVec;
+use crate::runtime::parallel::{
+    decode_plane_parallel, DecodeConfig, ParallelDecoder, PlanCache,
+};
+use crate::runtime::Tensor;
+use crate::sparse::CsrMatrix;
 use crate::xorenc::{CompressionStats, EncryptConfig, EncryptedPlane, XorEncoder};
 
 use super::bytes::{ByteReader, ByteWriter};
 
-const MAGIC: &[u8; 6] = b"SQNN1\0";
+const MAGIC_V1: &[u8; 6] = b"SQNN1\0";
+const MAGIC_V2: &[u8; 6] = b"SQNN2\0";
 
-/// Model-level metadata carried in the container.
-#[derive(Clone, Debug, PartialEq)]
+const KIND_ENCRYPTED: u8 = 0;
+const KIND_DENSE: u8 = 1;
+const KIND_CSR: u8 = 2;
+
+/// Model-level metadata carried in the container (v2: everything
+/// layer-specific lives on the layer itself).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelMeta {
+    /// Width of the input vectors the first layer consumes.
     pub input_dim: usize,
-    pub hidden1: usize,
-    pub hidden2: usize,
+    /// Width of the logit vector the last layer emits.
     pub num_classes: usize,
-    pub fc1_sparsity: f64,
-    pub fc1_nq: usize,
-    pub n_in: usize,
-    pub n_out: usize,
-    pub xor_seed: u64,
 }
 
-/// The compressed FC1 layer.
+/// Per-layer activation function, applied to the layer's output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// No nonlinearity (typically the logit head).
+    Identity,
+    /// `max(0, x)` elementwise.
+    Relu,
+}
+
+impl Activation {
+    /// Apply the activation in place.
+    pub fn apply(self, xs: &mut [f32]) {
+        if let Activation::Relu = self {
+            for x in xs {
+                if *x < 0.0 {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Activation::Identity => 0,
+            Activation::Relu => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(Activation::Identity),
+            1 => Ok(Activation::Relu),
+            other => bail!("unknown activation tag {other}"),
+        }
+    }
+}
+
+/// An XOR-encrypted layer: one encrypted bit-plane per quantization bit,
+/// plus the pruning mask, per-plane scale factors, and bias.
 #[derive(Clone, Debug)]
-pub struct CompressedLayer {
+pub struct EncryptedLayer {
+    /// Stable decode-plan cache key; unique per encrypted layer in a model.
+    pub layer_id: u64,
+    /// Human-readable layer name (e.g. `"fc1"`).
+    pub name: String,
+    /// Output width.
     pub rows: usize,
+    /// Input width.
     pub cols: usize,
-    /// One encrypted plane per quantization bit.
+    /// One encrypted plane per quantization bit; all planes share one
+    /// `(n_in, n_out, seed)` design point.
     pub planes: Vec<EncryptedPlane>,
+    /// Per-plane scale factors (`alphas.len() == planes.len()`).
     pub alphas: Vec<f32>,
-    /// Packed pruning mask (rows·cols bits, row-major).
+    /// Packed pruning mask (`rows·cols` bits, row-major).
     pub mask: BitVec,
+    /// Bias (`rows` entries).
     pub bias: Vec<f32>,
+    /// Activation applied to this layer's output.
+    pub activation: Activation,
 }
 
 /// A dense (uncompressed) layer.
 #[derive(Clone, Debug)]
 pub struct DenseLayer {
+    /// Human-readable layer name (e.g. `"w2"`).
     pub name: String,
+    /// Output width.
     pub rows: usize,
+    /// Input width.
     pub cols: usize,
+    /// Row-major weights (`rows·cols` entries).
     pub w: Vec<f32>,
+    /// Bias (`rows` entries).
     pub b: Vec<f32>,
+    /// Activation applied to this layer's output.
+    pub activation: Activation,
 }
 
-/// A full model in the `.sqnn` format.
+/// A CSR sparse layer — the conventional-format baseline the paper
+/// measures against, representable in the same serving graph.
+#[derive(Clone, Debug)]
+pub struct CsrLayer {
+    /// Human-readable layer name.
+    pub name: String,
+    /// Sparse weights (`csr.rows × csr.cols`).
+    pub csr: CsrMatrix,
+    /// Bias (`csr.rows` entries).
+    pub bias: Vec<f32>,
+    /// Activation applied to this layer's output.
+    pub activation: Activation,
+}
+
+/// One node of the serving layer graph.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// XOR-encrypted layer, decoded through the plan cache at serve time.
+    Encrypted(EncryptedLayer),
+    /// Plain dense layer.
+    Dense(DenseLayer),
+    /// CSR sparse baseline layer.
+    Csr(CsrLayer),
+}
+
+impl Layer {
+    /// The layer's name.
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Encrypted(l) => &l.name,
+            Layer::Dense(l) => &l.name,
+            Layer::Csr(l) => &l.name,
+        }
+    }
+
+    /// Input width (columns of the weight matrix).
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Layer::Encrypted(l) => l.cols,
+            Layer::Dense(l) => l.cols,
+            Layer::Csr(l) => l.csr.cols,
+        }
+    }
+
+    /// Output width (rows of the weight matrix).
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Layer::Encrypted(l) => l.rows,
+            Layer::Dense(l) => l.rows,
+            Layer::Csr(l) => l.csr.rows,
+        }
+    }
+
+    /// The layer's bias vector.
+    pub fn bias(&self) -> &[f32] {
+        match self {
+            Layer::Encrypted(l) => &l.bias,
+            Layer::Dense(l) => &l.b,
+            Layer::Csr(l) => &l.bias,
+        }
+    }
+
+    /// The layer's activation function.
+    pub fn activation(&self) -> Activation {
+        match self {
+            Layer::Encrypted(l) => l.activation,
+            Layer::Dense(l) => l.activation,
+            Layer::Csr(l) => l.activation,
+        }
+    }
+
+    /// Materialize the dense `rows × cols` weight tensor of this layer.
+    ///
+    /// This is the uniform serving interface: encrypted layers decode
+    /// through `cache` (plan keyed by their `layer_id`, thread-sharded per
+    /// `cfg`), dense layers copy their weights, CSR layers expand. The
+    /// decode is deterministic, so repeated materialization is
+    /// bit-identical — which is what makes per-batch (streaming) decode
+    /// equivalent to eager decode.
+    pub fn materialize(&self, cache: &PlanCache, cfg: &DecodeConfig) -> Tensor {
+        match self {
+            Layer::Encrypted(l) => {
+                let threads = cfg.effective_threads();
+                let bits: Vec<BitVec> = l
+                    .planes
+                    .iter()
+                    .map(|p| {
+                        let plan = cache.plan_for(l.layer_id, p);
+                        decode_plane_parallel(&plan, p, threads)
+                    })
+                    .collect();
+                Tensor::new(vec![l.rows, l.cols], l.reconstruct_dense_from(&bits))
+            }
+            Layer::Dense(l) => Tensor::new(vec![l.rows, l.cols], l.w.clone()),
+            Layer::Csr(l) => {
+                Tensor::new(vec![l.csr.rows, l.csr.cols], l.csr.to_dense())
+            }
+        }
+    }
+}
+
+/// A full model in the `.sqnn` format: meta + an ordered layer chain.
 #[derive(Clone, Debug)]
 pub struct SqnnModel {
+    /// Model-level metadata.
     pub meta: ModelMeta,
-    pub fc1: CompressedLayer,
-    pub dense: Vec<DenseLayer>,
+    /// The serving chain, input to logits.
+    pub layers: Vec<Layer>,
 }
 
-impl CompressedLayer {
+impl EncryptedLayer {
     /// Total compressed bits of the quantization payload (Eq. 2 over all
     /// planes) — the "(B)" component of Fig 10.
     pub fn quant_stats(&self) -> CompressionStats {
-        let mut acc = CompressionStats {
-            code_bits: 0,
-            npatch_bits: 0,
-            dpatch_bits: 0,
-            total_bits: 0,
-            original_bits: 0,
-            total_patches: 0,
-            max_npatch: 0,
-        };
+        let mut acc = zero_stats();
         for p in &self.planes {
-            let s = p.stats();
-            acc.code_bits += s.code_bits;
-            acc.npatch_bits += s.npatch_bits;
-            acc.dpatch_bits += s.dpatch_bits;
-            acc.total_bits += s.total_bits;
-            acc.original_bits += s.original_bits;
-            acc.total_patches += s.total_patches;
-            acc.max_npatch = acc.max_npatch.max(s.max_npatch);
+            accumulate_stats(&mut acc, &p.stats());
         }
         acc
+    }
+
+    /// Pruning rate of this layer (fraction of masked-out positions).
+    pub fn sparsity(&self) -> f64 {
+        let n = self.rows * self.cols;
+        if n == 0 {
+            return 0.0;
+        }
+        1.0 - self.mask.count_ones() as f64 / n as f64
     }
 
     /// The encoder this layer was produced with (for decode).
@@ -106,14 +272,10 @@ impl CompressedLayer {
     }
 
     /// Decode every plane through the thread-sharded decoder, reusing (or
-    /// populating) `decoder`'s plan cache under `layer_id`. Bit-identical
-    /// to [`CompressedLayer::decode_planes`].
-    pub fn decode_planes_parallel(
-        &self,
-        decoder: &crate::runtime::parallel::ParallelDecoder,
-        layer_id: u64,
-    ) -> Vec<BitVec> {
-        decoder.decode_layer(layer_id, &self.planes)
+    /// populating) `decoder`'s plan cache under this layer's `layer_id`.
+    /// Bit-identical to [`EncryptedLayer::decode_planes`].
+    pub fn decode_planes_parallel(&self, decoder: &ParallelDecoder) -> Vec<BitVec> {
+        decoder.decode_layer(self.layer_id, &self.planes)
     }
 
     /// Reconstruct the dense f32 weight matrix (pruned → 0).
@@ -123,7 +285,7 @@ impl CompressedLayer {
 
     /// Reconstruct the dense matrix from already-decoded bit-planes (the
     /// serving path decodes them in parallel first; see
-    /// [`CompressedLayer::decode_planes_parallel`]).
+    /// [`EncryptedLayer::decode_planes_parallel`]).
     pub fn reconstruct_dense_from(&self, bits: &[BitVec]) -> Vec<f32> {
         assert_eq!(bits.len(), self.planes.len(), "plane count mismatch");
         let n = self.rows * self.cols;
@@ -145,75 +307,372 @@ impl CompressedLayer {
     }
 }
 
+fn zero_stats() -> CompressionStats {
+    CompressionStats {
+        code_bits: 0,
+        npatch_bits: 0,
+        dpatch_bits: 0,
+        total_bits: 0,
+        original_bits: 0,
+        total_patches: 0,
+        max_npatch: 0,
+    }
+}
+
+fn accumulate_stats(acc: &mut CompressionStats, s: &CompressionStats) {
+    acc.code_bits += s.code_bits;
+    acc.npatch_bits += s.npatch_bits;
+    acc.dpatch_bits += s.dpatch_bits;
+    acc.total_bits += s.total_bits;
+    acc.original_bits += s.original_bits;
+    acc.total_patches += s.total_patches;
+    acc.max_npatch = acc.max_npatch.max(s.max_npatch);
+}
+
 impl SqnnModel {
-    /// Serialize to bytes.
+    /// Assemble a model from meta + layer chain (no validation; call
+    /// [`SqnnModel::validate`] before serving).
+    pub fn new(meta: ModelMeta, layers: Vec<Layer>) -> Self {
+        SqnnModel { meta, layers }
+    }
+
+    /// Every encrypted layer, with its position in the chain.
+    pub fn encrypted_layers(&self) -> impl Iterator<Item = (usize, &EncryptedLayer)> {
+        self.layers.iter().enumerate().filter_map(|(i, l)| match l {
+            Layer::Encrypted(e) => Some((i, e)),
+            _ => None,
+        })
+    }
+
+    /// The first encrypted layer in the chain (the classic "FC1" slot),
+    /// if any.
+    pub fn first_encrypted(&self) -> Option<&EncryptedLayer> {
+        self.encrypted_layers().next().map(|(_, e)| e)
+    }
+
+    /// Aggregate Eq. 2 accounting over every encrypted layer.
+    pub fn quant_stats(&self) -> CompressionStats {
+        let mut acc = zero_stats();
+        for (_, e) in self.encrypted_layers() {
+            let s = e.quant_stats();
+            accumulate_stats(&mut acc, &s);
+        }
+        acc
+    }
+
+    /// Validate the layer chain end to end: consecutive widths must agree,
+    /// biases must match their layer's output width, and the chain must
+    /// map `input_dim` to `num_classes`. `from_bytes` checks each layer
+    /// internally but not that consecutive layers agree.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("model has no layers");
+        }
+        let mut width = self.meta.input_dim;
+        let mut seen_ids = Vec::new();
+        for l in &self.layers {
+            if l.in_dim() != width {
+                bail!(
+                    "layer {} expects {} inputs but previous layer emits {width}",
+                    l.name(),
+                    l.in_dim()
+                );
+            }
+            if l.bias().len() != l.out_dim() {
+                bail!(
+                    "layer {}: bias length {} != {} rows",
+                    l.name(),
+                    l.bias().len(),
+                    l.out_dim()
+                );
+            }
+            if let Layer::Encrypted(e) = l {
+                check_encrypted(e)?;
+                if seen_ids.contains(&e.layer_id) {
+                    bail!("duplicate encrypted layer_id {}", e.layer_id);
+                }
+                seen_ids.push(e.layer_id);
+            }
+            width = l.out_dim();
+        }
+        if width != self.meta.num_classes {
+            bail!(
+                "model head emits {width} logits, expected {}",
+                self.meta.num_classes
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to v2 container bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
-        w.put_bytes(MAGIC);
-        // meta
+        w.put_bytes(MAGIC_V2);
         w.put_u64(self.meta.input_dim as u64);
-        w.put_u64(self.meta.hidden1 as u64);
-        w.put_u64(self.meta.hidden2 as u64);
         w.put_u64(self.meta.num_classes as u64);
-        w.put_u64(self.meta.fc1_sparsity.to_bits());
-        w.put_u64(self.meta.fc1_nq as u64);
-        w.put_u64(self.meta.n_in as u64);
-        w.put_u64(self.meta.n_out as u64);
-        w.put_u64(self.meta.xor_seed);
-        // fc1
-        w.put_u64(self.fc1.rows as u64);
-        w.put_u64(self.fc1.cols as u64);
-        w.put_u64(self.fc1.planes.len() as u64);
-        for p in &self.fc1.planes {
+        w.put_u64(self.layers.len() as u64);
+        for layer in &self.layers {
+            match layer {
+                Layer::Encrypted(l) => {
+                    w.put_u8(KIND_ENCRYPTED);
+                    w.put_u8(l.activation.to_u8());
+                    w.put_str(&l.name);
+                    w.put_u64(l.rows as u64);
+                    w.put_u64(l.cols as u64);
+                    w.put_u64(l.layer_id);
+                    w.put_u64(l.planes.len() as u64);
+                    for p in &l.planes {
+                        write_plane(&mut w, p);
+                    }
+                    w.put_f32s(&l.alphas);
+                    write_bitvec(&mut w, &l.mask);
+                    w.put_f32s(&l.bias);
+                }
+                Layer::Dense(l) => {
+                    w.put_u8(KIND_DENSE);
+                    w.put_u8(l.activation.to_u8());
+                    w.put_str(&l.name);
+                    w.put_u64(l.rows as u64);
+                    w.put_u64(l.cols as u64);
+                    w.put_f32s(&l.w);
+                    w.put_f32s(&l.b);
+                }
+                Layer::Csr(l) => {
+                    w.put_u8(KIND_CSR);
+                    w.put_u8(l.activation.to_u8());
+                    w.put_str(&l.name);
+                    w.put_u64(l.csr.rows as u64);
+                    w.put_u64(l.csr.cols as u64);
+                    w.put_u64(l.csr.row_ptr.len() as u64);
+                    for &v in &l.csr.row_ptr {
+                        w.put_u32(v);
+                    }
+                    w.put_u64(l.csr.col_idx.len() as u64);
+                    for &v in &l.csr.col_idx {
+                        w.put_u32(v);
+                    }
+                    w.put_f32s(&l.csr.vals);
+                    w.put_f32s(&l.bias);
+                }
+            }
+        }
+        w.into_inner()
+    }
+
+    /// Serialize to the legacy v1 container. Only models the v1 format can
+    /// express round-trip: exactly one encrypted layer at the head followed
+    /// by dense tails, with the v1 implied activations (ReLU everywhere
+    /// except the last layer). Anything else errors rather than silently
+    /// changing semantics on reload.
+    pub fn to_v1_bytes(&self) -> Result<Vec<u8>> {
+        let Some(Layer::Encrypted(fc1)) = self.layers.first() else {
+            bail!("v1 container requires an encrypted layer at the head");
+        };
+        let mut dense = Vec::new();
+        for l in &self.layers[1..] {
+            match l {
+                Layer::Dense(d) => dense.push(d),
+                other => bail!(
+                    "v1 container cannot express layer {} (encrypted head + dense tails only)",
+                    other.name()
+                ),
+            }
+        }
+        // v1 has no activation field — readers assume ReLU everywhere
+        // except the last layer, so any other pattern must be refused.
+        let n_total = self.layers.len();
+        for (i, l) in self.layers.iter().enumerate() {
+            let implied =
+                if i + 1 < n_total { Activation::Relu } else { Activation::Identity };
+            if l.activation() != implied {
+                bail!(
+                    "v1 container cannot express layer {} activation {:?} \
+                     (v1 implies ReLU on every layer except the last)",
+                    l.name(),
+                    l.activation()
+                );
+            }
+        }
+        let p0 = &fc1.planes[0];
+        let hidden2 = dense.first().map_or(self.meta.num_classes, |d| d.rows);
+        let mut w = ByteWriter::new();
+        w.put_bytes(MAGIC_V1);
+        w.put_u64(self.meta.input_dim as u64);
+        w.put_u64(fc1.rows as u64);
+        w.put_u64(hidden2 as u64);
+        w.put_u64(self.meta.num_classes as u64);
+        w.put_u64(fc1.sparsity().to_bits());
+        w.put_u64(fc1.planes.len() as u64);
+        w.put_u64(p0.n_in as u64);
+        w.put_u64(p0.n_out as u64);
+        w.put_u64(p0.seed);
+        w.put_u64(fc1.rows as u64);
+        w.put_u64(fc1.cols as u64);
+        w.put_u64(fc1.planes.len() as u64);
+        for p in &fc1.planes {
             write_plane(&mut w, p);
         }
-        w.put_f32s(&self.fc1.alphas);
-        write_bitvec(&mut w, &self.fc1.mask);
-        w.put_f32s(&self.fc1.bias);
-        // dense
-        w.put_u64(self.dense.len() as u64);
-        for d in &self.dense {
+        w.put_f32s(&fc1.alphas);
+        write_bitvec(&mut w, &fc1.mask);
+        w.put_f32s(&fc1.bias);
+        w.put_u64(dense.len() as u64);
+        for d in dense {
             w.put_str(&d.name);
             w.put_u64(d.rows as u64);
             w.put_u64(d.cols as u64);
             w.put_f32s(&d.w);
             w.put_f32s(&d.b);
         }
-        w.into_inner()
+        Ok(w.into_inner())
     }
 
-    /// Parse from bytes.
+    /// Parse from bytes: v2 layer-graph containers natively, legacy v1
+    /// containers upgraded to the layer graph (encrypted head gets
+    /// `layer_id` 0; v1's implied ReLU-except-last activations are made
+    /// explicit).
     pub fn from_bytes(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
-        if r.get_bytes(6)? != MAGIC {
+        let magic = r.get_bytes(6)?;
+        if magic == MAGIC_V2 {
+            Self::parse_v2(&mut r)
+        } else if magic == MAGIC_V1 {
+            Self::parse_v1(&mut r)
+        } else {
             bail!("not a .sqnn file (bad magic)");
         }
+    }
+
+    fn parse_v2(r: &mut ByteReader) -> Result<Self> {
         let meta = ModelMeta {
             input_dim: r.get_u64()? as usize,
-            hidden1: r.get_u64()? as usize,
-            hidden2: r.get_u64()? as usize,
             num_classes: r.get_u64()? as usize,
-            fc1_sparsity: f64::from_bits(r.get_u64()?),
-            fc1_nq: r.get_u64()? as usize,
-            n_in: r.get_u64()? as usize,
-            n_out: r.get_u64()? as usize,
-            xor_seed: r.get_u64()?,
         };
+        let n_layers = r.get_u64()? as usize;
+        if n_layers > r.remaining() {
+            bail!("corrupt layer count {n_layers}");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let kind = r.get_u8()?;
+            let activation = Activation::from_u8(r.get_u8()?)?;
+            let name = r.get_str()?;
+            let rows = r.get_u64()? as usize;
+            let cols = r.get_u64()? as usize;
+            // A corrupt container must fail closed, never overflow-panic.
+            if rows.checked_mul(cols).is_none() {
+                bail!("layer {name}: dimension overflow ({rows}x{cols})");
+            }
+            let layer = match kind {
+                KIND_ENCRYPTED => {
+                    let layer_id = r.get_u64()?;
+                    let n_planes = r.get_u64()? as usize;
+                    if n_planes > r.remaining() {
+                        bail!("layer {name}: corrupt plane count {n_planes}");
+                    }
+                    let mut planes = Vec::with_capacity(n_planes);
+                    for _ in 0..n_planes {
+                        planes.push(read_plane(r)?);
+                    }
+                    let alphas = r.get_f32s()?;
+                    let mask = read_bitvec(r)?;
+                    let bias = r.get_f32s()?;
+                    let e = EncryptedLayer {
+                        layer_id,
+                        name,
+                        rows,
+                        cols,
+                        planes,
+                        alphas,
+                        mask,
+                        bias,
+                        activation,
+                    };
+                    check_encrypted(&e)?;
+                    Layer::Encrypted(e)
+                }
+                KIND_DENSE => {
+                    let w = r.get_f32s()?;
+                    let b = r.get_f32s()?;
+                    if w.len() != rows * cols || b.len() != rows {
+                        bail!("dense layer {name}: inconsistent sizes");
+                    }
+                    Layer::Dense(DenseLayer { name, rows, cols, w, b, activation })
+                }
+                KIND_CSR => {
+                    let np = r.get_u64()? as usize;
+                    // Guard before allocating: a corrupt count must be an
+                    // error, not a capacity-overflow abort.
+                    if np.saturating_mul(4) > r.remaining() {
+                        bail!("csr layer {name}: corrupt row_ptr count {np}");
+                    }
+                    if np.checked_sub(1) != Some(rows) {
+                        bail!("csr layer {name}: row_ptr count {np} != rows+1");
+                    }
+                    let mut row_ptr = Vec::with_capacity(np);
+                    for _ in 0..np {
+                        row_ptr.push(r.get_u32()?);
+                    }
+                    let nnz = r.get_u64()? as usize;
+                    if nnz * 4 > r.remaining() {
+                        bail!("csr layer {name}: corrupt nnz {nnz}");
+                    }
+                    let mut col_idx = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        let c = r.get_u32()?;
+                        if c as usize >= cols {
+                            bail!("csr layer {name}: column index {c} out of range");
+                        }
+                        col_idx.push(c);
+                    }
+                    let vals = r.get_f32s()?;
+                    let bias = r.get_f32s()?;
+                    if vals.len() != nnz
+                        || bias.len() != rows
+                        || row_ptr.first() != Some(&0)
+                        || row_ptr.last().copied() != Some(nnz as u32)
+                        || row_ptr.windows(2).any(|w| w[0] > w[1])
+                    {
+                        bail!("csr layer {name}: inconsistent structure");
+                    }
+                    Layer::Csr(CsrLayer {
+                        name,
+                        csr: CsrMatrix { rows, cols, row_ptr, col_idx, vals },
+                        bias,
+                        activation,
+                    })
+                }
+                other => bail!("layer {li}: unknown layer kind tag {other}"),
+            };
+            layers.push(layer);
+        }
+        Ok(SqnnModel { meta, layers })
+    }
+
+    fn parse_v1(r: &mut ByteReader) -> Result<Self> {
+        let input_dim = r.get_u64()? as usize;
+        let _hidden1 = r.get_u64()? as usize;
+        let _hidden2 = r.get_u64()? as usize;
+        let num_classes = r.get_u64()? as usize;
+        let _fc1_sparsity = f64::from_bits(r.get_u64()?);
+        let fc1_nq = r.get_u64()? as usize;
+        let _n_in = r.get_u64()? as usize;
+        let _n_out = r.get_u64()? as usize;
+        let _xor_seed = r.get_u64()?;
         let rows = r.get_u64()? as usize;
         let cols = r.get_u64()? as usize;
         let n_planes = r.get_u64()? as usize;
-        if n_planes != meta.fc1_nq {
-            bail!("plane count {n_planes} != nq {}", meta.fc1_nq);
+        if n_planes != fc1_nq {
+            bail!("plane count {n_planes} != nq {fc1_nq}");
+        }
+        if n_planes > r.remaining() {
+            bail!("corrupt plane count {n_planes}");
         }
         let mut planes = Vec::with_capacity(n_planes);
         for _ in 0..n_planes {
-            planes.push(read_plane(&mut r)?);
+            planes.push(read_plane(r)?);
         }
         let alphas = r.get_f32s()?;
-        let mask = read_bitvec(&mut r)?;
-        if mask.len() != rows * cols {
-            bail!("mask length {} != {rows}x{cols}", mask.len());
-        }
+        let mask = read_bitvec(r)?;
         let bias = r.get_f32s()?;
         let mut dense = Vec::new();
         let nd = r.get_u64()? as usize;
@@ -223,32 +682,109 @@ impl SqnnModel {
             let cols = r.get_u64()? as usize;
             let w = r.get_f32s()?;
             let b = r.get_f32s()?;
-            if w.len() != rows * cols || b.len() != rows {
+            if rows.checked_mul(cols) != Some(w.len()) || b.len() != rows {
                 bail!("dense layer {name}: inconsistent sizes");
             }
-            dense.push(DenseLayer { name, rows, cols, w, b });
+            dense.push((name, rows, cols, w, b));
         }
-        Ok(SqnnModel { meta, fc1: CompressedLayer { rows, cols, planes, alphas, mask, bias }, dense })
+        // v1 semantics: ReLU after every layer except the last.
+        let n_total = 1 + dense.len();
+        let act_for = |idx: usize| {
+            if idx + 1 < n_total {
+                Activation::Relu
+            } else {
+                Activation::Identity
+            }
+        };
+        let mut layers = Vec::with_capacity(n_total);
+        let e = EncryptedLayer {
+            layer_id: 0,
+            name: "fc1".to_string(),
+            rows,
+            cols,
+            planes,
+            alphas,
+            mask,
+            bias,
+            activation: act_for(0),
+        };
+        check_encrypted(&e)?;
+        layers.push(Layer::Encrypted(e));
+        for (i, (name, rows, cols, w, b)) in dense.into_iter().enumerate() {
+            layers.push(Layer::Dense(DenseLayer {
+                name,
+                rows,
+                cols,
+                w,
+                b,
+                activation: act_for(i + 1),
+            }));
+        }
+        Ok(SqnnModel { meta: ModelMeta { input_dim, num_classes }, layers })
     }
 
+    /// Write the v2 container to disk.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path.as_ref(), self.to_bytes())
             .with_context(|| format!("write {}", path.as_ref().display()))
     }
 
+    /// Load a container from disk (v2 or legacy v1).
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let buf = std::fs::read(path.as_ref())
             .with_context(|| format!("read {}", path.as_ref().display()))?;
         Self::from_bytes(&buf)
     }
+}
 
-    /// Total bits/weight of the FC1 layer under the paper's Fig 10
-    /// accounting: (A) index bits (here: packed mask accounted as the
-    /// factorized-rank equivalent is computed separately) + (B) quant bits.
-    pub fn fc1_bits_per_weight_quant(&self) -> f64 {
-        let st = self.fc1.quant_stats();
-        st.total_bits as f64 / (self.fc1.rows * self.fc1.cols) as f64
+/// Structural checks shared by the v1/v2 parsers and
+/// [`SqnnModel::validate`] (so hand-assembled layers are caught before
+/// serving too).
+fn check_encrypted(l: &EncryptedLayer) -> Result<()> {
+    let name = &l.name;
+    let Some(n_weights) = l.rows.checked_mul(l.cols) else {
+        bail!("encrypted layer {name}: dimension overflow ({}x{})", l.rows, l.cols);
+    };
+    if l.planes.is_empty() {
+        bail!("encrypted layer {name}: no planes");
     }
+    if l.alphas.len() != l.planes.len() {
+        bail!(
+            "encrypted layer {name}: {} alphas for {} planes",
+            l.alphas.len(),
+            l.planes.len()
+        );
+    }
+    if l.mask.len() != n_weights {
+        bail!(
+            "encrypted layer {name}: mask length {} != {}x{}",
+            l.mask.len(),
+            l.rows,
+            l.cols
+        );
+    }
+    if l.bias.len() != l.rows {
+        bail!(
+            "encrypted layer {name}: bias length {} != {} rows",
+            l.bias.len(),
+            l.rows
+        );
+    }
+    let p0 = &l.planes[0];
+    for p in &l.planes {
+        if p.plane_len != n_weights {
+            bail!(
+                "encrypted layer {name}: plane length {} != {}x{}",
+                p.plane_len,
+                l.rows,
+                l.cols
+            );
+        }
+        if p.design_point() != p0.design_point() {
+            bail!("encrypted layer {name}: planes disagree on the design point");
+        }
+    }
+    Ok(())
 }
 
 fn write_bitvec(w: &mut ByteWriter, v: &BitVec) {
@@ -320,43 +856,79 @@ fn read_plane(r: &mut ByteReader) -> Result<EncryptedPlane> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::synth::synthetic_encrypted_layer;
     use crate::rng::Rng;
     use crate::xorenc::BitPlane;
 
+    fn encrypted_layer(
+        layer_id: u64,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        nq: usize,
+        sparsity: f64,
+        seed: u64,
+        activation: Activation,
+        rng: &mut Rng,
+    ) -> EncryptedLayer {
+        synthetic_encrypted_layer(
+            layer_id, name, rows, cols, nq, sparsity, 10, 32, seed, activation, rng,
+        )
+        .0
+    }
+
     fn toy_model() -> SqnnModel {
         let mut rng = Rng::new(5);
-        let (rows, cols) = (8, 64);
-        let enc = XorEncoder::new(EncryptConfig { n_in: 10, n_out: 32, seed: 77, block_slices: 0 });
-        let plane = BitPlane::synthetic(rows * cols, 0.9, &mut rng);
-        let ep = enc.encrypt_plane(&plane);
-        SqnnModel {
-            meta: ModelMeta {
-                input_dim: cols,
-                hidden1: rows,
-                hidden2: 4,
-                num_classes: 2,
-                fc1_sparsity: 0.9,
-                fc1_nq: 1,
-                n_in: 10,
-                n_out: 32,
-                xor_seed: 77,
-            },
-            fc1: CompressedLayer {
-                rows,
-                cols,
-                planes: vec![ep],
-                alphas: vec![0.5],
-                mask: plane.care.clone(),
-                bias: vec![0.0; rows],
-            },
-            dense: vec![DenseLayer {
-                name: "w2".into(),
-                rows: 4,
-                cols: rows,
-                w: (0..32).map(|i| i as f32).collect(),
-                b: vec![1.0; 4],
-            }],
-        }
+        let fc1 = encrypted_layer(0, "fc1", 8, 64, 1, 0.9, 77, Activation::Relu, &mut rng);
+        SqnnModel::new(
+            ModelMeta { input_dim: 64, num_classes: 4 },
+            vec![
+                Layer::Encrypted(fc1),
+                Layer::Dense(DenseLayer {
+                    name: "w2".into(),
+                    rows: 4,
+                    cols: 8,
+                    w: (0..32).map(|i| i as f32).collect(),
+                    b: vec![1.0; 4],
+                    activation: Activation::Identity,
+                }),
+            ],
+        )
+    }
+
+    /// Two encrypted layers + a dense head + a CSR baseline layer — the
+    /// full v2 layer-kind surface.
+    fn multi_layer_model() -> SqnnModel {
+        let mut rng = Rng::new(6);
+        let e1 = encrypted_layer(0, "enc1", 8, 32, 2, 0.85, 11, Activation::Relu, &mut rng);
+        let e2 = encrypted_layer(1, "enc2", 6, 8, 1, 0.75, 12, Activation::Relu, &mut rng);
+        let csr_w: Vec<f32> =
+            (0..4 * 6).map(|i| if i % 3 == 0 { 0.2 } else { 0.0 }).collect();
+        SqnnModel::new(
+            ModelMeta { input_dim: 32, num_classes: 3 },
+            vec![
+                Layer::Encrypted(e1),
+                Layer::Encrypted(e2),
+                Layer::Csr(CsrLayer {
+                    name: "csr3".into(),
+                    csr: CsrMatrix::from_dense(&csr_w, 4, 6, None),
+                    bias: vec![0.1; 4],
+                    activation: Activation::Relu,
+                }),
+                Layer::Dense(DenseLayer {
+                    name: "head".into(),
+                    rows: 3,
+                    cols: 4,
+                    w: vec![0.3; 12],
+                    b: vec![0.0; 3],
+                    activation: Activation::Identity,
+                }),
+            ],
+        )
+    }
+
+    fn fc1(m: &SqnnModel) -> &EncryptedLayer {
+        m.first_encrypted().unwrap()
     }
 
     #[test]
@@ -365,10 +937,81 @@ mod tests {
         let bytes = m.to_bytes();
         let back = SqnnModel::from_bytes(&bytes).unwrap();
         assert_eq!(back.meta, m.meta);
-        assert_eq!(back.fc1.planes[0].codes, m.fc1.planes[0].codes);
-        assert_eq!(back.fc1.planes[0].patches, m.fc1.planes[0].patches);
-        assert_eq!(back.dense[0].w, m.dense[0].w);
-        assert_eq!(back.fc1.mask.to_bools(), m.fc1.mask.to_bools());
+        assert_eq!(fc1(&back).planes[0].codes, fc1(&m).planes[0].codes);
+        assert_eq!(fc1(&back).planes[0].patches, fc1(&m).planes[0].patches);
+        assert_eq!(fc1(&back).mask.to_bools(), fc1(&m).mask.to_bools());
+        let (Layer::Dense(da), Layer::Dense(db)) = (&m.layers[1], &back.layers[1]) else {
+            panic!("dense layer lost its kind");
+        };
+        assert_eq!(da.w, db.w);
+        assert_eq!(da.activation, db.activation);
+    }
+
+    #[test]
+    fn multi_layer_roundtrip_all_kinds() {
+        let m = multi_layer_model();
+        m.validate().unwrap();
+        let back = SqnnModel::from_bytes(&m.to_bytes()).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.layers.len(), 4);
+        assert_eq!(back.encrypted_layers().count(), 2);
+        for ((_, a), (_, b)) in m.encrypted_layers().zip(back.encrypted_layers()) {
+            assert_eq!(a.layer_id, b.layer_id);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.alphas, b.alphas);
+            for (pa, pb) in a.planes.iter().zip(&b.planes) {
+                assert_eq!(pa.codes, pb.codes);
+                assert_eq!(pa.patches, pb.patches);
+            }
+            // Decode must be unchanged by serialization.
+            for (da, db) in a.decode_planes().iter().zip(&b.decode_planes()) {
+                assert_eq!(da.words(), db.words());
+            }
+        }
+        let (Layer::Csr(ca), Layer::Csr(cb)) = (&m.layers[2], &back.layers[2]) else {
+            panic!("csr layer lost its kind");
+        };
+        assert_eq!(ca.csr.row_ptr, cb.csr.row_ptr);
+        assert_eq!(ca.csr.col_idx, cb.csr.col_idx);
+        assert_eq!(ca.csr.vals, cb.csr.vals);
+    }
+
+    #[test]
+    fn v1_container_still_loads() {
+        // A v1-expressible model: encrypted head + dense tail with the
+        // implied ReLU-except-last activations.
+        let m = toy_model();
+        let mut relu_head = m.clone();
+        // toy_model already matches v1 semantics (Relu, Identity).
+        let v1 = relu_head.to_v1_bytes().unwrap();
+        assert_eq!(&v1[..6], MAGIC_V1);
+        let back = SqnnModel::from_bytes(&v1).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.meta, m.meta);
+        assert_eq!(back.layers.len(), m.layers.len());
+        assert_eq!(fc1(&back).layer_id, 0);
+        assert_eq!(fc1(&back).activation, Activation::Relu);
+        assert_eq!(fc1(&back).planes[0].codes, fc1(&m).planes[0].codes);
+        assert_eq!(back.layers[1].activation(), Activation::Identity);
+        // v1 → layer graph → v1 is byte-stable.
+        let again = back.to_v1_bytes().unwrap();
+        assert_eq!(v1, again);
+        // Models v1 cannot express are refused, not silently mangled:
+        // a layer kind v1 has no tag for…
+        relu_head.layers.push(Layer::Csr(CsrLayer {
+            name: "csr".into(),
+            csr: CsrMatrix::from_dense(&[0.5, 0.0, 0.0, 0.5], 2, 2, None),
+            bias: vec![0.0; 2],
+            activation: Activation::Identity,
+        }));
+        assert!(relu_head.to_v1_bytes().is_err());
+        // …and an activation pattern v1's implied ReLU-except-last would
+        // silently rewrite on reload.
+        let mut wrong_act = m.clone();
+        if let Layer::Dense(d) = &mut wrong_act.layers[1] {
+            d.activation = Activation::Relu;
+        }
+        assert!(wrong_act.to_v1_bytes().is_err());
     }
 
     #[test]
@@ -385,14 +1028,54 @@ mod tests {
     #[test]
     fn reconstruct_dense_respects_mask_and_alphas() {
         let m = toy_model();
-        let w = m.fc1.reconstruct_dense();
+        let l = fc1(&m);
+        let w = l.reconstruct_dense();
         for j in 0..w.len() {
-            if m.fc1.mask.get(j) {
+            if l.mask.get(j) {
                 assert!((w[j].abs() - 0.5).abs() < 1e-6);
             } else {
                 assert_eq!(w[j], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn materialize_is_uniform_across_kinds() {
+        let m = multi_layer_model();
+        let cache = PlanCache::new();
+        let cfg = DecodeConfig::with_threads(2);
+        for layer in &m.layers {
+            let t = layer.materialize(&cache, &cfg);
+            assert_eq!(t.shape, vec![layer.out_dim(), layer.in_dim()]);
+            // Materialization is deterministic (the per-batch decode
+            // contract).
+            let t2 = layer.materialize(&cache, &cfg);
+            assert_eq!(t.data, t2.data);
+        }
+        // Encrypted materialization equals the codec's reconstruction.
+        let (_, e1) = m.encrypted_layers().next().unwrap();
+        let t = m.layers[0].materialize(&cache, &cfg);
+        assert_eq!(t.data, e1.reconstruct_dense());
+        // One plan per encrypted layer id is cached.
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_broken_chains() {
+        let mut m = multi_layer_model();
+        m.meta.num_classes = 7;
+        assert!(m.validate().is_err());
+        let mut m2 = multi_layer_model();
+        if let Layer::Dense(d) = &mut m2.layers[3] {
+            d.cols = 5;
+            d.w = vec![0.3; 15];
+        }
+        assert!(m2.validate().is_err());
+        let mut m3 = multi_layer_model();
+        if let Layer::Encrypted(e) = &mut m3.layers[1] {
+            e.layer_id = 0; // duplicate of layers[0]
+        }
+        assert!(m3.validate().is_err());
     }
 
     #[test]
@@ -415,7 +1098,30 @@ mod tests {
         let m = toy_model();
         let mut bad = m.clone();
         // Force an out-of-range patch position and re-serialize.
-        bad.fc1.planes[0].patches[0] = vec![9999];
+        if let Layer::Encrypted(e) = &mut bad.layers[0] {
+            e.planes[0].patches[0] = vec![9999];
+        }
+        let bytes = bad.to_bytes();
+        assert!(SqnnModel::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn mismatched_design_point_rejected() {
+        let mut rng = Rng::new(9);
+        let mut bad = toy_model();
+        if let Layer::Encrypted(e) = &mut bad.layers[0] {
+            // Second plane with a different seed — the parser must refuse
+            // (the plan cache assumes one design point per layer).
+            let enc = XorEncoder::new(EncryptConfig {
+                n_in: 10,
+                n_out: 32,
+                seed: 999,
+                block_slices: 0,
+            });
+            let plane = BitPlane::synthetic(8 * 64, 0.9, &mut rng);
+            e.planes.push(enc.encrypt_plane(&plane));
+            e.alphas.push(0.25);
+        }
         let bytes = bad.to_bytes();
         assert!(SqnnModel::from_bytes(&bytes).is_err());
     }

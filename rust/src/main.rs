@@ -14,10 +14,11 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use sqnn_xor::coordinator::{
-    compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, EngineOptions, SqnnEngine,
+    compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, DecodeMode, EngineOptions,
+    SqnnEngine,
 };
 use sqnn_xor::io::npy::read_npy;
-use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
 use sqnn_xor::runtime::Runtime;
 use sqnn_xor::server::Server;
 
@@ -52,10 +53,16 @@ fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> 
 }
 
 fn engine_options(flags: &HashMap<String, String>) -> Result<EngineOptions> {
+    let decode_mode = match flag(flags, "decode-mode", "eager") {
+        "eager" => DecodeMode::Eager,
+        "per-batch" | "perbatch" => DecodeMode::PerBatch,
+        other => bail!("bad --decode-mode '{other}' (eager | per-batch)"),
+    };
     Ok(EngineOptions {
         decode_threads: flag(flags, "decode-threads", "0")
             .parse()
             .context("bad --decode-threads")?,
+        decode_mode,
     })
 }
 
@@ -95,7 +102,9 @@ fn print_help() {
          \n\
          decode knobs (verify/serve/demo):\n\
            --decode-threads N   XOR-decode worker threads (0 = auto; also\n\
-                                settable via SQNN_DECODE_THREADS)"
+                                settable via SQNN_DECODE_THREADS)\n\
+           --decode-mode M      eager (decode at load, default) or per-batch\n\
+                                (re-decode encrypted layers on every batch)"
     );
 }
 
@@ -103,18 +112,22 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
     let artifacts = flag(flags, "artifacts", "artifacts");
     let out = flag(flags, "out", "model.sqnn");
     let model = compress_bundle(artifacts)?;
-    let st = model.fc1.quant_stats();
     model.save(out)?;
-    println!("wrote {out}");
-    println!(
-        "  fc1: {}x{}  S={:.2}  nq={}  (n_in={}, n_out={})",
-        model.fc1.rows,
-        model.fc1.cols,
-        model.meta.fc1_sparsity,
-        model.meta.fc1_nq,
-        model.meta.n_in,
-        model.meta.n_out
-    );
+    println!("wrote {out} ({} layers)", model.layers.len());
+    for (_, e) in model.encrypted_layers() {
+        let p0 = &e.planes[0];
+        println!(
+            "  encrypted {}: {}x{}  S={:.2}  nq={}  (n_in={}, n_out={})",
+            e.name,
+            e.rows,
+            e.cols,
+            e.sparsity(),
+            e.planes.len(),
+            p0.n_in,
+            p0.n_out
+        );
+    }
+    let st = model.quant_stats();
     println!(
         "  quant payload: {:.3} bits/weight (codes {:.3} + npatch {:.3} + dpatch {:.3}); ratio {:.2}x",
         st.bits_per_weight(),
@@ -128,14 +141,37 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     let model = SqnnModel::load(flag(flags, "model", "model.sqnn"))?;
-    let st = model.fc1.quant_stats();
     println!("meta: {:?}", model.meta);
-    println!("fc1 slices: {}", model.fc1.planes[0].num_slices());
+    println!("layer chain ({} layers):", model.layers.len());
+    for layer in &model.layers {
+        match layer {
+            Layer::Encrypted(e) => println!(
+                "  encrypted {}: {}x{}  id={}  nq={}  slices={}  act={:?}",
+                e.name,
+                e.rows,
+                e.cols,
+                e.layer_id,
+                e.planes.len(),
+                e.planes[0].num_slices(),
+                e.activation
+            ),
+            Layer::Dense(d) => println!(
+                "  dense {}: {}x{}  act={:?}",
+                d.name, d.rows, d.cols, d.activation
+            ),
+            Layer::Csr(c) => println!(
+                "  csr {}: {}x{}  nnz={}  act={:?}",
+                c.name,
+                c.csr.rows,
+                c.csr.cols,
+                c.csr.nnz(),
+                c.activation
+            ),
+        }
+    }
+    let st = model.quant_stats();
     println!("quant stats: {st:?}");
     println!("bits/weight (quant): {:.3}", st.bits_per_weight());
-    for d in &model.dense {
-        println!("dense {}: {}x{}", d.name, d.rows, d.cols);
-    }
     Ok(())
 }
 
@@ -156,12 +192,15 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
     // 1. lossless: decoded planes == exported bit-planes on care positions
     let bits_arr = read_npy(format!("{artifacts}/weights/fc1_bits.npy"))?;
     let bits = bits_arr.as_u8()?;
-    let decoded = model.fc1.decode_planes();
-    let plane_len = model.fc1.rows * model.fc1.cols;
+    let fc1 = model
+        .first_encrypted()
+        .ok_or_else(|| anyhow::anyhow!("container has no encrypted layer"))?;
+    let decoded = fc1.decode_planes();
+    let plane_len = fc1.rows * fc1.cols;
     let mut mismatches = 0usize;
-    for q in 0..model.meta.fc1_nq {
+    for q in 0..fc1.planes.len() {
         for j in 0..plane_len {
-            if model.fc1.mask.get(j) && decoded[q].get(j) != (bits[q * plane_len + j] != 0) {
+            if fc1.mask.get(j) && decoded[q].get(j) != (bits[q * plane_len + j] != 0) {
                 mismatches += 1;
             }
         }
@@ -177,9 +216,10 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
     let engine =
         SqnnEngine::load_with(&runtime, model, &artifacts, &meta.batch_sizes, engine_options(flags)?)?;
     println!(
-        "engine backend: {} (decode threads: {:?})",
+        "engine backend: {} (decode threads: {:?}, decode mode: {:?})",
         engine.backend_name(),
-        engine.decode_threads()
+        engine.decode_threads(),
+        engine.decode_mode()
     );
     let preds = engine.classify(&xs)?;
     let correct = preds.iter().zip(&ys).filter(|(p, y)| **p == **y as usize).count();
@@ -226,16 +266,17 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     let meta = read_bundle_meta(&artifacts)?;
     println!("compressing bundle…");
     let model = compress_bundle(&artifacts)?;
-    let st = model.fc1.quant_stats();
+    let st = model.quant_stats();
     println!("  {:.3} bits/weight, ratio {:.2}x", st.bits_per_weight(), st.ratio());
     let (xs, ys) = load_eval_set(&artifacts)?;
     let runtime = Runtime::cpu()?;
     let engine =
         SqnnEngine::load_with(&runtime, model, &artifacts, &meta.batch_sizes, engine_options(flags)?)?;
     println!(
-        "engine backend: {} (decode threads: {:?})",
+        "engine backend: {} (decode threads: {:?}, decode mode: {:?})",
         engine.backend_name(),
-        engine.decode_threads()
+        engine.decode_threads(),
+        engine.decode_mode()
     );
     let n = xs.len().min(256);
     let preds = engine.classify(&xs[..n])?;

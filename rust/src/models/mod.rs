@@ -4,6 +4,10 @@
 //! match each model's statistics (see DESIGN.md §8 for why statistically
 //! matched planes reproduce the codec-relevant behaviour).
 
+pub mod synth;
+
+pub use synth::{synthetic_encrypted_layer, synthetic_layer_graph, SynthEncrypted};
+
 use crate::rng::Rng;
 use crate::xorenc::BitPlane;
 

@@ -1,0 +1,180 @@
+//! Synthetic layer-graph model generation — `.sqnn` models with N
+//! encrypted layers for tests, benches, and artifact-free serving demos.
+//!
+//! The codec only reads `(care, value)` pairs, so a synthetic chain with
+//! matched sparsity reproduces the codec- and serving-relevant behaviour
+//! of real multi-layer SQNNs at any size (DESIGN.md §6).
+
+use crate::gf2::BitVec;
+use crate::io::sqnn_file::{
+    Activation, DenseLayer, EncryptedLayer, Layer, ModelMeta, SqnnModel,
+};
+use crate::rng::Rng;
+use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+
+/// Geometry/statistics of one synthetic encrypted layer.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthEncrypted {
+    /// Output width of the layer.
+    pub out_dim: usize,
+    /// Quantization bits (encrypted planes per layer).
+    pub nq: usize,
+    /// Pruning rate of the layer's mask.
+    pub sparsity: f64,
+    /// XOR-network design point.
+    pub n_in: usize,
+    /// XOR-network design point.
+    pub n_out: usize,
+}
+
+impl Default for SynthEncrypted {
+    fn default() -> Self {
+        SynthEncrypted { out_dim: 16, nq: 1, sparsity: 0.85, n_in: 10, n_out: 40 }
+    }
+}
+
+/// Build one synthetic encrypted layer (`nq` planes sharing the first
+/// plane's care mask, encrypted through an `(n_in, n_out, seed)` XOR
+/// network), returning the layer together with the original
+/// (pre-encryption) bit-planes so callers can assert losslessness.
+pub fn synthetic_encrypted_layer(
+    layer_id: u64,
+    name: &str,
+    rows: usize,
+    cols: usize,
+    nq: usize,
+    sparsity: f64,
+    n_in: usize,
+    n_out: usize,
+    seed: u64,
+    activation: Activation,
+    rng: &mut Rng,
+) -> (EncryptedLayer, Vec<BitPlane>) {
+    let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed, block_slices: 0 });
+    let n = rows * cols;
+    let base = BitPlane::synthetic(n, sparsity, rng);
+    let mask = base.care.clone();
+    let mut planes = Vec::with_capacity(nq);
+    let mut originals = Vec::with_capacity(nq);
+    for q in 0..nq {
+        let plane = if q == 0 {
+            base.clone()
+        } else {
+            let bits = BitVec::from_fn(n, |j| mask.get(j) && rng.next_bit());
+            BitPlane::new(bits, mask.clone())
+        };
+        planes.push(enc.encrypt_plane(&plane));
+        originals.push(plane);
+    }
+    let layer = EncryptedLayer {
+        layer_id,
+        name: name.to_string(),
+        rows,
+        cols,
+        planes,
+        alphas: (0..nq).map(|q| 0.5 / (q + 1) as f32).collect(),
+        mask,
+        bias: (0..rows).map(|r| r as f32 * 0.01).collect(),
+        activation,
+    };
+    (layer, originals)
+}
+
+/// Build a synthetic layer-graph model: `input_dim` → each spec in
+/// `encrypted` (XOR-encrypted, ReLU) → each width in `dense` (dense,
+/// ReLU) → `num_classes` (dense logit head, identity).
+///
+/// Every encrypted layer gets a distinct `layer_id` (its chain position)
+/// and a distinct XOR seed derived from `seed`, so the decode-plan cache
+/// sees N independent design points — the multi-layer serving workload.
+pub fn synthetic_layer_graph(
+    seed: u64,
+    input_dim: usize,
+    encrypted: &[SynthEncrypted],
+    dense: &[usize],
+    num_classes: usize,
+) -> SqnnModel {
+    assert!(!encrypted.is_empty(), "need at least one encrypted layer");
+    let mut rng = Rng::new(seed);
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut width = input_dim;
+
+    for (i, spec) in encrypted.iter().enumerate() {
+        let (layer, _) = synthetic_encrypted_layer(
+            i as u64,
+            &format!("enc{}", i + 1),
+            spec.out_dim,
+            width,
+            spec.nq,
+            spec.sparsity,
+            spec.n_in,
+            spec.n_out,
+            seed.wrapping_mul(1013).wrapping_add(i as u64),
+            Activation::Relu,
+            &mut rng,
+        );
+        layers.push(Layer::Encrypted(layer));
+        width = spec.out_dim;
+    }
+
+    let tail: Vec<(usize, Activation)> = dense
+        .iter()
+        .map(|&h| (h, Activation::Relu))
+        .chain(std::iter::once((num_classes, Activation::Identity)))
+        .collect();
+    for (i, (h, activation)) in tail.into_iter().enumerate() {
+        layers.push(Layer::Dense(DenseLayer {
+            name: format!("dense{}", i + 1),
+            rows: h,
+            cols: width,
+            w: (0..h * width).map(|_| rng.next_gaussian() as f32 * 0.2).collect(),
+            b: vec![0.0; h],
+            activation,
+        }));
+        width = h;
+    }
+
+    let model =
+        SqnnModel::new(ModelMeta { input_dim, num_classes }, layers);
+    debug_assert!(model.validate().is_ok());
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_graph_is_valid_and_multi_layer() {
+        let m = synthetic_layer_graph(
+            42,
+            24,
+            &[
+                SynthEncrypted { out_dim: 12, nq: 2, ..Default::default() },
+                SynthEncrypted { out_dim: 8, ..Default::default() },
+            ],
+            &[6],
+            3,
+        );
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 4);
+        assert_eq!(m.encrypted_layers().count(), 2);
+        let ids: Vec<u64> = m.encrypted_layers().map(|(_, e)| e.layer_id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        // Distinct seeds per layer → distinct decode networks.
+        let seeds: Vec<u64> =
+            m.encrypted_layers().map(|(_, e)| e.planes[0].seed).collect();
+        assert_ne!(seeds[0], seeds[1]);
+        // Container round-trip survives.
+        let back = SqnnModel::from_bytes(&m.to_bytes()).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.layers.len(), 4);
+    }
+
+    #[test]
+    fn synthetic_graph_is_deterministic() {
+        let a = synthetic_layer_graph(7, 16, &[SynthEncrypted::default()], &[], 2);
+        let b = synthetic_layer_graph(7, 16, &[SynthEncrypted::default()], &[], 2);
+        assert_eq!(a.to_bytes(), b.to_bytes());
+    }
+}

@@ -84,7 +84,7 @@ impl DecodePlan {
 
     /// True iff this plan decodes planes with `p`'s design point.
     pub fn matches(&self, p: &EncryptedPlane) -> bool {
-        self.net.n_in() == p.n_in && self.net.n_out() == p.n_out && self.net.seed() == p.seed
+        (self.net.n_in(), self.net.n_out(), self.net.seed()) == p.design_point()
     }
 
     /// The regenerated XOR-gate network.
@@ -248,6 +248,13 @@ impl ParallelDecoder {
     /// Resolved worker count used per plane decode.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The underlying decode-plan cache (shared with
+    /// [`Layer::materialize`](crate::io::sqnn_file::Layer::materialize)
+    /// on the serving hot path).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
     }
 
     /// Decode one plane of `layer_id`, reusing that layer's cached plan.

@@ -8,6 +8,9 @@
 //!             `b'Q'`                   → close connection
 //!   response: `b'O'` + u32 n + n×f32 (logits) | `b'E'` + u32 len + msg
 //!             for `S`: u32 len + JSON bytes
+//!
+//! Engine errors answer `E` and keep the connection; protocol errors
+//! (oversized frame, unknown opcode) answer `E` and then close it.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -36,6 +39,10 @@ impl Server {
             move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 while !stop2.load(Ordering::SeqCst) {
+                    // Reap finished connection threads so a long-lived
+                    // server doesn't grow this Vec one handle per
+                    // connection until shutdown.
+                    reap_finished(&mut conns);
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let _ = stream.set_nodelay(true);
@@ -78,8 +85,31 @@ impl Drop for Server {
     }
 }
 
+/// Join (and drop) every connection thread that has already exited,
+/// keeping live ones. Called from the accept loop.
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
 fn read_exact(s: &mut TcpStream, buf: &mut [u8]) -> std::io::Result<()> {
     s.read_exact(buf)
+}
+
+/// Write a structured `E` response (protocol errors get one before the
+/// connection is closed, so clients see a reason instead of a bare EOF).
+fn write_err(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(5 + msg.len());
+    out.push(b'E');
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    stream.write_all(&out)
 }
 
 fn handle_conn(
@@ -112,6 +142,7 @@ fn handle_conn(
                 read_exact(&mut stream, &mut nb)?;
                 let n = u32::from_le_bytes(nb) as usize;
                 if n > 1 << 20 {
+                    let _ = write_err(&mut stream, &format!("oversized request ({n} floats)"));
                     anyhow::bail!("oversized request ({n} floats)");
                 }
                 let mut raw = vec![0u8; n * 4];
@@ -131,10 +162,7 @@ fn handle_conn(
                         stream.write_all(&msg)?;
                     }
                     Err(e) => {
-                        let msg = format!("{e:#}");
-                        stream.write_all(b"E")?;
-                        stream.write_all(&(msg.len() as u32).to_le_bytes())?;
-                        stream.write_all(msg.as_bytes())?;
+                        write_err(&mut stream, &format!("{e:#}"))?;
                     }
                 }
             }
@@ -149,7 +177,10 @@ fn handle_conn(
                 stream.write_all(json.as_bytes())?;
             }
             b'Q' => return Ok(()),
-            other => anyhow::bail!("unknown opcode {other}"),
+            other => {
+                let _ = write_err(&mut stream, &format!("unknown opcode {other}"));
+                anyhow::bail!("unknown opcode {other}");
+            }
         }
     }
 }

@@ -221,6 +221,14 @@ impl EncryptedPlane {
         self.codes.len()
     }
 
+    /// The `(n_in, n_out, seed)` design point — the identity of the XOR
+    /// network this plane was encrypted with. Every plane of one layer
+    /// must share a design point (one cached decode plan per layer), which
+    /// is what the container parser and the plan cache compare.
+    pub fn design_point(&self) -> (usize, usize, u64) {
+        (self.n_in, self.n_out, self.seed)
+    }
+
     /// Eq. (2) bit accounting, honouring §5.2 blocked `n_patch` fields:
     /// with `block_slices = B > 0`, each block of `B` slices gets its own
     /// `⌈lg(max p in block)⌉` field width, plus a 6-bit per-block header

@@ -115,33 +115,27 @@ fn property_decode_depends_only_on_container() {
 /// detectable corruption), never panic.
 #[test]
 fn failure_injection_container_bitflips() {
-    use sqnn_xor::io::sqnn_file::SqnnModel;
+    use sqnn_xor::io::sqnn_file::{
+        Activation, EncryptedLayer, Layer, ModelMeta, SqnnModel,
+    };
     let mut rng = Rng::new(81);
     let enc = XorEncoder::new(EncryptConfig { n_in: 10, n_out: 32, seed: 5, block_slices: 0 });
     let plane = BitPlane::synthetic(8 * 64, 0.8, &mut rng);
     let ep = enc.encrypt_plane(&plane);
-    let model = SqnnModel {
-        meta: sqnn_xor::io::sqnn_file::ModelMeta {
-            input_dim: 64,
-            hidden1: 8,
-            hidden2: 4,
-            num_classes: 2,
-            fc1_sparsity: 0.8,
-            fc1_nq: 1,
-            n_in: 10,
-            n_out: 32,
-            xor_seed: 5,
-        },
-        fc1: sqnn_xor::io::sqnn_file::CompressedLayer {
+    let model = SqnnModel::new(
+        ModelMeta { input_dim: 64, num_classes: 8 },
+        vec![Layer::Encrypted(EncryptedLayer {
+            layer_id: 0,
+            name: "fc1".into(),
             rows: 8,
             cols: 64,
             planes: vec![ep],
             alphas: vec![0.5],
             mask: plane.care.clone(),
             bias: vec![0.0; 8],
-        },
-        dense: vec![],
-    };
+            activation: Activation::Identity,
+        })],
+    );
     let bytes = model.to_bytes();
     let mut rejected = 0usize;
     let mut parsed = 0usize;
@@ -203,7 +197,7 @@ fn failure_injection_server_bad_requests() {
     // 3. wrong input length → structured error response
     {
         let mut c = sqnn_xor::server::Client::connect(&addr).unwrap();
-        let err = c.infer(&vec![0.0f32; 3]).unwrap_err();
+        let err = c.infer(&[0.0f32; 3]).unwrap_err();
         assert!(format!("{err:#}").contains("server error"), "{err:#}");
     }
     // 4. server still serves good requests afterwards

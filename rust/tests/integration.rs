@@ -37,7 +37,8 @@ fn compressed_model(dir: &Path) -> &'static SqnnModel {
 fn bundle_compression_is_lossless_and_small() {
     let Some(dir) = artifacts_dir() else { return };
     let model = compressed_model(&dir);
-    let st = model.fc1.quant_stats();
+    let fc1 = model.first_encrypted().expect("compressed model has an encrypted head");
+    let st = fc1.quant_stats();
     // Paper Table 2 / Fig 10: LeNet5-FC1 at S=0.95 with 1-bit quantization
     // compresses to ≈0.19 bits/weight *including* index bits; the quant
     // payload alone must land well under 1 bit and the ratio near
@@ -47,11 +48,11 @@ fn bundle_compression_is_lossless_and_small() {
     // losslessness against the exported planes
     let bits_arr = read_npy(dir.join("weights/fc1_bits.npy")).unwrap();
     let bits = bits_arr.as_u8().unwrap();
-    let decoded = model.fc1.decode_planes();
-    let plane_len = model.fc1.rows * model.fc1.cols;
-    for q in 0..model.meta.fc1_nq {
+    let decoded = fc1.decode_planes();
+    let plane_len = fc1.rows * fc1.cols;
+    for q in 0..fc1.planes.len() {
         for j in 0..plane_len {
-            if model.fc1.mask.get(j) {
+            if fc1.mask.get(j) {
                 assert_eq!(decoded[q].get(j), bits[q * plane_len + j] != 0);
             }
         }
@@ -65,8 +66,12 @@ fn container_roundtrip_preserves_serving() {
     let tmp = std::env::temp_dir().join("sqnn_integration_model.sqnn");
     model.save(&tmp).unwrap();
     let reloaded = SqnnModel::load(&tmp).unwrap();
-    assert_eq!(reloaded.fc1.planes[0].codes, model.fc1.planes[0].codes);
+    assert_eq!(
+        reloaded.first_encrypted().unwrap().planes[0].codes,
+        model.first_encrypted().unwrap().planes[0].codes
+    );
     assert_eq!(reloaded.meta, model.meta);
+    assert_eq!(reloaded.layers.len(), model.layers.len());
 }
 
 #[test]
@@ -183,13 +188,14 @@ fn decode_planes_hlo_matches_rust_decoder() {
     let runtime = Runtime::cpu().unwrap();
     let exe = runtime.load_hlo_text(dir.join("decode_planes.hlo.txt")).unwrap();
 
-    let statics = sqnn_xor::coordinator::build_static_inputs(model);
+    let statics = sqnn_xor::coordinator::build_static_inputs(model).unwrap();
     // args: codes [nq, l, n_in], m_xor [n_out, n_in]
     let out = exe.run(&[statics.tensors[1].clone(), statics.tensors[0].clone()]).unwrap();
 
-    let n_out = model.meta.n_out;
-    let enc = model.fc1.encoder();
-    let plane = &model.fc1.planes[0];
+    let fc1 = model.first_encrypted().unwrap();
+    let n_out = fc1.planes[0].n_out;
+    let enc = fc1.encoder();
+    let plane = &fc1.planes[0];
     for (s, &code) in plane.codes.iter().enumerate().take(50) {
         let bits = enc.network().decode(code);
         for o in 0..n_out {

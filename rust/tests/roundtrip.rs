@@ -1,150 +1,257 @@
-//! Property tests for the `.sqnn` container round-trip and for
-//! parallel-vs-serial decode equivalence (pure Rust; no artifacts needed).
+//! Property tests for the `.sqnn` layer-graph container round-trip
+//! (v2 + legacy v1), for parallel-vs-serial decode equivalence, and for
+//! eager-vs-per-batch serving equivalence (pure Rust; no artifacts
+//! needed).
 
-use sqnn_xor::gf2::BitVec;
-use sqnn_xor::io::sqnn_file::{CompressedLayer, DenseLayer, ModelMeta, SqnnModel};
+use sqnn_xor::coordinator::{DecodeMode, EngineOptions, SqnnEngine};
+use sqnn_xor::io::sqnn_file::{Activation, DenseLayer, Layer, ModelMeta, SqnnModel};
+use sqnn_xor::models::{
+    synthetic_encrypted_layer, synthetic_layer_graph, SynthEncrypted,
+};
 use sqnn_xor::rng::Rng;
 use sqnn_xor::runtime::parallel::{
     decode_plane_parallel, decode_plane_serial, DecodeConfig, DecodePlan, ParallelDecoder,
 };
-use sqnn_xor::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+use sqnn_xor::xorenc::BitPlane;
 
-/// Build a random compressed model: prune/quantize-shaped planes, random
-/// dense tails. Returns the model plus the original (pre-encryption)
-/// bit-planes for losslessness checks.
-fn random_model(trial: u64, rng: &mut Rng) -> (SqnnModel, Vec<BitPlane>) {
-    let rows = 4 + (trial % 7) as usize;
-    let cols = 32 + 8 * (trial % 5) as usize;
-    let nq = 1 + (trial % 3) as usize;
-    let n_in = 8 + (trial % 4) as usize * 4;
-    let n_out = n_in * (2 + (trial % 4) as usize);
-    let seed = 1000 + trial;
-    let sparsity = 0.6 + 0.08 * (trial % 4) as f64;
-
-    let enc = XorEncoder::new(EncryptConfig { n_in, n_out, seed, block_slices: 0 });
-    let mask_plane = BitPlane::synthetic(rows * cols, sparsity, rng);
-    let mask = mask_plane.care.clone();
-    let mut planes = Vec::new();
-    let mut encrypted = Vec::new();
-    for _ in 0..nq {
-        let bits = BitVec::from_fn(rows * cols, |j| mask.get(j) && rng.next_bit());
-        let plane = BitPlane::new(bits, mask.clone());
-        encrypted.push(enc.encrypt_plane(&plane));
-        planes.push(plane);
-    }
-
-    let h2 = 3 + (trial % 3) as usize;
-    let n_cls = 2 + (trial % 3) as usize;
-    let model = SqnnModel {
-        meta: ModelMeta {
-            input_dim: cols,
-            hidden1: rows,
-            hidden2: h2,
-            num_classes: n_cls,
-            fc1_sparsity: sparsity,
-            fc1_nq: nq,
-            n_in,
-            n_out,
-            xor_seed: seed,
-        },
-        fc1: CompressedLayer {
-            rows,
-            cols,
-            planes: encrypted,
-            alphas: (0..nq).map(|i| 0.5 / (i + 1) as f32).collect(),
-            mask,
-            bias: (0..rows).map(|r| r as f32 * 0.01).collect(),
-        },
-        dense: vec![
-            DenseLayer {
-                name: "w2".into(),
-                rows: h2,
-                cols: rows,
-                w: (0..h2 * rows).map(|_| rng.next_gaussian() as f32 * 0.1).collect(),
-                b: vec![0.0; h2],
-            },
-            DenseLayer {
+/// Build a random multi-layer model: 2 encrypted layers with
+/// trial-varying geometry/design points, plus a dense tail and head.
+/// Returns the model and, per encrypted layer, the original
+/// (pre-encryption) bit-planes.
+fn random_model(trial: u64) -> (SqnnModel, Vec<Vec<BitPlane>>) {
+    let mut rng = Rng::new(0xC0FFEE ^ trial);
+    let input_dim = 24 + 8 * (trial % 4) as usize;
+    let h1 = 8 + (trial % 5) as usize;
+    let h2 = 5 + (trial % 3) as usize;
+    let h3 = 4 + (trial % 3) as usize;
+    let num_classes = 2 + (trial % 3) as usize;
+    let n_in1 = 8 + (trial % 4) as usize * 4;
+    let (e1, o1) = synthetic_encrypted_layer(
+        0,
+        "enc0",
+        h1,
+        input_dim,
+        1 + (trial % 3) as usize,
+        0.6 + 0.08 * (trial % 4) as f64,
+        n_in1,
+        n_in1 * (2 + (trial % 4) as usize),
+        1000 + trial,
+        Activation::Relu,
+        &mut rng,
+    );
+    let (e2, o2) = synthetic_encrypted_layer(
+        1,
+        "enc1",
+        h2,
+        h1,
+        1 + (trial % 2) as usize,
+        0.7,
+        10,
+        30 + (trial % 5) as usize,
+        2000 + trial,
+        Activation::Relu,
+        &mut rng,
+    );
+    let model = SqnnModel::new(
+        ModelMeta { input_dim, num_classes },
+        vec![
+            Layer::Encrypted(e1),
+            Layer::Encrypted(e2),
+            Layer::Dense(DenseLayer {
                 name: "w3".into(),
-                rows: n_cls,
+                rows: h3,
                 cols: h2,
-                w: (0..n_cls * h2).map(|_| rng.next_gaussian() as f32 * 0.1).collect(),
-                b: vec![0.0; n_cls],
-            },
+                w: (0..h3 * h2).map(|_| rng.next_gaussian() as f32 * 0.1).collect(),
+                b: vec![0.0; h3],
+                activation: Activation::Relu,
+            }),
+            Layer::Dense(DenseLayer {
+                name: "head".into(),
+                rows: num_classes,
+                cols: h3,
+                w: (0..num_classes * h3)
+                    .map(|_| rng.next_gaussian() as f32 * 0.1)
+                    .collect(),
+                b: vec![0.0; num_classes],
+                activation: Activation::Identity,
+            }),
         ],
-    };
-    (model, planes)
+    );
+    model.validate().unwrap();
+    (model, vec![o1, o2])
 }
 
-/// encode → serialize → deserialize → decode must reproduce the original
-/// bit-planes exactly on every care position, and the decoded bit vectors
-/// (including don't-cares) must be identical pre- and post-serialization.
+/// encode → serialize → deserialize → decode must reproduce every
+/// encrypted layer's bit-planes exactly, and the decoded bit vectors
+/// (including don't-cares) must be identical pre- and post-serialization —
+/// for a container holding ≥2 encrypted layers.
 #[test]
 fn property_sqnn_file_roundtrip_preserves_decode() {
-    let mut rng = Rng::new(0xC0FFEE);
-    for trial in 0..25u64 {
-        let (model, originals) = random_model(trial, &mut rng);
+    for trial in 0..20u64 {
+        let (model, originals) = random_model(trial);
+        assert!(model.encrypted_layers().count() >= 2, "trial {trial}: not multi-layer");
         let bytes = model.to_bytes();
         let back = SqnnModel::from_bytes(&bytes).unwrap_or_else(|e| {
             panic!("trial {trial}: deserialize failed: {e:#}");
         });
+        back.validate().unwrap();
         assert_eq!(back.meta, model.meta, "trial {trial}: meta drift");
-        assert_eq!(back.fc1.rows, model.fc1.rows);
-        assert_eq!(back.fc1.alphas, model.fc1.alphas);
+        assert_eq!(back.layers.len(), model.layers.len());
 
-        let before = model.fc1.decode_planes();
-        let after = back.fc1.decode_planes();
-        assert_eq!(before.len(), after.len());
-        for (q, (a, b)) in before.iter().zip(&after).enumerate() {
-            assert_eq!(
-                a.words(),
-                b.words(),
-                "trial {trial} plane {q}: decode changed across serialization"
-            );
-            assert!(
-                originals[q].matches(b),
-                "trial {trial} plane {q}: care bits not reproduced after round-trip"
-            );
+        for (((_, ea), (_, eb)), orig) in
+            model.encrypted_layers().zip(back.encrypted_layers()).zip(&originals)
+        {
+            assert_eq!(ea.layer_id, eb.layer_id, "trial {trial}: layer_id drift");
+            assert_eq!(ea.alphas, eb.alphas);
+            assert_eq!(ea.mask.words(), eb.mask.words());
+            let before = ea.decode_planes();
+            let after = eb.decode_planes();
+            assert_eq!(before.len(), after.len());
+            for (q, (a, b)) in before.iter().zip(&after).enumerate() {
+                assert_eq!(
+                    a.words(),
+                    b.words(),
+                    "trial {trial} layer {} plane {q}: decode changed across serialization",
+                    ea.name
+                );
+                assert!(
+                    orig[q].matches(b),
+                    "trial {trial} layer {} plane {q}: care bits not reproduced",
+                    ea.name
+                );
+            }
         }
-        // Dense tails and mask survive byte-exactly.
-        assert_eq!(back.fc1.mask.words(), model.fc1.mask.words());
-        for (da, db) in model.dense.iter().zip(&back.dense) {
-            assert_eq!(da.w, db.w);
-            assert_eq!(da.b, db.b);
-            assert_eq!(da.name, db.name);
+        // Dense tails survive byte-exactly.
+        for (la, lb) in model.layers.iter().zip(&back.layers) {
+            if let (Layer::Dense(da), Layer::Dense(db)) = (la, lb) {
+                assert_eq!(da.w, db.w);
+                assert_eq!(da.b, db.b);
+                assert_eq!(da.name, db.name);
+                assert_eq!(da.activation, db.activation);
+            }
         }
     }
 }
 
 /// The thread-sharded decoder must agree bit-for-bit with the serial
-/// decoder for every plane of every random model, at several worker
+/// decoder for every plane of every encrypted layer, at several worker
 /// counts, both through raw plans and through the cached-decoder facade.
 #[test]
 fn property_parallel_decode_equals_serial() {
-    let mut rng = Rng::new(0xDECODE);
     let decoder = ParallelDecoder::new(DecodeConfig::with_threads(4));
-    for trial in 0..25u64 {
-        let (model, originals) = random_model(trial, &mut rng);
-        for (q, ep) in model.fc1.planes.iter().enumerate() {
-            let plan = DecodePlan::for_plane(ep);
-            let serial = decode_plane_serial(&plan, ep);
-            for threads in [1usize, 2, 3, 5, 16] {
-                let par = decode_plane_parallel(&plan, ep, threads);
-                assert_eq!(
-                    par.words(),
-                    serial.words(),
-                    "trial {trial} plane {q} threads {threads}: divergence"
-                );
+    let mut layers_seen = 0u64;
+    for trial in 0..12u64 {
+        let (model, originals) = random_model(trial);
+        for (((_, e), orig), salt) in
+            model.encrypted_layers().zip(&originals).zip(0u64..)
+        {
+            for (q, ep) in e.planes.iter().enumerate() {
+                let plan = DecodePlan::for_plane(ep);
+                let serial = decode_plane_serial(&plan, ep);
+                for threads in [1usize, 2, 3, 5, 16] {
+                    let par = decode_plane_parallel(&plan, ep, threads);
+                    assert_eq!(
+                        par.words(),
+                        serial.words(),
+                        "trial {trial} layer {} plane {q} threads {threads}: divergence",
+                        e.name
+                    );
+                }
+                assert!(orig[q].matches(&serial), "trial {trial} plane {q}: lossy");
             }
-            assert!(originals[q].matches(&serial), "trial {trial} plane {q}: lossy");
-        }
-        // Facade path (plan cache keyed by layer id).
-        let via_cache = model.fc1.decode_planes_parallel(&decoder, trial);
-        let reference = model.fc1.decode_planes();
-        for (q, (a, b)) in via_cache.iter().zip(&reference).enumerate() {
-            assert_eq!(a.words(), b.words(), "trial {trial} plane {q}: cache path diverged");
+            // Facade path (plan cache keyed by layer id) — distinct cache
+            // ids per (trial, layer) so every layer builds one plan.
+            let via_cache = decoder.decode_layer(trial * 8 + salt, &e.planes);
+            let reference = e.decode_planes();
+            for (q, (a, b)) in via_cache.iter().zip(&reference).enumerate() {
+                assert_eq!(a.words(), b.words(), "trial {trial} plane {q}: cache path diverged");
+            }
+            layers_seen += 1;
         }
     }
     let st = decoder.cache_stats();
-    assert_eq!(st.misses, 25, "one plan build per layer id");
+    assert_eq!(st.misses, layers_seen, "one plan build per (trial, layer)");
     assert!(st.hits >= 1, "multi-plane layers must reuse their plan");
+}
+
+/// Acceptance: `DecodeMode::PerBatch` must be bit-identical to
+/// `DecodeMode::Eager` at every thread count, for multi-encrypted-layer
+/// models, across repeated batches.
+#[test]
+fn property_per_batch_decode_equals_eager() {
+    for trial in 0..6u64 {
+        let (model, _) = random_model(trial);
+        let input_dim = model.meta.input_dim;
+        let mut rng = Rng::new(0xBA7C4 + trial);
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..input_dim).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let eager = SqnnEngine::load_native(
+            model.clone(),
+            &[4],
+            EngineOptions { decode_threads: 1, decode_mode: DecodeMode::Eager },
+        )
+        .unwrap();
+        let want = eager.infer(&xs).unwrap();
+        for threads in [1usize, 2, 3, 8] {
+            let streaming = SqnnEngine::load_native(
+                model.clone(),
+                &[4],
+                EngineOptions { decode_threads: threads, decode_mode: DecodeMode::PerBatch },
+            )
+            .unwrap();
+            // Two batches: the first populates the plan cache, the second
+            // serves through it — both must match eager exactly.
+            for round in 0..2 {
+                let got = streaming.infer(&xs).unwrap();
+                assert_eq!(
+                    got, want,
+                    "trial {trial} threads {threads} round {round}: per-batch != eager"
+                );
+            }
+            let st = streaming.decode_cache_stats().unwrap();
+            assert_eq!(
+                st.misses,
+                model.encrypted_layers().count() as u64,
+                "trial {trial}: one plan per encrypted layer"
+            );
+            assert!(st.hits > 0, "trial {trial}: later batches must hit the plan cache");
+        }
+    }
+}
+
+/// Legacy v1 containers (single encrypted head + dense tails) still load,
+/// and serve identically to the v2 round-trip of the same model.
+#[test]
+fn property_v1_container_still_loads_and_serves() {
+    for trial in 0..8u64 {
+        // v1-expressible topology: one encrypted layer + dense tails.
+        let model = synthetic_layer_graph(
+            500 + trial,
+            16 + 8 * (trial % 3) as usize,
+            &[SynthEncrypted {
+                out_dim: 6 + (trial % 4) as usize,
+                nq: 1 + (trial % 2) as usize,
+                ..Default::default()
+            }],
+            &[5],
+            3,
+        );
+        let v1 = model.to_v1_bytes().unwrap();
+        let from_v1 = SqnnModel::from_bytes(&v1)
+            .unwrap_or_else(|e| panic!("trial {trial}: v1 load failed: {e:#}"));
+        from_v1.validate().unwrap();
+        let from_v2 = SqnnModel::from_bytes(&model.to_bytes()).unwrap();
+
+        let mut rng = Rng::new(0x51 + trial);
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                (0..model.meta.input_dim).map(|_| rng.next_gaussian() as f32).collect()
+            })
+            .collect();
+        let opts = EngineOptions { decode_threads: 2, ..Default::default() };
+        let a = SqnnEngine::load_native(from_v1, &[4], opts).unwrap().infer(&xs).unwrap();
+        let b = SqnnEngine::load_native(from_v2, &[4], opts).unwrap().infer(&xs).unwrap();
+        assert_eq!(a, b, "trial {trial}: v1 and v2 containers serve differently");
+    }
 }

@@ -1,0 +1,155 @@
+//! TCP protocol error-path coverage over a synthetic layer-graph model
+//! (no artifacts needed): oversized `I` requests, unknown opcodes,
+//! truncated frames, and `E`-response round-trips through `Client` — the
+//! server must answer with structured errors (or close the connection)
+//! and keep serving afterwards.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use sqnn_xor::coordinator::{
+    BatchPolicy, Coordinator, DecodeMode, EngineOptions, SqnnEngine,
+};
+use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
+use sqnn_xor::server::{Client, Server};
+
+const INPUT_DIM: usize = 16;
+const NUM_CLASSES: usize = 3;
+
+fn start_server() -> (Coordinator, Server) {
+    let coordinator = Coordinator::spawn(BatchPolicy::default(), move || {
+        let model = synthetic_layer_graph(
+            0xE44,
+            INPUT_DIM,
+            &[
+                SynthEncrypted { out_dim: 10, ..Default::default() },
+                SynthEncrypted { out_dim: 6, nq: 2, ..Default::default() },
+            ],
+            &[],
+            NUM_CLASSES,
+        );
+        SqnnEngine::load_native(
+            model,
+            &[1, 4],
+            EngineOptions { decode_threads: 2, decode_mode: DecodeMode::PerBatch },
+        )
+    })
+    .unwrap();
+    let server = Server::start(coordinator.handle.clone(), "127.0.0.1:0").unwrap();
+    (coordinator, server)
+}
+
+/// Read one `E` response: opcode byte, length, message bytes.
+fn read_err_response(s: &mut TcpStream) -> String {
+    let mut op = [0u8; 1];
+    s.read_exact(&mut op).expect("read opcode");
+    assert_eq!(op[0], b'E', "expected an E response, got opcode {}", op[0]);
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb).expect("read length");
+    let n = u32::from_le_bytes(nb) as usize;
+    let mut raw = vec![0u8; n];
+    s.read_exact(&mut raw).expect("read message");
+    String::from_utf8_lossy(&raw).into_owned()
+}
+
+/// After a protocol error the server closes the connection: the next read
+/// must observe EOF (or a reset), never more data.
+fn assert_closed(s: &mut TcpStream) {
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 1];
+    match s.read(&mut buf) {
+        Ok(0) => {}
+        Ok(n) => panic!("expected EOF after protocol error, got {n} bytes"),
+        Err(_) => {} // reset is also an acceptable close
+    }
+}
+
+#[test]
+fn oversized_request_gets_structured_error_then_close() {
+    let (_coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"I").unwrap();
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    let msg = read_err_response(&mut s);
+    assert!(msg.contains("oversized"), "unexpected error message: {msg}");
+    assert_closed(&mut s);
+    server.stop();
+}
+
+#[test]
+fn unknown_opcode_gets_structured_error_then_close() {
+    let (_coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"Z").unwrap();
+    let msg = read_err_response(&mut s);
+    assert!(msg.contains("unknown opcode"), "unexpected error message: {msg}");
+    assert_closed(&mut s);
+    server.stop();
+}
+
+#[test]
+fn truncated_frame_closes_connection() {
+    let (_coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+    // Announce 8 floats but send only 2: the server's frame read times
+    // out and the connection is dropped rather than hanging forever.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"I").unwrap();
+    s.write_all(&8u32.to_le_bytes()).unwrap();
+    s.write_all(&1.0f32.to_le_bytes()).unwrap();
+    s.write_all(&2.0f32.to_le_bytes()).unwrap();
+    assert_closed(&mut s);
+    // A truncated length prefix (1 of 4 bytes) must also be dropped.
+    let mut s2 = TcpStream::connect(&addr).unwrap();
+    s2.write_all(b"I").unwrap();
+    s2.write_all(&[7u8]).unwrap();
+    assert_closed(&mut s2);
+    server.stop();
+}
+
+#[test]
+fn e_response_roundtrips_through_client_and_server_survives() {
+    let (coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+
+    // Wrong input width: the engine rejects it, the coordinator relays
+    // the error, the server frames it as `E`, and `Client` surfaces it.
+    let mut c = Client::connect(&addr).unwrap();
+    let err = c.infer(&[0.0f32; INPUT_DIM - 3]).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("server error"), "client did not surface E: {text}");
+    assert!(text.contains("length"), "E payload lost the engine message: {text}");
+
+    // The same connection keeps working after an E response…
+    let logits = c.infer(&[0.25f32; INPUT_DIM]).unwrap();
+    assert_eq!(logits.len(), NUM_CLASSES);
+
+    // …and so does the server as a whole, including the stats endpoint.
+    let mut c2 = Client::connect(&addr).unwrap();
+    let logits2 = c2.infer(&[0.25f32; INPUT_DIM]).unwrap();
+    assert_eq!(logits2, logits, "same input must produce identical logits");
+    let stats = c2.stats_json().unwrap();
+    assert!(stats.contains("\"requests\""), "bad stats payload: {stats}");
+    let snap = coordinator.handle.metrics().snapshot();
+    assert!(snap.errors >= 1, "engine rejection must be counted as an error");
+    server.stop();
+}
+
+/// Many short-lived connections in sequence: the accept loop reaps
+/// finished handler threads as it goes (the handle Vec must not grow one
+/// entry per connection for the server's lifetime), and every connection
+/// gets served.
+#[test]
+fn sequential_connections_are_reaped_and_served() {
+    let (_coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+    for i in 0..32 {
+        let mut c = Client::connect(&addr).unwrap();
+        let logits = c.infer(&[i as f32 * 0.01; INPUT_DIM]).unwrap();
+        assert_eq!(logits.len(), NUM_CLASSES, "connection {i}");
+    }
+    server.stop();
+}
