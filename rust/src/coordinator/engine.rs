@@ -5,14 +5,19 @@
 //! [`Layer::Dense`] / [`Layer::Csr`]) with per-layer activations. Two
 //! backends:
 //!
-//! * **native** (default): encrypted layers are materialized through the
-//!   thread-sharded XOR decoder (`runtime::parallel`, plan cache keyed by
-//!   each layer's `layer_id`) and the forward pass runs in plain Rust.
-//!   [`DecodeMode`] picks *when* decode happens: `Eager` decodes every
-//!   encrypted layer once at load; `PerBatch` re-decodes them on every
-//!   batch — the software model of the paper's in-graph fixed-rate decode
-//!   (§3.1, §6), exercising the plan cache on the hot path. Both modes are
-//!   bit-identical because the decode is deterministic.
+//! * **native** (default): every layer executes through a per-layer
+//!   [`MatmulKernel`](crate::kernels::MatmulKernel) picked by the
+//!   [`KernelRegistry`](crate::kernels::KernelRegistry) from the layer's
+//!   storage kind, the [`DecodeMode`], and the [`KernelChoice`] knob
+//!   (`--kernel`): dense affine, real CSR SpMV (no densify on the serving
+//!   path), or the fused tile-streaming XOR-decode × matmul that consumes
+//!   decoded tiles immediately and never materializes the dense weights.
+//!   [`DecodeMode`] picks *when* encrypted layers decode: `Eager` decodes
+//!   once at load; `PerBatch` streams decode on every batch — the
+//!   software model of the paper's in-graph fixed-rate decode (§3.1, §6),
+//!   exercising the plan cache on the hot path. Every kernel × mode ×
+//!   thread-count combination is bit-identical because the decode is
+//!   deterministic and all kernels accumulate in the same f32 order.
 //! * **pjrt** (feature `xla`): batches execute through AOT-compiled XLA
 //!   executables, picking the smallest compiled batch bucket, padding,
 //!   executing, and slicing — encrypted weights live in (device) memory,
@@ -25,6 +30,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::io::sqnn_file::{Layer, SqnnModel};
+use crate::kernels::{KernelChoice, KernelCtx, KernelRegistry};
 use crate::runtime::parallel::{CacheStats, DecodeConfig, ParallelDecoder};
 use crate::runtime::{Runtime, Tensor};
 
@@ -93,6 +99,9 @@ pub struct EngineOptions {
     pub decode_threads: usize,
     /// When encrypted layers are decoded (native backend only).
     pub decode_mode: DecodeMode,
+    /// Which matmul kernel family serves each layer (native backend
+    /// only); see [`KernelChoice`] for the per-layer selection table.
+    pub kernel: KernelChoice,
 }
 
 /// A ready-to-serve engine.
@@ -110,19 +119,13 @@ enum Backend {
     Pjrt(PjrtExec),
 }
 
-/// Pure-Rust execution state: per-layer weight cache over the
-/// thread-sharded decoder.
+/// Pure-Rust execution state: the per-layer kernel plan over the
+/// thread-sharded decoder. Any weight caches (eager-decoded encrypted
+/// layers, forced format conversions) live inside the kernels themselves.
 struct NativeExec {
     decoder: ParallelDecoder,
     mode: DecodeMode,
-    /// Materialized weights, parallel to `model.layers`, for layers whose
-    /// serving form differs from their stored form: decoded encrypted
-    /// layers (under [`DecodeMode::Eager`] only) and densified CSR
-    /// layers. `Layer::Dense` is always `None` — the forward pass borrows
-    /// its weights straight from the model instead of duplicating them —
-    /// and so are encrypted layers under [`DecodeMode::PerBatch`], which
-    /// re-materialize on every batch.
-    cached: Vec<Option<Vec<f32>>>,
+    registry: KernelRegistry,
 }
 
 #[cfg(feature = "xla")]
@@ -307,11 +310,14 @@ impl SqnnEngine {
         }
     }
 
-    /// Build the native backend. Under [`DecodeMode::Eager`] every layer
-    /// is materialized once here (encrypted layers through the
-    /// thread-sharded XOR decoder, plan cached under their `layer_id`);
-    /// under [`DecodeMode::PerBatch`] encrypted layers stay encrypted and
-    /// are re-decoded on every batch.
+    /// Build the native backend: validate the chain, then build the
+    /// per-layer kernel plan. Under [`DecodeMode::Eager`] encrypted
+    /// layers are decoded once here (through the thread-sharded XOR
+    /// decoder, plan cached under their `layer_id`) into dense-kernel
+    /// caches; under [`DecodeMode::PerBatch`] they stay encrypted and
+    /// stream tile-by-tile through the fused kernel on every batch.
+    /// `Layer::Csr` serves through real SpMV — its weights are never
+    /// densified unless `--kernel dense` forces the legacy path.
     pub fn load_native(
         model: SqnnModel,
         batch_sizes: &[usize],
@@ -320,22 +326,15 @@ impl SqnnEngine {
         let buckets = sorted_buckets(batch_sizes)?;
         model.validate()?;
         let decoder = ParallelDecoder::new(DecodeConfig::with_threads(opts.decode_threads));
-        let cfg = DecodeConfig::with_threads(decoder.threads());
-        let mut cached = Vec::with_capacity(model.layers.len());
-        for layer in &model.layers {
-            let materialize_now = match layer {
-                Layer::Encrypted(_) => opts.decode_mode == DecodeMode::Eager,
-                Layer::Dense(_) => false, // served straight from the model
-                Layer::Csr(_) => true,    // densified once
-            };
-            cached.push(
-                materialize_now.then(|| layer.materialize(decoder.cache(), &cfg).data),
-            );
-        }
+        let registry = KernelRegistry::build(&model, opts.kernel, opts.decode_mode, &decoder)?;
         Ok(SqnnEngine {
             model,
             buckets,
-            backend: Backend::Native(NativeExec { decoder, mode: opts.decode_mode, cached }),
+            backend: Backend::Native(NativeExec {
+                decoder,
+                mode: opts.decode_mode,
+                registry,
+            }),
         })
     }
 
@@ -370,6 +369,16 @@ impl SqnnEngine {
     pub fn decode_mode(&self) -> Option<DecodeMode> {
         match &self.backend {
             Backend::Native(ne) => Some(ne.mode),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
+    /// The native backend's per-layer kernel names, in chain order
+    /// (`None` on PJRT, whose lowering is a single fused graph).
+    pub fn kernel_plan(&self) -> Option<Vec<&'static str>> {
+        match &self.backend {
+            Backend::Native(ne) => Some(ne.registry.names()),
             #[cfg(feature = "xla")]
             Backend::Pjrt(_) => None,
         }
@@ -410,54 +419,54 @@ impl SqnnEngine {
         }
     }
 
-    /// Native forward over the layer chain: `h ← act_i(W_i h + b_i)` per
-    /// layer, with each layer's own activation.
+    /// Native forward over the layer chain, batch-major: each layer's
+    /// kernel runs once over the whole batch (`H ← act_i(K_i(H))`), so
+    /// streaming kernels decode each weight tile once per batch rather
+    /// than once per request. Row-wise the result is identical to
+    /// running inputs one at a time — every input's accumulator chain is
+    /// independent.
     fn infer_native(&self, ne: &NativeExec, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let in_dim = self.model.meta.input_dim;
         let n_cls = self.model.meta.num_classes;
-        // Streaming decode: encrypted layers without cached weights
-        // (PerBatch mode) are re-materialized here, once per batch,
-        // through the shared plan cache.
-        let cfg = DecodeConfig::with_threads(ne.decoder.threads());
-        let fresh: Vec<Option<Vec<f32>>> = self
-            .model
-            .layers
-            .iter()
-            .zip(&ne.cached)
-            .map(|(layer, cached)| {
-                if cached.is_none() && matches!(layer, Layer::Encrypted(_)) {
-                    Some(layer.materialize(ne.decoder.cache(), &cfg).data)
-                } else {
-                    None
-                }
-            })
-            .collect();
-        let mut out = Vec::with_capacity(inputs.len());
+        let ctx = KernelCtx { decoder: &ne.decoder };
         for (k, row) in inputs.iter().enumerate() {
             if row.len() != in_dim {
                 bail!("input {k} has length {} != {in_dim}", row.len());
             }
-            let mut h: Vec<f32> = Vec::new();
-            for (li, layer) in self.model.layers.iter().enumerate() {
-                let w: &[f32] = match layer {
-                    // Dense layers serve from the model itself (no copy).
-                    Layer::Dense(d) => d.w.as_slice(),
-                    _ => match (&ne.cached[li], &fresh[li]) {
-                        (Some(w), _) | (None, Some(w)) => w.as_slice(),
-                        (None, None) => unreachable!("non-dense layers are cached or fresh"),
-                    },
-                };
-                let x: &[f32] = if li == 0 { row } else { &h };
-                let mut y = affine(w, layer.out_dim(), layer.in_dim(), x, layer.bias());
-                layer.activation().apply(&mut y);
-                h = y;
-            }
-            if h.len() != n_cls {
-                bail!("model head emits {} logits, expected {n_cls}", h.len());
-            }
-            out.push(h);
         }
-        Ok(out)
+        // Per-batch hook: kernels with batch-scoped state (the legacy
+        // materialize-then-matmul path under `--kernel dense
+        // --decode-mode per-batch`) refresh it once here, not per input.
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            ne.registry.kernel(li).begin_batch(layer, &ctx)?;
+        }
+        let mut h: Vec<Vec<f32>> = Vec::new();
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            let xs: Vec<&[f32]> = if li == 0 {
+                inputs.iter().map(Vec::as_slice).collect()
+            } else {
+                h.iter().map(Vec::as_slice).collect()
+            };
+            let mut ys = ne.registry.kernel(li).forward_batch(layer, &ctx, &xs)?;
+            if ys.len() != xs.len() {
+                bail!("layer {} returned {} rows for {} inputs", layer.name(), ys.len(), xs.len());
+            }
+            for y in &mut ys {
+                layer.activation().apply(y);
+            }
+            h = ys;
+        }
+        // Release batch-scoped kernel buffers (per-batch materialized
+        // weights) so an idle engine holds only the compressed model.
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            ne.registry.kernel(li).end_batch(layer, &ctx)?;
+        }
+        for row in &h {
+            if row.len() != n_cls {
+                bail!("model head emits {} logits, expected {n_cls}", row.len());
+            }
+        }
+        Ok(h)
     }
 
     #[cfg(feature = "xla")]
@@ -513,23 +522,6 @@ impl SqnnEngine {
             })
             .collect())
     }
-}
-
-/// `y = W x + b` for a row-major `rows × cols` matrix.
-fn affine(w: &[f32], rows: usize, cols: usize, x: &[f32], b: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(w.len(), rows * cols);
-    debug_assert_eq!(x.len(), cols);
-    debug_assert_eq!(b.len(), rows);
-    let mut y = Vec::with_capacity(rows);
-    for r in 0..rows {
-        let wrow = &w[r * cols..(r + 1) * cols];
-        let mut acc = b[r];
-        for (wv, xv) in wrow.iter().zip(x) {
-            acc += wv * xv;
-        }
-        y.push(acc);
-    }
-    y
 }
 
 #[cfg(test)]
@@ -653,10 +645,13 @@ mod tests {
         let engine = SqnnEngine::load_native(
             m.clone(),
             &[4, 1, 4],
-            EngineOptions { decode_threads: 2, decode_mode: DecodeMode::Eager },
+            EngineOptions { decode_threads: 2, decode_mode: DecodeMode::Eager, ..Default::default() },
         )
         .unwrap();
         assert_eq!(engine.backend_name(), "native");
+        // Auto + Eager: the encrypted head serves from an eager-decoded
+        // dense cache, the tails from their own dense storage.
+        assert_eq!(engine.kernel_plan(), Some(vec!["dense", "dense", "dense"]));
         assert_eq!(engine.buckets(), vec![1, 4]);
         assert_eq!(engine.pick_bucket(3), 4);
         assert_eq!(engine.pick_bucket(9), 4);
@@ -719,16 +714,19 @@ mod tests {
         let eager = SqnnEngine::load_native(
             m.clone(),
             &[4],
-            EngineOptions { decode_threads: 3, decode_mode: DecodeMode::Eager },
+            EngineOptions { decode_threads: 3, decode_mode: DecodeMode::Eager, ..Default::default() },
         )
         .unwrap();
         let streaming = SqnnEngine::load_native(
             m,
             &[4],
-            EngineOptions { decode_threads: 3, decode_mode: DecodeMode::PerBatch },
+            EngineOptions { decode_threads: 3, decode_mode: DecodeMode::PerBatch, ..Default::default() },
         )
         .unwrap();
         assert_eq!(streaming.decode_mode(), Some(DecodeMode::PerBatch));
+        // Auto + PerBatch: the encrypted head streams through the fused
+        // tile kernel; nothing is materialized at load.
+        assert_eq!(streaming.kernel_plan(), Some(vec!["fused-decode", "dense", "dense"]));
         // PerBatch defers decode: nothing hits the plan cache until the
         // first batch arrives.
         let st0 = streaming.decode_cache_stats().unwrap();

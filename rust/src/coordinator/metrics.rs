@@ -1,63 +1,184 @@
-//! Serving metrics: counters + latency reservoir.
+//! Serving metrics: counters, latency sampling, and per-batch execution
+//! time.
+//!
+//! Latency and exec-time distributions are kept in bounded *replacement*
+//! reservoirs (Vitter's algorithm R): once full, each new sample replaces
+//! a uniformly random slot with probability `cap/seen`, so the reservoir
+//! stays a uniform sample of the whole stream. (The previous
+//! implementation stopped sampling at 100k requests, silently freezing
+//! every percentile on the first few minutes of traffic.) Means are exact
+//! — computed from monotonic totals, not the sample.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::util::{mean, percentile};
+use crate::util::percentile;
+
+/// Reservoir capacity for latency/exec samples.
+const RESERVOIR: usize = 100_000;
+
+/// Bounded uniform sampler over an unbounded stream (algorithm R).
+#[derive(Debug)]
+struct Reservoir {
+    cap: usize,
+    /// Samples seen over the stream's lifetime (not just retained).
+    seen: u64,
+    samples: Vec<f64>,
+    /// xorshift64* state for replacement slots — deterministic and
+    /// dependency-free (the offline image has no rand crate).
+    rng: u64,
+}
+
+impl Reservoir {
+    fn new(cap: usize) -> Self {
+        Reservoir { cap: cap.max(1), seen: 0, samples: Vec::new(), rng: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    fn next_rng(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.next_rng() % self.seen;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+}
 
 /// Thread-safe metrics sink for the coordinator.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     errors: AtomicU64,
     batch_items: AtomicU64,
-    /// Per-request end-to-end latencies, seconds (bounded reservoir).
-    latencies: Mutex<Vec<f64>>,
+    /// Exact totals for means (nanoseconds; ~584 years before overflow).
+    latency_total_ns: AtomicU64,
+    exec_total_ns: AtomicU64,
+    /// Per-request end-to-end latencies, seconds (replacement reservoir).
+    latencies: Mutex<Reservoir>,
+    /// Per-batch engine execution times, seconds.
+    exec: Mutex<Reservoir>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::with_reservoir_cap(RESERVOIR)
+    }
 }
 
 /// A read-only snapshot.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Requests recorded (continues counting past the reservoir cap).
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Engine/coordinator errors.
     pub errors: u64,
+    /// Mean requests per executed batch.
     pub mean_batch_size: f64,
+    /// Exact mean end-to-end request latency.
     pub latency_mean_ms: f64,
+    /// Median latency over the reservoir sample.
     pub latency_p50_ms: f64,
+    /// 99th-percentile latency over the reservoir sample.
     pub latency_p99_ms: f64,
+    /// Exact mean per-batch engine execution time.
+    pub exec_mean_ms: f64,
+    /// 99th-percentile per-batch execution time over the reservoir.
+    pub exec_p99_ms: f64,
 }
 
-const RESERVOIR: usize = 100_000;
+impl MetricsSnapshot {
+    /// Single-line JSON rendering — the wire form of the server's `S`
+    /// and framed `M` stats opcodes (hand-rolled; no serde offline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"batches\":{},\"errors\":{},\"mean_batch\":{:.3},\
+             \"latency_mean_ms\":{:.3},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
+             \"exec_mean_ms\":{:.3},\"exec_p99_ms\":{:.3}}}",
+            self.requests,
+            self.batches,
+            self.errors,
+            self.mean_batch_size,
+            self.latency_mean_ms,
+            self.latency_p50_ms,
+            self.latency_p99_ms,
+            self.exec_mean_ms,
+            self.exec_p99_ms
+        )
+    }
+}
 
 impl Metrics {
+    /// Metrics with the default reservoir capacity.
     pub fn new() -> Self {
         Metrics::default()
     }
 
-    pub fn record_batch(&self, size: usize, _exec: Duration) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
-    }
-
-    pub fn record_latency(&self, latency: Duration) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(latency.as_secs_f64());
+    /// Metrics with an explicit reservoir capacity (tests exercise
+    /// saturation without 100k samples).
+    pub fn with_reservoir_cap(cap: usize) -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            latency_total_ns: AtomicU64::new(0),
+            exec_total_ns: AtomicU64::new(0),
+            latencies: Mutex::new(Reservoir::new(cap)),
+            exec: Mutex::new(Reservoir::new(cap)),
         }
     }
 
+    /// Record one executed batch: its size and engine execution time.
+    pub fn record_batch(&self, size: usize, exec: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
+        self.exec_total_ns.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
+        self.exec.lock().unwrap().record(exec.as_secs_f64());
+    }
+
+    /// Record one request's end-to-end latency.
+    pub fn record_latency(&self, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency_total_ns.fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+        self.latencies.lock().unwrap().record(latency.as_secs_f64());
+    }
+
+    /// Count one error.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Consistent point-in-time view of every counter and distribution.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let l = self.latencies.lock().unwrap();
+        let lat = self.latencies.lock().unwrap();
+        let exec = self.exec.lock().unwrap();
+        let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let mean_ms = |total_ns: u64, n: u64| {
+            if n == 0 {
+                0.0
+            } else {
+                total_ns as f64 / n as f64 / 1e6
+            }
+        };
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
+            requests,
             batches,
             errors: self.errors.load(Ordering::Relaxed),
             mean_batch_size: if batches == 0 {
@@ -65,9 +186,11 @@ impl Metrics {
             } else {
                 self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64
             },
-            latency_mean_ms: mean(&l) * 1e3,
-            latency_p50_ms: percentile(&l, 0.5) * 1e3,
-            latency_p99_ms: percentile(&l, 0.99) * 1e3,
+            latency_mean_ms: mean_ms(self.latency_total_ns.load(Ordering::Relaxed), requests),
+            latency_p50_ms: percentile(&lat.samples, 0.5) * 1e3,
+            latency_p99_ms: percentile(&lat.samples, 0.99) * 1e3,
+            exec_mean_ms: mean_ms(self.exec_total_ns.load(Ordering::Relaxed), batches),
+            exec_p99_ms: percentile(&exec.samples, 0.99) * 1e3,
         }
     }
 }
@@ -79,8 +202,8 @@ mod tests {
     #[test]
     fn snapshot_math() {
         let m = Metrics::new();
-        m.record_batch(4, Duration::from_millis(1));
-        m.record_batch(2, Duration::from_millis(1));
+        m.record_batch(4, Duration::from_millis(2));
+        m.record_batch(2, Duration::from_millis(4));
         for ms in [1u64, 2, 3] {
             m.record_latency(Duration::from_millis(ms));
         }
@@ -92,5 +215,55 @@ mod tests {
         assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
         assert!((s.latency_mean_ms - 2.0).abs() < 0.2);
         assert!(s.latency_p99_ms >= s.latency_p50_ms);
+        // Exec time is no longer discarded: exact mean of 2ms and 4ms.
+        assert!((s.exec_mean_ms - 3.0).abs() < 0.01, "exec mean {}", s.exec_mean_ms);
+        assert!(s.exec_p99_ms >= 3.9 && s.exec_p99_ms <= 4.1, "exec p99 {}", s.exec_p99_ms);
+    }
+
+    #[test]
+    fn reservoir_keeps_sampling_after_saturation() {
+        let m = Metrics::with_reservoir_cap(16);
+        // Saturate with 1ms, then stream 10× the cap of 5ms samples.
+        for _ in 0..16 {
+            m.record_latency(Duration::from_millis(1));
+        }
+        for _ in 0..160 {
+            m.record_latency(Duration::from_millis(5));
+        }
+        let s = m.snapshot();
+        // Counters never stop.
+        assert_eq!(s.requests, 176);
+        // The exact mean reflects the whole stream…
+        let want_mean = (16.0 * 1.0 + 160.0 * 5.0) / 176.0;
+        assert!((s.latency_mean_ms - want_mean).abs() < 0.01, "{}", s.latency_mean_ms);
+        // …and the reservoir sample was refreshed past the cap (the old
+        // implementation would have pinned p50 and p99 at 1ms forever).
+        assert!(s.latency_p99_ms > 4.0, "p99 frozen at {}", s.latency_p99_ms);
+        assert!(s.latency_p50_ms > 1.5, "p50 frozen at {}", s.latency_p50_ms);
+        // The sample stays bounded at the cap.
+        assert_eq!(m.latencies.lock().unwrap().samples.len(), 16);
+        assert_eq!(m.latencies.lock().unwrap().seen, 176);
+    }
+
+    #[test]
+    fn snapshot_json_has_all_fields() {
+        let m = Metrics::new();
+        m.record_batch(1, Duration::from_millis(1));
+        m.record_latency(Duration::from_millis(1));
+        let json = m.snapshot().to_json();
+        for key in [
+            "\"requests\"",
+            "\"batches\"",
+            "\"errors\"",
+            "\"mean_batch\"",
+            "\"latency_mean_ms\"",
+            "\"p50_ms\"",
+            "\"p99_ms\"",
+            "\"exec_mean_ms\"",
+            "\"exec_p99_ms\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.starts_with('{') && json.ends_with('}'));
     }
 }

@@ -16,3 +16,6 @@ pub use engine::{
     build_static_inputs, DecodeMode, EngineOptions, GraphVariant, SqnnEngine, StaticInputs,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
+
+// The engine's kernel knob rides along with the other engine options.
+pub use crate::kernels::KernelChoice;

@@ -191,6 +191,18 @@ impl BitVec {
         self.words.fill(0);
     }
 
+    /// Re-shape the vector to `len` bits, all zero, reusing the word
+    /// allocation when it is already large enough — the scratch-buffer
+    /// primitive of the tile-streaming decode path, which reuses one
+    /// `BitVec` per plane across every tile of a layer.
+    pub fn reset(&mut self, len: usize) {
+        let words = len.div_ceil(64);
+        self.words.truncate(words);
+        self.words.fill(0);
+        self.words.resize(words, 0);
+        self.len = len;
+    }
+
     /// OR `len` bits of `src` (from its bit 0) into `self` starting at
     /// bit `offset` — whole-word splicing for the decode hot path. The
     /// destination range is assumed to be currently zero (planes are
@@ -358,6 +370,31 @@ mod tests {
         v.clear();
         assert_eq!(v.count_ones(), 0);
         assert_eq!(v.len(), 130);
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes() {
+        let mut v = BitVec::ones(130);
+        // Shrink: reused storage, all-zero, new length.
+        v.reset(70);
+        assert_eq!(v.len(), 70);
+        assert_eq!(v.count_ones(), 0);
+        v.set(69, true);
+        // Grow: fresh zero bits appear past the old length.
+        v.reset(200);
+        assert_eq!(v.len(), 200);
+        assert_eq!(v.count_ones(), 0);
+        for i in 0..200 {
+            assert!(!v.get(i));
+        }
+        // Reset to the same length behaves like clear().
+        v.set(0, true);
+        v.reset(200);
+        assert_eq!(v.count_ones(), 0);
+        // Zero-length is valid.
+        v.reset(0);
+        assert_eq!(v.len(), 0);
+        assert!(v.is_empty());
     }
 
     #[test]

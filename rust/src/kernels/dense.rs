@@ -1,0 +1,186 @@
+//! Dense affine kernel: `y = W·x + b` over a row-major dense weight
+//! matrix — the reference execution path every other kernel is
+//! bit-compared against.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::io::sqnn_file::Layer;
+
+use super::{KernelCtx, MatmulKernel};
+
+/// `y = W x + b` for a row-major `rows × cols` matrix. Per output row the
+/// accumulator starts at the bias and adds one product per column in
+/// ascending order — the accumulation-order contract the fused and SpMV
+/// kernels reproduce to stay bit-identical.
+pub fn affine(w: &[f32], rows: usize, cols: usize, x: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(b.len(), rows);
+    let mut y = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let wrow = &w[r * cols..(r + 1) * cols];
+        let mut acc = b[r];
+        for (wv, xv) in wrow.iter().zip(x) {
+            acc += wv * xv;
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// Where this kernel's dense weights come from.
+enum Source {
+    /// The layer's own storage ([`Layer::Dense`] only; zero copies).
+    LayerWeights,
+    /// A weight buffer prepared at registry build: an eager-decoded
+    /// encrypted layer or a densified CSR layer.
+    Cached(Vec<f32>),
+    /// Re-materialized through the decode-plan cache on every batch (the
+    /// legacy `--kernel dense --decode-mode per-batch` streaming path,
+    /// kept as the measurable baseline the fused kernel beats).
+    PerBatchMaterialize(Mutex<Vec<f32>>),
+}
+
+/// Dense affine kernel over one of three weight sources: the layer's
+/// own storage, a prepared cache, or a per-batch materialized buffer.
+pub struct DenseKernel {
+    src: Source,
+}
+
+impl DenseKernel {
+    /// Serve straight from the layer's own dense storage.
+    pub fn from_layer() -> Self {
+        DenseKernel { src: Source::LayerWeights }
+    }
+
+    /// Serve from a prepared dense weight buffer (eager-decoded or
+    /// densified at registry build).
+    pub fn with_cached(w: Vec<f32>) -> Self {
+        DenseKernel { src: Source::Cached(w) }
+    }
+
+    /// Re-materialize the layer's dense weights once per batch.
+    pub fn per_batch() -> Self {
+        DenseKernel { src: Source::PerBatchMaterialize(Mutex::new(Vec::new())) }
+    }
+}
+
+impl MatmulKernel for DenseKernel {
+    fn name(&self) -> &'static str {
+        match self.src {
+            Source::LayerWeights | Source::Cached(_) => "dense",
+            Source::PerBatchMaterialize(_) => "dense-materialize",
+        }
+    }
+
+    fn begin_batch(&self, layer: &Layer, ctx: &KernelCtx<'_>) -> Result<()> {
+        if let Source::PerBatchMaterialize(slot) = &self.src {
+            *slot.lock().unwrap() =
+                layer.materialize(ctx.decoder.cache(), &ctx.decode_config()).data;
+        }
+        Ok(())
+    }
+
+    fn end_batch(&self, _layer: &Layer, _ctx: &KernelCtx<'_>) -> Result<()> {
+        if let Source::PerBatchMaterialize(slot) = &self.src {
+            // Drop the batch's dense weights: between batches this mode
+            // must hold only the encrypted form, like the old engine's
+            // per-infer `fresh` buffer did.
+            *slot.lock().unwrap() = Vec::new();
+        }
+        Ok(())
+    }
+
+    fn forward(&self, layer: &Layer, ctx: &KernelCtx<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        let (rows, cols) = (layer.out_dim(), layer.in_dim());
+        match &self.src {
+            Source::LayerWeights => {
+                let Layer::Dense(d) = layer else {
+                    bail!("dense kernel bound to a non-dense layer {}", layer.name());
+                };
+                Ok(affine(&d.w, rows, cols, x, &d.b))
+            }
+            Source::Cached(w) => Ok(affine(w, rows, cols, x, layer.bias())),
+            Source::PerBatchMaterialize(slot) => {
+                let mut w = slot.lock().unwrap();
+                if w.len() != rows * cols {
+                    // Robustness: a forward without begin_batch (direct
+                    // kernel use outside the engine) materializes here.
+                    *w = layer.materialize(ctx.decoder.cache(), &ctx.decode_config()).data;
+                }
+                Ok(affine(w.as_slice(), rows, cols, x, layer.bias()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::sqnn_file::{Activation, DenseLayer};
+    use crate::runtime::parallel::{DecodeConfig, ParallelDecoder};
+
+    fn dense_layer() -> Layer {
+        Layer::Dense(DenseLayer {
+            name: "d".into(),
+            rows: 2,
+            cols: 3,
+            w: vec![1.0, 2.0, 3.0, -1.0, 0.5, 0.0],
+            b: vec![0.5, -0.5],
+            activation: Activation::Identity,
+        })
+    }
+
+    #[test]
+    fn affine_matches_by_hand() {
+        let y = affine(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[10.0, 100.0], &[1.0, 2.0]);
+        assert_eq!(y, vec![1.0 + 210.0, 2.0 + 430.0]);
+    }
+
+    #[test]
+    fn layer_and_cached_sources_agree() {
+        let layer = dense_layer();
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+        let ctx = KernelCtx { decoder: &decoder };
+        let x = [1.0f32, -2.0, 0.25];
+        let from_layer = DenseKernel::from_layer();
+        assert_eq!(from_layer.name(), "dense");
+        let a = from_layer.forward(&layer, &ctx, &x).unwrap();
+        let cached =
+            DenseKernel::with_cached(vec![1.0, 2.0, 3.0, -1.0, 0.5, 0.0]);
+        let b = cached.forward(&layer, &ctx, &x).unwrap();
+        assert_eq!(a, b);
+        // Per-batch source materializes the same weights (dense layers
+        // materialize to a copy of their own storage).
+        let pb = DenseKernel::per_batch();
+        assert_eq!(pb.name(), "dense-materialize");
+        pb.begin_batch(&layer, &ctx).unwrap();
+        let c = pb.forward(&layer, &ctx, &x).unwrap();
+        assert_eq!(a, c);
+        // end_batch releases the batch's dense buffer…
+        pb.end_batch(&layer, &ctx).unwrap();
+        let Source::PerBatchMaterialize(slot) = &pb.src else {
+            unreachable!("per_batch constructor built the wrong source");
+        };
+        assert!(slot.lock().unwrap().is_empty(), "end_batch must free the batch buffer");
+        // …and a later forward (no begin_batch) still serves correctly
+        // via the lazy fallback.
+        let d = pb.forward(&layer, &ctx, &x).unwrap();
+        assert_eq!(a, d);
+    }
+
+    #[test]
+    fn from_layer_rejects_wrong_kind() {
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+        let ctx = KernelCtx { decoder: &decoder };
+        let layer = crate::io::sqnn_file::Layer::Csr(crate::io::sqnn_file::CsrLayer {
+            name: "c".into(),
+            csr: crate::sparse::CsrMatrix::from_dense(&[1.0, 0.0, 0.0, 1.0], 2, 2, None),
+            bias: vec![0.0; 2],
+            activation: Activation::Identity,
+        });
+        assert!(DenseKernel::from_layer().forward(&layer, &ctx, &[1.0, 1.0]).is_err());
+    }
+}

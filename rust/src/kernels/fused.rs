@@ -1,0 +1,333 @@
+//! Fused tile-streaming XOR-decode × matmul kernel.
+//!
+//! The paper's deployment story (§3.1, §6; also Park et al. 2105.01869)
+//! is that the decoder's output is consumed *immediately* by the MAC
+//! array — decoded weights never round-trip through a materialized
+//! buffer. This kernel is the software analogue: an encrypted layer's
+//! slice range is walked tile by tile
+//! ([`slice_tiles`](crate::runtime::parallel::slice_tiles)); each tile is
+//! decoded through the cached
+//! [`DecodePlan`](crate::runtime::parallel::DecodePlan) (thread-sharded
+//! across the engine's decode workers), its f32 weight values are
+//! reconstructed from mask + alphas into a thread-local scratch buffer,
+//! and the tile is multiplied into the output accumulators *before* the
+//! next tile is decoded. Peak per-layer scratch is one tile
+//! (`tile_slices × n_out` bits per plane + as many f32s), never the full
+//! `rows × cols` dense matrix.
+//!
+//! **Bit-identity.** Output equals the materialize-then-matmul reference
+//! exactly, at every decode thread count, because every float op happens
+//! in the same order on the same values: tile reconstruction performs the
+//! plane-major `±α` accumulation of
+//! [`EncryptedLayer::reconstruct_dense_from`], and tiles are visited in
+//! ascending flat order so each output row's accumulator chain adds its
+//! columns ascending exactly as [`affine`](super::affine) does.
+//!
+//! [`EncryptedLayer::reconstruct_dense_from`]:
+//! crate::io::sqnn_file::EncryptedLayer::reconstruct_dense_from
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::gf2::BitVec;
+use crate::io::sqnn_file::{EncryptedLayer, Layer};
+use crate::runtime::parallel::{decode_slice_range_into, slice_tiles};
+
+use super::{KernelCtx, MatmulKernel};
+
+/// Default tile budget: the f32 scratch for one decoded tile holds at
+/// most about this many values (16 KiB — comfortably cache-resident next
+/// to the activations). `tile_slices = max(1, budget / n_out)`.
+pub const DEFAULT_TILE_F32S: usize = 4096;
+
+/// Per-thread decode/reconstruct scratch, shared by every fused kernel
+/// on that thread. The engine executes layers sequentially, so one
+/// scratch set serves the whole chain; buffers are `reset` per tile and
+/// keep their allocations across tiles, batches, and layers.
+#[derive(Default)]
+struct Scratch {
+    /// One decoded-bit buffer per quantization plane.
+    bits: Vec<BitVec>,
+    /// The tile's reconstructed f32 weight values.
+    vals: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// The fused streaming kernel for one encrypted layer.
+pub struct FusedDecodeKernel {
+    /// Slices decoded per tile (fixed at construction from the layer's
+    /// `n_out` and the tile budget).
+    tile_slices: usize,
+    /// High-water mark of the f32 scratch, for the "never materializes
+    /// the full dense weight" invariant (observability + tests).
+    peak_scratch: AtomicUsize,
+}
+
+impl FusedDecodeKernel {
+    /// Build for `layer` with the [`DEFAULT_TILE_F32S`] tile budget.
+    pub fn new(layer: &EncryptedLayer) -> Self {
+        Self::with_tile_f32s(layer, DEFAULT_TILE_F32S)
+    }
+
+    /// Build with an explicit tile budget in f32 values (tests and
+    /// tuning; the budget is rounded down to whole slices, minimum one).
+    pub fn with_tile_f32s(layer: &EncryptedLayer, tile_f32s: usize) -> Self {
+        let n_out = layer.planes.first().map_or(1, |p| p.n_out).max(1);
+        FusedDecodeKernel {
+            tile_slices: (tile_f32s / n_out).max(1),
+            peak_scratch: AtomicUsize::new(0),
+        }
+    }
+
+    /// Slices decoded per tile.
+    pub fn tile_slices(&self) -> usize {
+        self.tile_slices
+    }
+
+    /// Largest f32 scratch this kernel has filled so far (`≤ tile_slices
+    /// × n_out`, and strictly less than `rows × cols` whenever the layer
+    /// spans more than one tile).
+    pub fn peak_scratch_f32s(&self) -> usize {
+        self.peak_scratch.load(Ordering::Relaxed)
+    }
+}
+
+impl FusedDecodeKernel {
+    /// The tile-streaming core, batch-major: each tile is decoded and
+    /// reconstructed **once**, then multiplied against every input in
+    /// `xs` before the next tile is decoded. Per input, the accumulation
+    /// order is exactly [`affine`](super::affine)'s, so each output row
+    /// is bit-identical to the materialized path regardless of batch
+    /// composition.
+    fn run(&self, e: &EncryptedLayer, ctx: &KernelCtx<'_>, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        for (k, x) in xs.iter().enumerate() {
+            if x.len() != e.cols {
+                bail!("layer {}: input {k} length {} != {} columns", e.name, x.len(), e.cols);
+            }
+        }
+        let n = e.rows * e.cols;
+        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| e.bias.clone()).collect();
+        if n == 0 || e.planes.is_empty() || xs.is_empty() {
+            // No weights to decode (an empty plane set reconstructs to
+            // all-zero weights): the affine collapses to the bias.
+            return Ok(ys);
+        }
+        // One plan serves every plane: a layer's planes share one design
+        // point (enforced by the container parser and model validation).
+        let plan = ctx.decoder.cache().plan_for(e.layer_id, &e.planes[0]);
+        let n_out = plan.n_out();
+        let threads = ctx.decoder.threads();
+        let num_slices = e.planes[0].num_slices();
+        SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            while scratch.bits.len() < e.planes.len() {
+                scratch.bits.push(BitVec::zeros(0));
+            }
+            for (k0, k1) in slice_tiles(num_slices, self.tile_slices) {
+                let b0 = k0 * n_out;
+                let b1 = (k1 * n_out).min(n);
+                let tile_bits = b1 - b0;
+                // 1. Decode every plane's slice range (thread-sharded).
+                for (q, p) in e.planes.iter().enumerate() {
+                    decode_slice_range_into(&plan, p, k0, k1, threads, &mut scratch.bits[q]);
+                }
+                // 2. Reconstruct the tile's f32 weights — plane-major
+                //    ±α accumulation, pruned positions stay 0.0.
+                scratch.vals.clear();
+                scratch.vals.resize(tile_bits, 0.0);
+                for (q, bits) in scratch.bits[..e.planes.len()].iter().enumerate() {
+                    let a = e.alphas[q];
+                    for (j, v) in scratch.vals.iter_mut().enumerate() {
+                        if e.mask.get(b0 + j) {
+                            *v += if bits.get(j) { a } else { -a };
+                        }
+                    }
+                }
+                self.peak_scratch.fetch_max(scratch.vals.len(), Ordering::Relaxed);
+                // 3. Multiply the tile into every input's accumulators
+                //    before the next tile is decoded (weights are read
+                //    once per batch, activations stream over them).
+                for (x, y) in xs.iter().zip(&mut ys) {
+                    let mut flat = b0;
+                    while flat < b1 {
+                        let r = flat / e.cols;
+                        let row_end = ((r + 1) * e.cols).min(b1);
+                        let c0 = flat - r * e.cols;
+                        let mut acc = y[r];
+                        let vals = &scratch.vals[flat - b0..row_end - b0];
+                        for (v, xv) in vals.iter().zip(&x[c0..c0 + vals.len()]) {
+                            acc += v * xv;
+                        }
+                        y[r] = acc;
+                        flat = row_end;
+                    }
+                }
+            }
+        });
+        Ok(ys)
+    }
+}
+
+impl MatmulKernel for FusedDecodeKernel {
+    fn name(&self) -> &'static str {
+        "fused-decode"
+    }
+
+    fn forward(&self, layer: &Layer, ctx: &KernelCtx<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        let Layer::Encrypted(e) = layer else {
+            bail!("fused-decode kernel bound to a non-encrypted layer {}", layer.name());
+        };
+        Ok(self.run(e, ctx, &[x])?.pop().expect("one output per input"))
+    }
+
+    /// Batch-major streaming: the whole point of the fused kernel —
+    /// every weight tile is decoded once per batch, not once per input.
+    fn forward_batch(
+        &self,
+        layer: &Layer,
+        ctx: &KernelCtx<'_>,
+        xs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let Layer::Encrypted(e) = layer else {
+            bail!("fused-decode kernel bound to a non-encrypted layer {}", layer.name());
+        };
+        self.run(e, ctx, xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::sqnn_file::Activation;
+    use crate::kernels::affine;
+    use crate::models::synth::synthetic_encrypted_layer;
+    use crate::rng::Rng;
+    use crate::runtime::parallel::{DecodeConfig, ParallelDecoder};
+
+    fn layer(rows: usize, cols: usize, nq: usize, n_out: usize, seed: u64) -> EncryptedLayer {
+        let mut rng = Rng::new(seed);
+        synthetic_encrypted_layer(
+            7,
+            "enc",
+            rows,
+            cols,
+            nq,
+            0.85,
+            12,
+            n_out,
+            seed,
+            Activation::Relu,
+            &mut rng,
+        )
+        .0
+    }
+
+    #[test]
+    fn fused_matches_materialized_affine_bitwise() {
+        let e = layer(18, 40, 2, 48, 4);
+        let w = e.reconstruct_dense();
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..40).map(|_| rng.next_gaussian() as f32 * 0.7).collect();
+        let want = affine(&w, 18, 40, &x, &e.bias);
+        let wrapped = Layer::Encrypted(e.clone());
+        // Small tile budgets force many partial-row tiles; every thread
+        // count must stay bit-identical to the materialized reference.
+        for tile_f32s in [1usize, 48, 100, 10_000] {
+            for threads in [1usize, 2, 4, 8] {
+                let decoder = ParallelDecoder::new(DecodeConfig::with_threads(threads));
+                let ctx = KernelCtx { decoder: &decoder };
+                let k = FusedDecodeKernel::with_tile_f32s(&e, tile_f32s);
+                let got = k.forward(&wrapped, &ctx, &x).unwrap();
+                assert_eq!(got, want, "tile_f32s={tile_f32s} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_stays_one_tile() {
+        // 96×128 = 12288 weights, n_out=48 → 256 slices; the default
+        // budget (4096 f32s) spans 85 slices, so the layer needs 4 tiles
+        // and the scratch must never approach the full dense size.
+        let e = layer(96, 128, 2, 48, 9);
+        let k = FusedDecodeKernel::new(&e);
+        assert_eq!(k.tile_slices(), DEFAULT_TILE_F32S / 48);
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(2));
+        let ctx = KernelCtx { decoder: &decoder };
+        let x = vec![0.5f32; 128];
+        let wrapped = Layer::Encrypted(e.clone());
+        let got = k.forward(&wrapped, &ctx, &x).unwrap();
+        assert_eq!(got.len(), 96);
+        let peak = k.peak_scratch_f32s();
+        assert!(peak > 0);
+        assert!(peak <= k.tile_slices() * 48, "peak {peak} exceeds one tile");
+        assert!(peak < 96 * 128 / 2, "peak {peak} approaches the full dense weight");
+        // And the output still matches the materialized reference.
+        assert_eq!(got, affine(&e.reconstruct_dense(), 96, 128, &x, &e.bias));
+    }
+
+    #[test]
+    fn wrong_input_width_and_kind_rejected() {
+        let e = layer(6, 10, 1, 16, 2);
+        let k = FusedDecodeKernel::new(&e);
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+        let ctx = KernelCtx { decoder: &decoder };
+        let wrapped = Layer::Encrypted(e);
+        assert!(k.forward(&wrapped, &ctx, &[0.0; 9]).is_err());
+        let dense = Layer::Dense(crate::io::sqnn_file::DenseLayer {
+            name: "d".into(),
+            rows: 2,
+            cols: 2,
+            w: vec![0.0; 4],
+            b: vec![0.0; 2],
+            activation: Activation::Identity,
+        });
+        assert!(k.forward(&dense, &ctx, &[0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn batch_major_streaming_matches_per_input() {
+        let e = layer(20, 32, 2, 24, 8);
+        let k = FusedDecodeKernel::new(&e);
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(2));
+        let ctx = KernelCtx { decoder: &decoder };
+        let wrapped = Layer::Encrypted(e.clone());
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let batch = k.forward_batch(&wrapped, &ctx, &refs).unwrap();
+        assert_eq!(batch.len(), 4);
+        for (x, want_row) in xs.iter().zip(&batch) {
+            let single = k.forward(&wrapped, &ctx, x).unwrap();
+            assert_eq!(&single, want_row, "batch-major row diverged from per-input");
+        }
+        // One plan lookup per call (1 batch + 4 singles), one build total:
+        // the batch decodes its tiles once, not once per input.
+        let st = decoder.cache_stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits + st.misses, 5);
+        // An empty batch is a no-op, not a panic.
+        assert!(k.forward_batch(&wrapped, &ctx, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn plan_cache_reused_across_batches() {
+        let e = layer(30, 64, 1, 32, 6);
+        let k = FusedDecodeKernel::with_tile_f32s(&e, 64); // 2 slices/tile
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+        let ctx = KernelCtx { decoder: &decoder };
+        let wrapped = Layer::Encrypted(e);
+        let x = vec![0.1f32; 64];
+        k.forward(&wrapped, &ctx, &x).unwrap();
+        let st = decoder.cache_stats();
+        assert_eq!(st.misses, 1, "one plan build per layer");
+        k.forward(&wrapped, &ctx, &x).unwrap();
+        assert!(decoder.cache_stats().hits > st.hits, "later batches reuse the plan");
+    }
+}

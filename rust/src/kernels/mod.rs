@@ -1,0 +1,347 @@
+//! Per-layer matmul kernels — the execution layer between the serving
+//! engine and the stored weight formats.
+//!
+//! The paper's core claim (§3.1, §6) is that XOR-encrypted weights can be
+//! decoded *during* inference at full memory bandwidth; round-tripping the
+//! decode through a materialized dense buffer (decode → write `m×n` f32s →
+//! re-read them in the matmul) gives that bandwidth back. This module
+//! makes "how a layer's weights meet the activations" a first-class,
+//! swappable decision:
+//!
+//! * [`DenseKernel`] — row-major affine over dense weights: the layer's
+//!   own storage, an eager-decoded cache, or (legacy streaming path) a
+//!   per-batch materialized buffer.
+//! * [`CsrSpmvKernel`] — sparse mat-vec straight over CSR storage, no
+//!   densify on the serving path (the paper's conventional-format
+//!   baseline finally served honestly).
+//! * [`FusedDecodeKernel`] — tile-streaming XOR decode × matmul: decodes
+//!   an encrypted layer slice-tile by slice-tile through the cached
+//!   [`DecodePlan`](crate::runtime::parallel::DecodePlan), reconstructs
+//!   each tile's f32 weights in a thread-local scratch buffer, and
+//!   multiplies the tile into the output before decoding the next — the
+//!   full dense weight matrix is never materialized.
+//!
+//! [`KernelRegistry`] picks one kernel per layer from the layer's storage
+//! kind, the engine's [`DecodeMode`], and the user's [`KernelChoice`]
+//! (`--kernel auto|dense|csr|fused`); see the selection table in
+//! DESIGN.md. Every kernel is bit-identical to the reference
+//! materialize-then-[`dense_matmul`](crate::sparse::dense_matmul) path at
+//! every decode thread count: per output row, contributions accumulate in
+//! ascending column order through a single `f32` chain, so the exact same
+//! float operations happen in the exact same order.
+//!
+//! Caveat: the SpMV identity assumes **finite activations**. CSR skips
+//! the `0·x` products the dense path performs on pruned positions; those
+//! agree for every finite `x` (adding `±0.0` never changes a sum) but
+//! diverge when `x` is `±inf`/`NaN` (dense yields `NaN`, SpMV stays
+//! finite). Inputs of real models are finite; the equivalence tests use
+//! finite inputs by construction.
+
+mod csr;
+mod dense;
+mod fused;
+
+pub use csr::CsrSpmvKernel;
+pub use dense::{affine, DenseKernel};
+pub use fused::{DEFAULT_TILE_F32S, FusedDecodeKernel};
+
+use anyhow::Result;
+
+use crate::coordinator::engine::DecodeMode;
+use crate::io::sqnn_file::{Layer, SqnnModel};
+use crate::runtime::parallel::{DecodeConfig, ParallelDecoder};
+
+/// Which kernel family serves each layer (`--kernel` on the CLI).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Pick per layer: dense layers → [`DenseKernel`], CSR layers →
+    /// [`CsrSpmvKernel`], encrypted layers → eager-decoded
+    /// [`DenseKernel`] under [`DecodeMode::Eager`] or
+    /// [`FusedDecodeKernel`] under [`DecodeMode::PerBatch`].
+    #[default]
+    Auto,
+    /// Everything through dense affine: CSR layers densified at load,
+    /// encrypted layers decoded at load (Eager) or re-materialized every
+    /// batch (PerBatch) — the legacy materialize-then-matmul path, kept
+    /// as the reference the other kernels are measured against.
+    Dense,
+    /// Everything through CSR SpMV: dense layers CSR-converted at load,
+    /// encrypted layers decoded once at load and CSR-converted under
+    /// their pruning mask (regardless of decode mode) — the paper's
+    /// conventional-format baseline across the whole graph.
+    Csr,
+    /// Encrypted layers stream tiles through [`FusedDecodeKernel`] on
+    /// every batch (even under [`DecodeMode::Eager`]); dense and CSR
+    /// layers serve as in [`KernelChoice::Auto`].
+    Fused,
+}
+
+impl KernelChoice {
+    /// The CLI spelling (`auto` / `dense` / `csr` / `fused`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Dense => "dense",
+            KernelChoice::Csr => "csr",
+            KernelChoice::Fused => "fused",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(KernelChoice::Auto),
+            "dense" => Ok(KernelChoice::Dense),
+            "csr" => Ok(KernelChoice::Csr),
+            "fused" => Ok(KernelChoice::Fused),
+            other => anyhow::bail!("bad kernel '{other}' (auto | dense | csr | fused)"),
+        }
+    }
+}
+
+/// Shared execution state handed to every kernel call: the engine's
+/// decode runtime (plan cache + resolved worker count).
+pub struct KernelCtx<'a> {
+    /// The engine's thread-sharded decoder.
+    pub decoder: &'a ParallelDecoder,
+}
+
+impl KernelCtx<'_> {
+    /// The decode configuration matching the engine's resolved threads.
+    pub fn decode_config(&self) -> DecodeConfig {
+        DecodeConfig::with_threads(self.decoder.threads())
+    }
+}
+
+/// One layer's `y = W·x + b` strategy. Kernels are stateless with respect
+/// to the layer's stored weights (the layer is passed to every call) but
+/// may own prepared auxiliary state: an eager-decoded weight cache, a
+/// CSR conversion, or tile-streaming scratch.
+pub trait MatmulKernel: Send + Sync {
+    /// Stable kernel identifier (`"dense"`, `"csr-spmv"`, …) for
+    /// observability and tests.
+    fn name(&self) -> &'static str;
+
+    /// Called once per batch before any [`MatmulKernel::forward`];
+    /// kernels with per-batch state (e.g. the legacy per-batch
+    /// materialize path) refresh it here.
+    fn begin_batch(&self, _layer: &Layer, _ctx: &KernelCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Compute `y = W·x + b` for this layer (activation is applied by the
+    /// engine). `x.len()` must equal the layer's input width.
+    fn forward(&self, layer: &Layer, ctx: &KernelCtx<'_>, x: &[f32]) -> Result<Vec<f32>>;
+
+    /// Compute the affine for a whole batch (one output row per input
+    /// row). The default loops [`MatmulKernel::forward`]; the fused
+    /// kernel overrides it to decode each weight tile **once per batch**
+    /// and stream it against every input — that is what makes
+    /// `DecodeMode::PerBatch` decode per batch, not per request. Must be
+    /// row-wise identical to calling `forward` per input.
+    fn forward_batch(
+        &self,
+        layer: &Layer,
+        ctx: &KernelCtx<'_>,
+        xs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        xs.iter().map(|x| self.forward(layer, ctx, x)).collect()
+    }
+
+    /// Called once after every batch; kernels with batch-scoped buffers
+    /// release them here (the per-batch materialize path frees its dense
+    /// weights so an idle server keeps the decode-on-demand footprint).
+    fn end_batch(&self, _layer: &Layer, _ctx: &KernelCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The per-layer kernel plan for one loaded model: `kernels[i]` serves
+/// `model.layers[i]`.
+pub struct KernelRegistry {
+    kernels: Vec<Box<dyn MatmulKernel>>,
+}
+
+impl KernelRegistry {
+    /// Build the kernel plan for `model` under a [`KernelChoice`] and
+    /// [`DecodeMode`]. Eager decoding (and any forced format conversion)
+    /// happens here, through `decoder`'s plan cache; kernels that stream
+    /// (fused, per-batch dense) defer all decode work to serving time.
+    pub fn build(
+        model: &SqnnModel,
+        choice: KernelChoice,
+        mode: DecodeMode,
+        decoder: &ParallelDecoder,
+    ) -> Result<KernelRegistry> {
+        let cfg = DecodeConfig::with_threads(decoder.threads());
+        let mut kernels: Vec<Box<dyn MatmulKernel>> = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            let kernel: Box<dyn MatmulKernel> = match layer {
+                Layer::Dense(d) => match choice {
+                    KernelChoice::Csr => Box::new(CsrSpmvKernel::from_dense_weights(
+                        &d.w, d.rows, d.cols, None,
+                    )),
+                    _ => Box::new(DenseKernel::from_layer()),
+                },
+                Layer::Csr(c) => match choice {
+                    KernelChoice::Dense => {
+                        Box::new(DenseKernel::with_cached(c.csr.to_dense()))
+                    }
+                    _ => Box::new(CsrSpmvKernel::for_layer()),
+                },
+                Layer::Encrypted(e) => match (choice, mode) {
+                    (KernelChoice::Fused, _) | (KernelChoice::Auto, DecodeMode::PerBatch) => {
+                        Box::new(FusedDecodeKernel::new(e))
+                    }
+                    (KernelChoice::Csr, _) => {
+                        let w = layer.materialize(decoder.cache(), &cfg).data;
+                        Box::new(CsrSpmvKernel::from_dense_weights(
+                            &w,
+                            e.rows,
+                            e.cols,
+                            Some(&e.mask),
+                        ))
+                    }
+                    (KernelChoice::Auto | KernelChoice::Dense, DecodeMode::Eager) => Box::new(
+                        DenseKernel::with_cached(layer.materialize(decoder.cache(), &cfg).data),
+                    ),
+                    (KernelChoice::Dense, DecodeMode::PerBatch) => {
+                        Box::new(DenseKernel::per_batch())
+                    }
+                },
+            };
+            kernels.push(kernel);
+        }
+        Ok(KernelRegistry { kernels })
+    }
+
+    /// The kernel serving layer `li`.
+    pub fn kernel(&self, li: usize) -> &dyn MatmulKernel {
+        self.kernels[li].as_ref()
+    }
+
+    /// Number of layers covered (== the model's layer count).
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// True iff the registry covers no layers.
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    /// Per-layer kernel names, in chain order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.kernels.iter().map(|k| k.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::{
+        synthetic_mixed_layer_graph, SynthCsr, SynthEncrypted,
+    };
+    use crate::rng::Rng;
+
+    fn mixed_model() -> SqnnModel {
+        synthetic_mixed_layer_graph(
+            0x5EED,
+            24,
+            &[SynthEncrypted { out_dim: 12, nq: 2, ..Default::default() }],
+            &[SynthCsr { out_dim: 8, density: 0.5 }],
+            &[6],
+            3,
+        )
+    }
+
+    #[test]
+    fn kernel_choice_parses_and_prints() {
+        for c in [KernelChoice::Auto, KernelChoice::Dense, KernelChoice::Csr, KernelChoice::Fused]
+        {
+            assert_eq!(c.as_str().parse::<KernelChoice>().unwrap(), c);
+        }
+        assert!("gemm".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn registry_selection_table() {
+        let model = mixed_model();
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+        // Layer order: encrypted, csr, dense, dense head.
+        let cases = [
+            (KernelChoice::Auto, DecodeMode::Eager, vec!["dense", "csr-spmv", "dense", "dense"]),
+            (
+                KernelChoice::Auto,
+                DecodeMode::PerBatch,
+                vec!["fused-decode", "csr-spmv", "dense", "dense"],
+            ),
+            (KernelChoice::Dense, DecodeMode::Eager, vec!["dense", "dense", "dense", "dense"]),
+            (
+                KernelChoice::Dense,
+                DecodeMode::PerBatch,
+                vec!["dense-materialize", "dense", "dense", "dense"],
+            ),
+            (
+                KernelChoice::Csr,
+                DecodeMode::Eager,
+                vec!["csr-spmv", "csr-spmv", "csr-spmv", "csr-spmv"],
+            ),
+            (
+                KernelChoice::Fused,
+                DecodeMode::Eager,
+                vec!["fused-decode", "csr-spmv", "dense", "dense"],
+            ),
+        ];
+        for (choice, mode, want) in cases {
+            let reg = KernelRegistry::build(&model, choice, mode, &decoder).unwrap();
+            assert_eq!(reg.names(), want, "choice={choice:?} mode={mode:?}");
+            assert_eq!(reg.len(), model.layers.len());
+            assert!(!reg.is_empty());
+        }
+    }
+
+    #[test]
+    fn forced_kernels_match_native_storage_outputs() {
+        // One layer of each storage kind, exercised through every kernel
+        // family that can serve it; outputs must agree with the layer's
+        // natural kernel.
+        let model = mixed_model();
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(2));
+        let ctx = KernelCtx { decoder: &decoder };
+        let mut rng = Rng::new(11);
+        for (li, layer) in model.layers.iter().enumerate() {
+            let x: Vec<f32> =
+                (0..layer.in_dim()).map(|_| rng.next_gaussian() as f32 * 0.3).collect();
+            let mut outs: Vec<(String, Vec<f32>)> = Vec::new();
+            for choice in [
+                KernelChoice::Auto,
+                KernelChoice::Dense,
+                KernelChoice::Csr,
+                KernelChoice::Fused,
+            ] {
+                let reg =
+                    KernelRegistry::build(&model, choice, DecodeMode::PerBatch, &decoder)
+                        .unwrap();
+                let k = reg.kernel(li);
+                k.begin_batch(layer, &ctx).unwrap();
+                let y = k.forward(layer, &ctx, &x).unwrap();
+                assert_eq!(y.len(), layer.out_dim());
+                outs.push((format!("{choice:?}/{}", k.name()), y));
+            }
+            let (ref_name, ref_y) = &outs[0];
+            for (name, y) in &outs[1..] {
+                for (a, b) in ref_y.iter().zip(y) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "layer {li}: {name} disagrees with {ref_name}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}

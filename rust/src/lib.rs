@@ -8,9 +8,11 @@
 //! perfect load balance, plus the substrates the paper measures against
 //! (CSR, Viterbi encoding), the pruning/quantization pipeline that produces
 //! SQNNs, a cycle-level decoder simulator, a thread-sharded parallel decode
-//! runtime, and a Rust inference coordinator that serves compressed models
-//! (natively by default; through AOT-compiled XLA executables with the
-//! `xla` feature).
+//! runtime, a per-layer matmul kernel registry (dense affine, real CSR
+//! SpMV, and a fused tile-streaming XOR-decode × matmul that never
+//! materializes the dense weights), and a Rust inference coordinator that
+//! serves compressed models (natively by default; through AOT-compiled XLA
+//! executables with the `xla` feature).
 //!
 //! See `DESIGN.md` for the module ↔ paper-section map and `EXPERIMENTS.md`
 //! for reproduced tables/figures.
@@ -25,6 +27,8 @@ pub mod runtime;
 pub mod server;
 pub mod util;
 pub mod io;
+#[warn(missing_docs)]
+pub mod kernels;
 pub mod models;
 pub mod prune;
 pub mod simulator;

@@ -5,6 +5,7 @@
 //!   verify    --artifacts DIR --model MODEL.sqnn   lossless + accuracy check
 //!   info      --model MODEL.sqnn                   container stats
 //!   serve     --artifacts DIR --model MODEL.sqnn [--port P]
+//!   stats     --addr HOST:PORT                     metrics from a running server
 //!   demo      --artifacts DIR                      compress + serve in-process
 //!
 //! (Hand-rolled argument parsing: the offline image has no clap.)
@@ -15,12 +16,12 @@ use anyhow::{bail, Context, Result};
 
 use sqnn_xor::coordinator::{
     compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, DecodeMode, EngineOptions,
-    SqnnEngine,
+    KernelChoice, SqnnEngine,
 };
 use sqnn_xor::io::npy::read_npy;
 use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
 use sqnn_xor::runtime::Runtime;
-use sqnn_xor::server::Server;
+use sqnn_xor::server::{Client, Server};
 
 fn main() {
     if let Err(e) = run() {
@@ -58,11 +59,13 @@ fn engine_options(flags: &HashMap<String, String>) -> Result<EngineOptions> {
         "per-batch" | "perbatch" => DecodeMode::PerBatch,
         other => bail!("bad --decode-mode '{other}' (eager | per-batch)"),
     };
+    let kernel: KernelChoice = flag(flags, "kernel", "auto").parse()?;
     Ok(EngineOptions {
         decode_threads: flag(flags, "decode-threads", "0")
             .parse()
             .context("bad --decode-threads")?,
         decode_mode,
+        kernel,
     })
 }
 
@@ -75,6 +78,7 @@ fn run() -> Result<()> {
         "verify" => cmd_verify(&flags),
         "info" => cmd_info(&flags),
         "serve" => cmd_serve(&flags),
+        "stats" => cmd_stats(&flags),
         "demo" => cmd_demo(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -98,13 +102,17 @@ fn print_help() {
            verify    --artifacts DIR --model M.sqnn     lossless + served-accuracy check\n\
            info      --model M.sqnn                     container statistics\n\
            serve     --artifacts DIR --model M.sqnn --port 7433   TCP inference server\n\
+           stats     --addr HOST:PORT                   metrics snapshot from a running server\n\
            demo      --artifacts DIR                    compress + serve a demo batch\n\
          \n\
          decode knobs (verify/serve/demo):\n\
            --decode-threads N   XOR-decode worker threads (0 = auto; also\n\
                                 settable via SQNN_DECODE_THREADS)\n\
            --decode-mode M      eager (decode at load, default) or per-batch\n\
-                                (re-decode encrypted layers on every batch)"
+                                (re-decode encrypted layers on every batch)\n\
+           --kernel K           per-layer matmul kernel: auto (default),\n\
+                                dense (materialize-then-matmul), csr (SpMV\n\
+                                everywhere), fused (tile-streaming decode)"
     );
 }
 
@@ -216,10 +224,11 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
     let engine =
         SqnnEngine::load_with(&runtime, model, &artifacts, &meta.batch_sizes, engine_options(flags)?)?;
     println!(
-        "engine backend: {} (decode threads: {:?}, decode mode: {:?})",
+        "engine backend: {} (decode threads: {:?}, decode mode: {:?}, kernels: {:?})",
         engine.backend_name(),
         engine.decode_threads(),
-        engine.decode_mode()
+        engine.decode_mode(),
+        engine.kernel_plan()
     );
     let preds = engine.classify(&xs)?;
     let correct = preds.iter().zip(&ys).filter(|(p, y)| **p == **y as usize).count();
@@ -233,6 +242,14 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
         bail!("served accuracy deviates from the pipeline's quantized accuracy");
     }
     println!("verify OK: compression is lossless and accuracy-preserving");
+    Ok(())
+}
+
+fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
+    let default_addr = format!("127.0.0.1:{}", flag(flags, "port", "7433"));
+    let addr = flags.get("addr").cloned().unwrap_or(default_addr);
+    let mut client = Client::connect(&addr)?;
+    println!("{}", client.stats()?);
     Ok(())
 }
 
@@ -273,10 +290,11 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     let engine =
         SqnnEngine::load_with(&runtime, model, &artifacts, &meta.batch_sizes, engine_options(flags)?)?;
     println!(
-        "engine backend: {} (decode threads: {:?}, decode mode: {:?})",
+        "engine backend: {} (decode threads: {:?}, decode mode: {:?}, kernels: {:?})",
         engine.backend_name(),
         engine.decode_threads(),
-        engine.decode_mode()
+        engine.decode_mode(),
+        engine.kernel_plan()
     );
     let n = xs.len().min(256);
     let preds = engine.classify(&xs[..n])?;

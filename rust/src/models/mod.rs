@@ -6,7 +6,10 @@
 
 pub mod synth;
 
-pub use synth::{synthetic_encrypted_layer, synthetic_layer_graph, SynthEncrypted};
+pub use synth::{
+    synthetic_encrypted_layer, synthetic_layer_graph, synthetic_mixed_layer_graph, SynthCsr,
+    SynthEncrypted,
+};
 
 use crate::rng::Rng;
 use crate::xorenc::BitPlane;

@@ -7,9 +7,10 @@
 
 use crate::gf2::BitVec;
 use crate::io::sqnn_file::{
-    Activation, DenseLayer, EncryptedLayer, Layer, ModelMeta, SqnnModel,
+    Activation, CsrLayer, DenseLayer, EncryptedLayer, Layer, ModelMeta, SqnnModel,
 };
 use crate::rng::Rng;
+use crate::sparse::CsrMatrix;
 use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
 
 /// Geometry/statistics of one synthetic encrypted layer.
@@ -80,6 +81,21 @@ pub fn synthetic_encrypted_layer(
     (layer, originals)
 }
 
+/// Geometry of one synthetic CSR baseline layer.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthCsr {
+    /// Output width of the layer.
+    pub out_dim: usize,
+    /// Fraction of weights kept (`1 −` pruning rate).
+    pub density: f64,
+}
+
+impl Default for SynthCsr {
+    fn default() -> Self {
+        SynthCsr { out_dim: 16, density: 0.15 }
+    }
+}
+
 /// Build a synthetic layer-graph model: `input_dim` → each spec in
 /// `encrypted` (XOR-encrypted, ReLU) → each width in `dense` (dense,
 /// ReLU) → `num_classes` (dense logit head, identity).
@@ -91,6 +107,22 @@ pub fn synthetic_layer_graph(
     seed: u64,
     input_dim: usize,
     encrypted: &[SynthEncrypted],
+    dense: &[usize],
+    num_classes: usize,
+) -> SqnnModel {
+    synthetic_mixed_layer_graph(seed, input_dim, encrypted, &[], dense, num_classes)
+}
+
+/// [`synthetic_layer_graph`] plus CSR baseline layers between the
+/// encrypted chain and the dense tail: `input_dim` → `encrypted` (ReLU)
+/// → each spec in `csr` (sparse, ReLU) → `dense` (ReLU) → `num_classes`
+/// (identity head). This is the all-three-storage-kinds workload the
+/// kernel-equivalence property tests serve.
+pub fn synthetic_mixed_layer_graph(
+    seed: u64,
+    input_dim: usize,
+    encrypted: &[SynthEncrypted],
+    csr: &[SynthCsr],
     dense: &[usize],
     num_classes: usize,
 ) -> SqnnModel {
@@ -114,6 +146,19 @@ pub fn synthetic_layer_graph(
             &mut rng,
         );
         layers.push(Layer::Encrypted(layer));
+        width = spec.out_dim;
+    }
+
+    for (i, spec) in csr.iter().enumerate() {
+        let n = spec.out_dim * width;
+        let w: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 0.2).collect();
+        let mask = BitVec::from_fn(n, |_| rng.next_bool(spec.density));
+        layers.push(Layer::Csr(CsrLayer {
+            name: format!("csr{}", i + 1),
+            csr: CsrMatrix::from_dense(&w, spec.out_dim, width, Some(&mask)),
+            bias: (0..spec.out_dim).map(|r| r as f32 * 0.01).collect(),
+            activation: Activation::Relu,
+        }));
         width = spec.out_dim;
     }
 
@@ -176,5 +221,32 @@ mod tests {
         let a = synthetic_layer_graph(7, 16, &[SynthEncrypted::default()], &[], 2);
         let b = synthetic_layer_graph(7, 16, &[SynthEncrypted::default()], &[], 2);
         assert_eq!(a.to_bytes(), b.to_bytes());
+    }
+
+    #[test]
+    fn mixed_graph_carries_all_layer_kinds() {
+        let m = synthetic_mixed_layer_graph(
+            13,
+            20,
+            &[SynthEncrypted { out_dim: 10, ..Default::default() }],
+            &[SynthCsr { out_dim: 8, density: 0.4 }],
+            &[6],
+            3,
+        );
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 4);
+        let Layer::Csr(c) = &m.layers[1] else {
+            panic!("expected a CSR layer in slot 1");
+        };
+        assert_eq!((c.csr.rows, c.csr.cols), (8, 10));
+        assert!(c.csr.nnz() > 0, "degenerate empty CSR layer");
+        assert!(c.csr.nnz() < 80, "CSR layer is fully dense");
+        // Serialization round-trips CSR layers too.
+        let back = SqnnModel::from_bytes(&m.to_bytes()).unwrap();
+        back.validate().unwrap();
+        let Layer::Csr(cb) = &back.layers[1] else {
+            panic!("CSR layer lost its kind");
+        };
+        assert_eq!(c.csr.vals, cb.csr.vals);
     }
 }

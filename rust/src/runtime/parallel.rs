@@ -171,6 +171,40 @@ pub fn decode_plane_serial(plan: &DecodePlan, enc: &EncryptedPlane) -> BitVec {
     decode_tile(plan, enc, 0, enc.codes.len())
 }
 
+/// Contiguous shard fenceposts over the slice range `[k0, k1)`:
+/// worker `i` owns slices `[bounds[i], bounds[i+1])`. The first
+/// `(k1-k0) % workers` shards carry one extra slice. This is the shard
+/// plan both the whole-plane decode and the fused tile-streaming kernel
+/// run on.
+pub fn shard_bounds(k0: usize, k1: usize, workers: usize) -> Vec<usize> {
+    debug_assert!(k0 <= k1);
+    let l = k1 - k0;
+    let workers = workers.max(1).min(l.max(1));
+    let base_chunk = l / workers;
+    let remainder = l % workers;
+    let mut bounds = Vec::with_capacity(workers + 1);
+    bounds.push(k0);
+    for i in 0..workers {
+        bounds.push(bounds[i] + base_chunk + usize::from(i < remainder));
+    }
+    bounds
+}
+
+/// Iterator over contiguous slice-aligned tiles of a plane: yields
+/// `(k0, k1)` slice ranges of at most `tile_slices` slices covering
+/// `[0, num_slices)` in order. The traversal order is what makes
+/// tile-streaming execution bit-identical to whole-plane decode: every
+/// output row accumulates its contributions in ascending column order.
+pub fn slice_tiles(
+    num_slices: usize,
+    tile_slices: usize,
+) -> impl Iterator<Item = (usize, usize)> {
+    let step = tile_slices.max(1);
+    (0..num_slices)
+        .step_by(step)
+        .map(move |k0| (k0, (k0 + step).min(num_slices)))
+}
+
 /// Thread-sharded decode: slices are partitioned into `threads` contiguous
 /// tiles, each decoded by its own scoped worker with zero intra-plane
 /// synchronization. Output is bit-identical to [`decode_plane_serial`].
@@ -179,37 +213,57 @@ pub fn decode_plane_parallel(
     enc: &EncryptedPlane,
     threads: usize,
 ) -> BitVec {
-    assert!(plan.matches(enc), "decode plan does not match the plane's design point");
-    let l = enc.codes.len();
-    let workers = threads.max(1).min(l);
+    let workers = threads.max(1).min(enc.codes.len().max(1));
     if workers <= 1 {
+        // Whole-plane single-worker decode returns the tile buffer
+        // directly — no intermediate splice copy of the full plane.
         return decode_plane_serial(plan, enc);
     }
-    let n_out = plan.n_out();
-
-    // Contiguous tile bounds: worker i owns slices [bounds[i], bounds[i+1]).
-    let base_chunk = l / workers;
-    let remainder = l % workers;
-    let mut bounds = Vec::with_capacity(workers + 1);
-    bounds.push(0usize);
-    for i in 0..workers {
-        bounds.push(bounds[i] + base_chunk + usize::from(i < remainder));
-    }
-
     let mut out = BitVec::zeros(enc.plane_len);
+    decode_slice_range_into(plan, enc, 0, enc.codes.len(), threads, &mut out);
+    out
+}
+
+/// Decode the slice range `[k0, k1)` of a plane into `out`, resetting
+/// `out` to the range's bit length (`min(k1·n_out, plane_len) − k0·n_out`)
+/// so callers can reuse one scratch `BitVec` across tiles. The range is
+/// sharded over up to `threads` scoped workers via [`shard_bounds`];
+/// per-slice work is identical to the serial decoder, so the output is
+/// bit-identical at every worker count.
+pub fn decode_slice_range_into(
+    plan: &DecodePlan,
+    enc: &EncryptedPlane,
+    k0: usize,
+    k1: usize,
+    threads: usize,
+    out: &mut BitVec,
+) {
+    assert!(plan.matches(enc), "decode plan does not match the plane's design point");
+    assert!(k0 <= k1 && k1 <= enc.codes.len(), "slice range out of bounds");
+    let n_out = plan.n_out();
+    let start_bit = (k0 * n_out).min(enc.plane_len);
+    let end_bit = (k1 * n_out).min(enc.plane_len);
+    out.reset(end_bit - start_bit);
+    let workers = threads.max(1).min(k1 - k0);
+    if workers <= 1 {
+        if k1 > k0 {
+            let seg = decode_tile(plan, enc, k0, k1);
+            out.splice_from(0, &seg, seg.len());
+        }
+        return;
+    }
+    let bounds = shard_bounds(k0, k1, workers);
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (k0, k1) = (bounds[w], bounds[w + 1]);
-            handles.push(scope.spawn(move || decode_tile(plan, enc, k0, k1)));
+            let (w0, w1) = (bounds[w], bounds[w + 1]);
+            handles.push(scope.spawn(move || decode_tile(plan, enc, w0, w1)));
         }
         for (w, h) in handles.into_iter().enumerate() {
             let seg = h.join().expect("decode worker panicked");
-            let start_bit = bounds[w] * n_out;
-            out.splice_from(start_bit, &seg, seg.len());
+            out.splice_from(bounds[w] * n_out - start_bit, &seg, seg.len());
         }
     });
-    out
 }
 
 /// Decode slices `[k0, k1)` into a tile-local bit vector (bit 0 of the
@@ -383,5 +437,56 @@ mod tests {
     fn config_resolution() {
         assert_eq!(DecodeConfig::with_threads(5).effective_threads(), 5);
         assert!(DecodeConfig::auto().effective_threads() >= 1);
+    }
+
+    #[test]
+    fn shard_bounds_partition_the_range() {
+        for &(k0, k1, workers) in
+            &[(0usize, 10usize, 3usize), (5, 5, 4), (2, 17, 1), (0, 4, 8), (7, 100, 6)]
+        {
+            let b = shard_bounds(k0, k1, workers);
+            assert_eq!(*b.first().unwrap(), k0);
+            assert_eq!(*b.last().unwrap(), k1);
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "monotone {b:?}");
+            // Shards differ in size by at most one slice (load balance).
+            let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "imbalanced shards {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn slice_tiles_cover_in_order() {
+        let tiles: Vec<(usize, usize)> = slice_tiles(10, 4).collect();
+        assert_eq!(tiles, vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(slice_tiles(0, 4).count(), 0);
+        // tile_slices = 0 is clamped to 1, not an infinite loop.
+        assert_eq!(slice_tiles(3, 0).collect::<Vec<_>>(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn slice_range_decode_matches_whole_plane() {
+        let ep = encrypted(12, 48, 48 * 21 + 17, 0.85, 33);
+        let plan = DecodePlan::for_plane(&ep);
+        let whole = decode_plane_serial(&plan, &ep);
+        let n_out = plan.n_out();
+        let mut scratch = BitVec::zeros(0);
+        for tile_slices in [1usize, 3, 7, 22] {
+            for threads in [1usize, 2, 4] {
+                for (k0, k1) in slice_tiles(ep.num_slices(), tile_slices) {
+                    decode_slice_range_into(&plan, &ep, k0, k1, threads, &mut scratch);
+                    let start = k0 * n_out;
+                    let end = (k1 * n_out).min(ep.plane_len);
+                    assert_eq!(scratch.len(), end - start);
+                    for i in 0..scratch.len() {
+                        assert_eq!(
+                            scratch.get(i),
+                            whole.get(start + i),
+                            "tile=({k0},{k1}) threads={threads} bit {i}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

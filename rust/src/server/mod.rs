@@ -4,10 +4,13 @@
 //!
 //! Wire protocol (little-endian):
 //!   request:  `b'I'` + u32 n + n×f32   → infer one input vector
-//!             `b'S'`                   → metrics snapshot (JSON line)
+//!             `b'M'`                   → metrics snapshot (framed JSON)
+//!             `b'S'`                   → metrics snapshot (legacy, bare)
 //!             `b'Q'`                   → close connection
 //!   response: `b'O'` + u32 n + n×f32 (logits) | `b'E'` + u32 len + msg
-//!             for `S`: u32 len + JSON bytes
+//!             for `M`: `b'M'` + u32 len + JSON bytes (framed like `O`/`E`)
+//!             for `S`: u32 len + JSON bytes (no opcode byte; kept for
+//!             old clients — prefer `M`)
 //!
 //! Engine errors answer `E` and keep the connection; protocol errors
 //! (oversized frame, unknown opcode) answer `E` and then close it.
@@ -166,13 +169,17 @@ fn handle_conn(
                     }
                 }
             }
+            b'M' => {
+                let json = handle.metrics().snapshot().to_json();
+                let mut msg = Vec::with_capacity(5 + json.len());
+                msg.push(b'M');
+                msg.extend_from_slice(&(json.len() as u32).to_le_bytes());
+                msg.extend_from_slice(json.as_bytes());
+                stream.write_all(&msg)?;
+            }
             b'S' => {
-                let s = handle.metrics().snapshot();
-                let json = format!(
-                    "{{\"requests\":{},\"batches\":{},\"errors\":{},\"mean_batch\":{:.3},\"p50_ms\":{:.3},\"p99_ms\":{:.3}}}",
-                    s.requests, s.batches, s.errors, s.mean_batch_size,
-                    s.latency_p50_ms, s.latency_p99_ms
-                );
+                // Legacy bare-framed stats (no opcode byte in the reply).
+                let json = handle.metrics().snapshot().to_json();
                 stream.write_all(&(json.len() as u32).to_le_bytes())?;
                 stream.write_all(json.as_bytes())?;
             }
@@ -228,5 +235,24 @@ impl Client {
         let mut raw = vec![0u8; n];
         self.stream.read_exact(&mut raw)?;
         Ok(String::from_utf8_lossy(&raw).into_owned())
+    }
+
+    /// Framed metrics snapshot (`M` opcode): the reply carries an opcode
+    /// byte like `O`/`E`, so errors are distinguishable from payloads.
+    /// Returns the snapshot JSON line (`sqnn stats` prints it verbatim).
+    pub fn stats(&mut self) -> Result<String> {
+        self.stream.write_all(b"M")?;
+        let mut op = [0u8; 1];
+        self.stream.read_exact(&mut op)?;
+        let mut nb = [0u8; 4];
+        self.stream.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        let mut raw = vec![0u8; n];
+        self.stream.read_exact(&mut raw)?;
+        match op[0] {
+            b'M' => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            other => anyhow::bail!("unexpected stats reply opcode {other}"),
+        }
     }
 }

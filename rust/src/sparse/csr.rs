@@ -85,6 +85,27 @@ impl CsrMatrix {
         out
     }
 
+    /// Sparse mat-vec accumulating onto a caller-initialized output:
+    /// `y[r] += Σ_t vals[t] · x[col_idx[t]]` over row `r`'s nonzeros, in
+    /// ascending-column order. The serving hot path for [`CsrLayer`]s —
+    /// callers seed `y` with the bias, so the layer forward runs with no
+    /// densify and no allocation. Because stored columns ascend within a
+    /// row, the accumulation order matches a dense row walk over the same
+    /// nonzeros.
+    ///
+    /// [`CsrLayer`]: crate::io::sqnn_file::CsrLayer
+    pub fn spmv_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut acc = y[r];
+            for t in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                acc += self.vals[t] * x[self.col_idx[t] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
     /// Sparse × dense: `Y (rows×k) = self (rows×cols) · X (cols×k)`.
     /// Row-major `X`, row-major `Y` — the Fig 1 workload.
     pub fn spmm(&self, x: &[f32], k: usize) -> Vec<f32> {
@@ -167,6 +188,24 @@ mod tests {
         let yd = dense_matmul(&wm, &x, m, n, k);
         for (a, b) in ys.iter().zip(&yd) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn spmv_into_matches_spmm_and_keeps_bias() {
+        let (m, n) = (19, 31);
+        let w = rand_dense(m * n, 7);
+        let mask = magnitude_mask(&w, 0.6);
+        let csr = CsrMatrix::from_dense(&w, m, n, Some(&mask));
+        let x = rand_dense(n, 8);
+        let bias: Vec<f32> = (0..m).map(|r| r as f32 * 0.1).collect();
+        let mut y = bias.clone();
+        csr.spmv_into(&x, &mut y);
+        let prod = csr.spmm(&x, 1);
+        for r in 0..m {
+            // spmm accumulates from 0.0 in the same ascending-column
+            // order, so the two differ exactly by the bias seed.
+            assert!((y[r] - (bias[r] + prod[r])).abs() < 1e-5, "row {r}");
         }
     }
 

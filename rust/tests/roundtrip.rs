@@ -189,7 +189,11 @@ fn property_per_batch_decode_equals_eager() {
         let eager = SqnnEngine::load_native(
             model.clone(),
             &[4],
-            EngineOptions { decode_threads: 1, decode_mode: DecodeMode::Eager },
+            EngineOptions {
+                decode_threads: 1,
+                decode_mode: DecodeMode::Eager,
+                ..Default::default()
+            },
         )
         .unwrap();
         let want = eager.infer(&xs).unwrap();
@@ -197,7 +201,11 @@ fn property_per_batch_decode_equals_eager() {
             let streaming = SqnnEngine::load_native(
                 model.clone(),
                 &[4],
-                EngineOptions { decode_threads: threads, decode_mode: DecodeMode::PerBatch },
+                EngineOptions {
+                    decode_threads: threads,
+                    decode_mode: DecodeMode::PerBatch,
+                    ..Default::default()
+                },
             )
             .unwrap();
             // Two batches: the first populates the plan cache, the second

@@ -32,7 +32,11 @@ fn start_server() -> (Coordinator, Server) {
         SqnnEngine::load_native(
             model,
             &[1, 4],
-            EngineOptions { decode_threads: 2, decode_mode: DecodeMode::PerBatch },
+            EngineOptions {
+                decode_threads: 2,
+                decode_mode: DecodeMode::PerBatch,
+                ..Default::default()
+            },
         )
     })
     .unwrap();
@@ -135,6 +139,49 @@ fn e_response_roundtrips_through_client_and_server_survives() {
     assert!(stats.contains("\"requests\""), "bad stats payload: {stats}");
     let snap = coordinator.handle.metrics().snapshot();
     assert!(snap.errors >= 1, "engine rejection must be counted as an error");
+    server.stop();
+}
+
+/// The framed `M` stats opcode: reply carries an `M` opcode byte + u32
+/// length + JSON (unlike legacy `S`, which replies bare), surfaces the
+/// per-batch exec-time fields, and leaves the connection serving.
+#[test]
+fn framed_stats_opcode_roundtrips() {
+    let (_coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+
+    // Through the client helper (also the `sqnn stats` code path).
+    let mut c = Client::connect(&addr).unwrap();
+    let logits = c.infer(&[0.1f32; INPUT_DIM]).unwrap();
+    assert_eq!(logits.len(), NUM_CLASSES);
+    let json = c.stats().unwrap();
+    for key in ["\"requests\"", "\"batches\"", "\"exec_mean_ms\"", "\"exec_p99_ms\""] {
+        assert!(json.contains(key), "missing {key} in stats: {json}");
+    }
+
+    // Raw frame shape: opcode byte must be 'M'.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"M").unwrap();
+    let mut op = [0u8; 1];
+    s.read_exact(&mut op).unwrap();
+    assert_eq!(op[0], b'M', "stats reply must be framed with the M opcode");
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb).unwrap();
+    let n = u32::from_le_bytes(nb) as usize;
+    let mut raw = vec![0u8; n];
+    s.read_exact(&mut raw).unwrap();
+    let body = String::from_utf8(raw).unwrap();
+    assert!(body.starts_with('{') && body.ends_with('}'), "bad JSON frame: {body}");
+    assert!(body.contains("\"requests\":"), "bad stats payload: {body}");
+
+    // M is not a terminal opcode: both connections keep serving.
+    let logits2 = c.infer(&[0.1f32; INPUT_DIM]).unwrap();
+    assert_eq!(logits2, logits, "connection degraded after M");
+    s.write_all(b"M").unwrap();
+    let mut op2 = [0u8; 1];
+    s.read_exact(&mut op2).unwrap();
+    assert_eq!(op2[0], b'M');
     server.stop();
 }
 
