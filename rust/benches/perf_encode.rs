@@ -1,0 +1,114 @@
+//! §Perf encode bench: Algorithm 1 throughput through the parallel
+//! compression pipeline — serial vs 1/2/4/8-thread `encrypt_plane` with a
+//! per-layer breakdown on the standard synth graph, in slices/s and
+//! weight-bits/s. Asserts bit-identity of the sharded encode at every
+//! thread count (CI's encode-regression gate, next to the kernels sweep
+//! in `perf_hotpath`) and prints the 4-thread speedup.
+
+use sqnn_xor::benchutil::{bench, print_table, write_csv};
+use sqnn_xor::compress::{compress_model, CompressOptions, CompressSpec, LayerSpec};
+use sqnn_xor::io::sqnn_file::Layer;
+use sqnn_xor::models::synthetic_dense_graph;
+use sqnn_xor::xorenc::{EncryptConfig, XorEncoder};
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // The standard synth graph for encode measurements: a 784→512→256→10
+    // dense MLP (LeNet-ish head geometry), compressed at the paper's
+    // running S=0.9 / n_in=20 design point.
+    let model = synthetic_dense_graph(0xE2C0DE, 784, &[512, 256], 10);
+    let spec = CompressSpec {
+        default: LayerSpec { sparsity: 0.9, n_in: 20, n_out: 0, ..Default::default() },
+        ..Default::default()
+    };
+
+    // --- per-layer encode sweep: serial vs 1/2/4/8 threads ---
+    let mut serial_total = 0.0f64;
+    let mut par4_total = 0.0f64;
+    for layer in &model.layers {
+        let Layer::Dense(d) = layer else { continue };
+        let lspec = spec.spec_for(&d.name);
+        let (n_in, n_out) = lspec.design_point();
+        let mask = lspec.prune.mask_for(&d.w, d.rows, d.cols, lspec.sparsity);
+        let q = lspec.quant.quantize(&d.w, &mask);
+        let plane = &q.planes[0];
+        let slices = plane.len().div_ceil(n_out);
+        let enc = XorEncoder::new(EncryptConfig {
+            n_in,
+            n_out,
+            seed: lspec.seed,
+            block_slices: lspec.block_slices,
+        });
+        // The bit-identity gate: every thread count reproduces the serial
+        // codes and patches exactly, and stays lossless.
+        let reference = enc.encrypt_plane(plane);
+        assert!(enc.verify_lossless_threaded(plane, &reference, 4));
+        for t in [2usize, 4, 8] {
+            let par = enc.encrypt_plane_threaded(plane, t);
+            assert_eq!(par.codes, reference.codes, "{}: codes diverged at t={t}", d.name);
+            assert_eq!(par.patches, reference.patches, "{}: patches diverged at t={t}", d.name);
+        }
+        let serial = bench(&format!("encode {} serial", d.name), 1, 5, || {
+            std::hint::black_box(enc.encrypt_plane(plane));
+        });
+        serial_total += serial.mean_s;
+        rows.push(vec![
+            format!("encode {} {}x{} serial", d.name, d.rows, d.cols),
+            format!("{:.2}", serial.mean_s * 1e3),
+            format!("{:.1}", slices as f64 / serial.mean_s / 1e3),
+            format!("{:.2}", plane.len() as f64 / serial.mean_s / 1e6),
+        ]);
+        for t in [1usize, 2, 4, 8] {
+            let r = bench(&format!("encode {} t={t}", d.name), 1, 5, || {
+                std::hint::black_box(enc.encrypt_plane_threaded(plane, t));
+            });
+            if t == 4 {
+                par4_total += r.mean_s;
+            }
+            rows.push(vec![
+                format!("encode {} {}x{} t={t}", d.name, d.rows, d.cols),
+                format!("{:.2}", r.mean_s * 1e3),
+                format!("{:.1}", slices as f64 / r.mean_s / 1e3),
+                format!("{:.2}", plane.len() as f64 / r.mean_s / 1e6),
+            ]);
+        }
+    }
+    let speedup = serial_total / par4_total.max(1e-12);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "parallel encode: {speedup:.2}x speedup at 4 threads vs serial ({cores} cores available)"
+    );
+    if cores >= 4 && speedup < 1.5 {
+        println!("WARN: expected >= 1.5x encode speedup at 4 threads on a multi-core host");
+    }
+
+    // --- whole-pipeline: prune → quant → encrypt → verify, 1 vs 4 threads ---
+    let mut bytes_by_threads = Vec::new();
+    for t in [1usize, 4] {
+        let opts = CompressOptions { encode_threads: t, verify: true };
+        let r = bench(&format!("compress_model t={t}"), 0, 2, || {
+            std::hint::black_box(compress_model(&model, &spec, &opts).unwrap());
+        });
+        let (compressed, report) = compress_model(&model, &spec, &opts).unwrap();
+        bytes_by_threads.push(compressed.to_bytes());
+        let agg = report.aggregate();
+        rows.push(vec![
+            format!("compress_model (pipeline+verify) t={t}"),
+            format!("{:.2}", r.mean_s * 1e3),
+            "-".into(),
+            format!("{:.2}", agg.original_bits as f64 / r.mean_s / 1e6),
+        ]);
+    }
+    assert_eq!(
+        bytes_by_threads[0], bytes_by_threads[1],
+        "compressed container must be bit-identical across encode thread counts"
+    );
+
+    print_table(
+        "§Perf — encode (Algorithm 1, parallel pipeline)",
+        &["case", "ms/iter", "kslices/s", "Mbit/s"],
+        &rows,
+    );
+    write_csv("perf_encode.csv", &["case", "ms", "kslices_s", "mbit_s"], &rows);
+}

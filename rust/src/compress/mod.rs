@@ -1,0 +1,739 @@
+//! The offline half as a first-class subsystem: a **layer-graph
+//! compression pipeline** mirroring the serving-side layer graph.
+//!
+//! The paper's pipeline is prune → quantize → XOR-encrypt per bit-plane
+//! (§2–4). [`LayerCompressor`] runs exactly that for one layer:
+//! magnitude / row / block pruning ([`PruneMethod`]), ternary or
+//! alternating multi-bit quantization ([`QuantMethod`]), then Algorithm 1
+//! encryption of every quantization bit-plane — with the hot encode loop
+//! sharded across scoped worker threads
+//! ([`XorEncoder::encrypt_plane_threaded`]), bit-identical to the serial
+//! encoder at every thread count, and losslessness verified in parallel.
+//!
+//! [`compress_model`] lifts the per-layer pipeline to a whole model: any
+//! dense model — a v2 container with dense layers, the legacy npy bundle
+//! (via [`compress_bundle`](crate::coordinator::compress_bundle), which is
+//! now one frontend among several), or
+//! [`models::synth::synthetic_dense_graph`](crate::models::synth::synthetic_dense_graph)
+//! output — becomes a v2 multi-encrypted-layer container the engine
+//! serves directly. Compression is per-layer configurable (sparsity,
+//! quantizer, design point, which layers to encrypt) through
+//! [`CompressSpec`], and every run produces a per-layer + aggregate
+//! [`CompressionReport`] (Eq. 2 bits/weight, patch overhead, memory
+//! reduction, encode throughput).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::gf2::BitVec;
+use crate::io::sqnn_file::{Activation, EncryptedLayer, Layer, SqnnModel};
+use crate::prune::PruneMethod;
+use crate::quant::QuantMethod;
+use crate::xorenc::{BitPlane, CompressionStats, EncryptConfig, XorEncoder};
+
+/// Environment variable overriding the encode worker count (mirrors
+/// `SQNN_DECODE_THREADS` on the serving side). Unlike the decode env —
+/// which silently falls back on bad values — a set-but-invalid encode
+/// count is a hard error: offline compression must never quietly run at
+/// an unintended parallelism.
+pub const ENCODE_THREADS_ENV: &str = "SQNN_ENCODE_THREADS";
+
+/// Resolve the effective encode worker count from an explicit request
+/// (`0` = auto) and [`ENCODE_THREADS_ENV`]. Errors — never panics — on a
+/// zero or unparsable env value, and on a conflict between an explicit
+/// request and the env var.
+pub fn resolve_encode_threads(requested: usize) -> Result<usize> {
+    resolve_encode_threads_from(requested, std::env::var(ENCODE_THREADS_ENV).ok().as_deref())
+}
+
+/// [`resolve_encode_threads`] against an explicit env value (testable
+/// without mutating process-global state).
+pub fn resolve_encode_threads_from(requested: usize, env: Option<&str>) -> Result<usize> {
+    let env_threads = match env {
+        None => None,
+        Some(v) => {
+            let n: usize = v.trim().parse().map_err(|_| {
+                anyhow::anyhow!("{ENCODE_THREADS_ENV}='{v}' is not a valid thread count")
+            })?;
+            if n == 0 {
+                bail!("{ENCODE_THREADS_ENV} must be >= 1 (got 0; unset it for auto)");
+            }
+            Some(n)
+        }
+    };
+    match (requested, env_threads) {
+        (0, Some(n)) => Ok(n),
+        (0, None) => {
+            Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        }
+        (r, Some(n)) if n != r => bail!(
+            "conflicting encode thread counts: --encode-threads {r} vs \
+             {ENCODE_THREADS_ENV}={n} (drop one of them)"
+        ),
+        (r, _) => Ok(r),
+    }
+}
+
+/// Per-layer compression knobs: how to prune, how to quantize, and the
+/// XOR-network design point to encrypt with.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerSpec {
+    /// Target pruning rate `S`.
+    pub sparsity: f64,
+    /// Pruning granularity.
+    pub prune: PruneMethod,
+    /// Quantizer (bit-planes over the pruning mask).
+    pub quant: QuantMethod,
+    /// Seed-vector width `n_in` of the XOR network.
+    pub n_in: usize,
+    /// Slice width `n_out` (`0` = auto: ~95% of the information bound
+    /// `n_in/(1−S)`, the paper's §3.3 operating margin).
+    pub n_out: usize,
+    /// PRNG seed fixing `M⊕` ([`compress_model`] mixes the chain position
+    /// in so each layer gets a distinct decode network).
+    pub seed: u64,
+    /// §5.2 blocked `n_patch` granularity (`0` = one global block).
+    pub block_slices: usize,
+}
+
+impl Default for LayerSpec {
+    fn default() -> Self {
+        LayerSpec {
+            sparsity: 0.9,
+            prune: PruneMethod::Magnitude,
+            quant: QuantMethod::Multibit { n_q: 1, iters: 4 },
+            n_in: 20,
+            n_out: 0,
+            seed: 0x5153_4E4E,
+            block_slices: 0,
+        }
+    }
+}
+
+impl LayerSpec {
+    /// Resolve the `(n_in, n_out)` design point. `n_out = 0` picks
+    /// `⌊0.95 · n_in/(1−S)⌋` (clamped to at least `n_in`): slightly under
+    /// the information bound, where Fig 7 puts the memory-reduction knee.
+    pub fn design_point(&self) -> (usize, usize) {
+        let n_out = if self.n_out > 0 {
+            self.n_out
+        } else {
+            let density = (1.0 - self.sparsity).max(1e-3);
+            ((0.95 * self.n_in as f64 / density).floor() as usize).max(self.n_in)
+        };
+        (self.n_in, n_out)
+    }
+
+    /// Check the spec against the codec's supported ranges — the offline
+    /// pipeline's contract is clear errors, never downstream panics
+    /// (`XorNetwork`/`quantize_multibit` assert on these bounds).
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.sparsity) {
+            bail!("sparsity {} out of [0, 1]", self.sparsity);
+        }
+        if self.n_in == 0 || self.n_in > crate::gf2::MAX_VARS {
+            bail!("n_in {} out of 1..={} (the GF(2) solver's word width)", self.n_in, crate::gf2::MAX_VARS);
+        }
+        let n_q = self.quant.n_q();
+        if n_q == 0 || n_q > 8 {
+            bail!("n_q {n_q} out of 1..=8");
+        }
+        if let PruneMethod::Block { bs } = self.prune {
+            if bs == 0 {
+                bail!("block pruning needs a block size >= 1");
+            }
+        }
+        let (_, n_out) = self.design_point();
+        if n_out == 0 {
+            bail!("n_out must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Which layers of a model to encrypt.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum LayerSelect {
+    /// Every dense layer in the chain.
+    #[default]
+    AllDense,
+    /// Only the named layers (each must exist and be dense).
+    Named(Vec<String>),
+}
+
+/// Model-level compression spec: a default [`LayerSpec`], optional
+/// per-layer overrides (by layer name), and the encryption selection.
+#[derive(Clone, Debug, Default)]
+pub struct CompressSpec {
+    /// Spec applied to every selected layer without an override.
+    pub default: LayerSpec,
+    /// Per-layer overrides, keyed by layer name.
+    pub overrides: Vec<(String, LayerSpec)>,
+    /// Which layers get encrypted (the rest pass through untouched).
+    pub encrypt: LayerSelect,
+}
+
+impl CompressSpec {
+    /// The spec governing `name` (override if present, else the default).
+    pub fn spec_for(&self, name: &str) -> LayerSpec {
+        self.overrides
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(self.default)
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match &self.encrypt {
+            LayerSelect::AllDense => true,
+            LayerSelect::Named(names) => names.iter().any(|n| n == name),
+        }
+    }
+}
+
+/// Pipeline execution knobs (as opposed to *what* to compress, which is
+/// [`CompressSpec`]'s job).
+#[derive(Clone, Copy, Debug)]
+pub struct CompressOptions {
+    /// Encode worker threads (must be resolved, `>= 1`; see
+    /// [`resolve_encode_threads`]).
+    pub encode_threads: usize,
+    /// Verify losslessness of every plane after encryption (thread-sharded
+    /// decode-and-compare). On by default; disable only for benchmarking.
+    pub verify: bool,
+}
+
+impl Default for CompressOptions {
+    fn default() -> Self {
+        CompressOptions { encode_threads: 1, verify: true }
+    }
+}
+
+/// Per-layer result accounting: the Eq. 2 numbers plus pipeline metadata.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    /// Layer name.
+    pub name: String,
+    /// Output width.
+    pub rows: usize,
+    /// Input width.
+    pub cols: usize,
+    /// Empirical sparsity of the layer's pruning mask.
+    pub sparsity: f64,
+    /// Quantization bits (encrypted planes).
+    pub n_q: usize,
+    /// XOR-network design point.
+    pub n_in: usize,
+    /// XOR-network design point.
+    pub n_out: usize,
+    /// The seed `M⊕` was generated from.
+    pub seed: u64,
+    /// Eq. 2 accounting summed over the layer's planes.
+    pub stats: CompressionStats,
+    /// Quantization MSE on kept weights (`None` for pre-quantized inputs
+    /// like the Python bundle, whose error was paid upstream).
+    pub quant_mse: Option<f64>,
+    /// Wall-clock encrypt+verify time for this layer, seconds.
+    pub encode_secs: f64,
+}
+
+impl LayerReport {
+    /// Weight positions in this layer.
+    pub fn weights(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Quantization-payload bits per weight position (Eq. 2 total over all
+    /// planes ÷ weights) — Fig 10's "(B)" component.
+    pub fn quant_bits_per_weight(&self) -> f64 {
+        self.stats.total_bits as f64 / self.weights().max(1) as f64
+    }
+
+    /// Fraction of the payload spent on patch data (`n_patch` fields +
+    /// `d_patch` positions).
+    pub fn patch_overhead(&self) -> f64 {
+        (self.stats.npatch_bits + self.stats.dpatch_bits) as f64
+            / self.stats.total_bits.max(1) as f64
+    }
+
+    /// Eq. 2 memory reduction vs the uncompressed bit-planes.
+    pub fn memory_reduction(&self) -> f64 {
+        self.stats.memory_reduction()
+    }
+
+    /// Encode throughput in weight-bits per second (plane bits encrypted ÷
+    /// wall clock).
+    pub fn encode_bits_per_sec(&self) -> f64 {
+        (self.weights() * self.n_q) as f64 / self.encode_secs.max(1e-12)
+    }
+}
+
+fn zeroed_stats() -> CompressionStats {
+    CompressionStats {
+        code_bits: 0,
+        npatch_bits: 0,
+        dpatch_bits: 0,
+        total_bits: 0,
+        original_bits: 0,
+        total_patches: 0,
+        max_npatch: 0,
+    }
+}
+
+/// Whole-run report: one [`LayerReport`] per encrypted layer, the names of
+/// pass-through layers, and aggregate accounting.
+#[derive(Clone, Debug)]
+pub struct CompressionReport {
+    /// Per-layer reports, in chain order.
+    pub layers: Vec<LayerReport>,
+    /// Layers left untouched (non-dense, or deselected).
+    pub passthrough: Vec<String>,
+    /// Encode worker threads the run used.
+    pub encode_threads: usize,
+}
+
+impl CompressionReport {
+    /// Eq. 2 accounting summed over every compressed layer.
+    pub fn aggregate(&self) -> CompressionStats {
+        let mut acc = zeroed_stats();
+        for r in &self.layers {
+            acc.code_bits += r.stats.code_bits;
+            acc.npatch_bits += r.stats.npatch_bits;
+            acc.dpatch_bits += r.stats.dpatch_bits;
+            acc.total_bits += r.stats.total_bits;
+            acc.original_bits += r.stats.original_bits;
+            acc.total_patches += r.stats.total_patches;
+            acc.max_npatch = acc.max_npatch.max(r.stats.max_npatch);
+        }
+        acc
+    }
+
+    /// Total weight positions across compressed layers.
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(LayerReport::weights).sum()
+    }
+
+    /// Total encrypt+verify wall clock, seconds.
+    pub fn total_encode_secs(&self) -> f64 {
+        self.layers.iter().map(|r| r.encode_secs).sum()
+    }
+
+    /// Render the per-layer + aggregate table (the `sqnn compress` CLI
+    /// report).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<12} {:>11} {:>6} {:>4} {:>9} {:>12} {:>9} {:>9} {:>10}\n",
+            "layer", "shape", "S", "n_q", "n_in/out", "bits/weight", "patch%", "mem.red.", "Mbit/s enc"
+        ));
+        for r in &self.layers {
+            out.push_str(&format!(
+                "{:<12} {:>11} {:>6.3} {:>4} {:>9} {:>12.3} {:>8.1}% {:>9.3} {:>10.2}\n",
+                r.name,
+                format!("{}x{}", r.rows, r.cols),
+                r.sparsity,
+                r.n_q,
+                format!("{}/{}", r.n_in, r.n_out),
+                r.quant_bits_per_weight(),
+                100.0 * r.patch_overhead(),
+                r.memory_reduction(),
+                r.encode_bits_per_sec() / 1e6,
+            ));
+        }
+        let agg = self.aggregate();
+        let weights = self.total_weights().max(1);
+        let secs = self.total_encode_secs();
+        out.push_str(&format!(
+            "{:<12} {:>11} {:>6} {:>4} {:>9} {:>12.3} {:>8.1}% {:>9.3} {:>10.2}\n",
+            "TOTAL",
+            format!("{weights}w"),
+            "-",
+            "-",
+            "-",
+            agg.total_bits as f64 / weights as f64,
+            100.0 * (agg.npatch_bits + agg.dpatch_bits) as f64 / agg.total_bits.max(1) as f64,
+            agg.memory_reduction(),
+            agg.original_bits as f64 / secs.max(1e-12) / 1e6,
+        ));
+        if !self.passthrough.is_empty() {
+            out.push_str(&format!(
+                "pass-through layers: {} (encode threads: {})\n",
+                self.passthrough.join(", "),
+                self.encode_threads
+            ));
+        } else {
+            out.push_str(&format!("encode threads: {}\n", self.encode_threads));
+        }
+        out
+    }
+}
+
+/// The per-layer prune → quantize → encrypt pipeline.
+pub struct LayerCompressor {
+    spec: LayerSpec,
+    opts: CompressOptions,
+}
+
+impl LayerCompressor {
+    /// Build a compressor for one layer's spec and run options.
+    pub fn new(spec: LayerSpec, opts: CompressOptions) -> Self {
+        LayerCompressor { spec, opts }
+    }
+
+    /// The spec this compressor encrypts with.
+    pub fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    /// Full pipeline on one dense layer: prune (per the spec's method and
+    /// sparsity), quantize the kept weights, then encrypt every bit-plane.
+    pub fn compress_dense(
+        &self,
+        layer_id: u64,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        bias: Vec<f32>,
+        activation: Activation,
+    ) -> Result<(EncryptedLayer, LayerReport)> {
+        if w.len() != rows * cols {
+            bail!("layer {name}: {} weights for shape {rows}x{cols}", w.len());
+        }
+        self.spec.validate().map_err(|e| e.context(format!("layer {name}: invalid spec")))?;
+        let mask = self.spec.prune.mask_for(w, rows, cols, self.spec.sparsity);
+        let q = self.spec.quant.quantize(w, &mask);
+        let mse = q.mse(w);
+        self.encrypt_planes(
+            layer_id, name, rows, cols, q.planes, q.alphas, mask, bias, activation,
+            Some(mse),
+        )
+    }
+
+    /// Encrypt already-quantized bit-planes — the back half of
+    /// [`LayerCompressor::compress_dense`] and the frontend for
+    /// pre-pruned/pre-quantized inputs (the Python npy bundle). The hot
+    /// loop is sharded across `encode_threads` scoped workers with
+    /// per-thread solver scratch; output is bit-identical to the serial
+    /// encoder, and losslessness is verified in parallel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encrypt_planes(
+        &self,
+        layer_id: u64,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        planes: Vec<BitPlane>,
+        alphas: Vec<f32>,
+        mask: BitVec,
+        bias: Vec<f32>,
+        activation: Activation,
+        quant_mse: Option<f64>,
+    ) -> Result<(EncryptedLayer, LayerReport)> {
+        let n = rows * cols;
+        if planes.is_empty() {
+            bail!("layer {name}: no quantization planes to encrypt");
+        }
+        if alphas.len() != planes.len() {
+            bail!("layer {name}: {} alphas for {} planes", alphas.len(), planes.len());
+        }
+        if mask.len() != n {
+            bail!("layer {name}: mask length {} != {rows}x{cols}", mask.len());
+        }
+        if bias.len() != rows {
+            bail!("layer {name}: bias length {} != {rows} rows", bias.len());
+        }
+        if self.opts.encode_threads == 0 {
+            bail!("encode_threads must be >= 1 (resolve it via resolve_encode_threads)");
+        }
+        self.spec.validate().map_err(|e| e.context(format!("layer {name}: invalid spec")))?;
+        for (q, p) in planes.iter().enumerate() {
+            if p.len() != n {
+                bail!("layer {name}: plane {q} length {} != {rows}x{cols}", p.len());
+            }
+        }
+        let (n_in, n_out) = self.spec.design_point();
+        let enc = XorEncoder::new(EncryptConfig {
+            n_in,
+            n_out,
+            seed: self.spec.seed,
+            block_slices: self.spec.block_slices,
+        });
+        let t0 = Instant::now();
+        let mut eplanes = Vec::with_capacity(planes.len());
+        for (q, plane) in planes.iter().enumerate() {
+            let ep = enc.encrypt_plane_threaded(plane, self.opts.encode_threads);
+            if self.opts.verify
+                && !enc.verify_lossless_threaded(plane, &ep, self.opts.encode_threads)
+            {
+                bail!("layer {name} plane {q}: encryption is not lossless (codec bug)");
+            }
+            eplanes.push(ep);
+        }
+        let encode_secs = t0.elapsed().as_secs_f64();
+        let layer = EncryptedLayer {
+            layer_id,
+            name: name.to_string(),
+            rows,
+            cols,
+            planes: eplanes,
+            alphas,
+            mask,
+            bias,
+            activation,
+        };
+        let report = LayerReport {
+            name: name.to_string(),
+            rows,
+            cols,
+            sparsity: layer.sparsity(),
+            n_q: layer.planes.len(),
+            n_in,
+            n_out,
+            seed: self.spec.seed,
+            stats: layer.quant_stats(),
+            quant_mse,
+            encode_secs,
+        };
+        Ok((layer, report))
+    }
+}
+
+fn kind_str(layer: &Layer) -> &'static str {
+    match layer {
+        Layer::Encrypted(_) => "encrypted",
+        Layer::Dense(_) => "dense",
+        Layer::Csr(_) => "csr",
+    }
+}
+
+/// Compress every selected dense layer of `model` through the
+/// prune → quantize → encrypt pipeline, leaving other layers untouched,
+/// and return the resulting v2 multi-encrypted-layer model plus the
+/// per-layer + aggregate report.
+///
+/// Fresh `layer_id`s are allocated above any existing encrypted layer's
+/// id, and each compressed layer's XOR seed mixes its chain position into
+/// the spec seed so the decode-plan cache sees N independent networks.
+/// The output chain is validated before being returned; serving it is
+/// bit-identical to serving [`SqnnModel::to_dense_reference`] of the
+/// result at every kernel × decode mode × thread count.
+pub fn compress_model(
+    model: &SqnnModel,
+    spec: &CompressSpec,
+    opts: &CompressOptions,
+) -> Result<(SqnnModel, CompressionReport)> {
+    if let LayerSelect::Named(names) = &spec.encrypt {
+        for want in names {
+            match model.layers.iter().find(|l| l.name() == want.as_str()) {
+                None => bail!("no layer named '{want}' in the model"),
+                Some(Layer::Dense(_)) => {}
+                Some(other) => bail!(
+                    "layer '{want}' is {} — only dense layers can be compressed",
+                    kind_str(other)
+                ),
+            }
+        }
+    }
+    let mut next_id = model
+        .encrypted_layers()
+        .map(|(_, e)| e.layer_id)
+        .max()
+        .map_or(0, |m| m + 1);
+    let mut layers = Vec::with_capacity(model.layers.len());
+    let mut reports = Vec::new();
+    let mut passthrough = Vec::new();
+    for (li, layer) in model.layers.iter().enumerate() {
+        match layer {
+            Layer::Dense(d) if spec.selected(&d.name) => {
+                let mut lspec = spec.spec_for(&d.name);
+                // Distinct decode network per layer, still deterministic.
+                lspec.seed = lspec
+                    .seed
+                    .wrapping_add((li as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let comp = LayerCompressor::new(lspec, *opts);
+                let (e, rep) = comp.compress_dense(
+                    next_id,
+                    &d.name,
+                    d.rows,
+                    d.cols,
+                    &d.w,
+                    d.b.clone(),
+                    d.activation,
+                )?;
+                next_id += 1;
+                reports.push(rep);
+                layers.push(Layer::Encrypted(e));
+            }
+            other => {
+                passthrough.push(other.name().to_string());
+                layers.push(other.clone());
+            }
+        }
+    }
+    if reports.is_empty() {
+        bail!("nothing to compress: the model has no selected dense layer");
+    }
+    let out = SqnnModel::new(model.meta.clone(), layers);
+    out.validate()?;
+    Ok((
+        out,
+        CompressionReport {
+            layers: reports,
+            passthrough,
+            encode_threads: opts.encode_threads,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::synthetic_dense_graph;
+
+    #[test]
+    fn encode_thread_resolution() {
+        // Explicit request wins when the env is silent.
+        assert_eq!(resolve_encode_threads_from(3, None).unwrap(), 3);
+        // Auto + env.
+        assert_eq!(resolve_encode_threads_from(0, Some("5")).unwrap(), 5);
+        // Agreement is fine.
+        assert_eq!(resolve_encode_threads_from(4, Some("4")).unwrap(), 4);
+        // Auto with no env resolves to >= 1.
+        assert!(resolve_encode_threads_from(0, None).unwrap() >= 1);
+        // Zero / garbage / conflicting env values are errors, not panics.
+        assert!(resolve_encode_threads_from(0, Some("0")).is_err());
+        assert!(resolve_encode_threads_from(0, Some("lots")).is_err());
+        let err = resolve_encode_threads_from(2, Some("8")).unwrap_err().to_string();
+        assert!(err.contains("conflicting"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn design_point_auto_tracks_inverse_density() {
+        let spec = LayerSpec { sparsity: 0.9, n_in: 20, n_out: 0, ..Default::default() };
+        assert_eq!(spec.design_point(), (20, 190));
+        let explicit = LayerSpec { n_out: 64, ..spec };
+        assert_eq!(explicit.design_point(), (20, 64));
+        // Degenerate S never collapses n_out below n_in.
+        let dense = LayerSpec { sparsity: 0.0, n_in: 16, n_out: 0, ..Default::default() };
+        assert!(dense.design_point().1 >= 16);
+    }
+
+    #[test]
+    fn compress_model_encrypts_selected_dense_layers() {
+        let model = synthetic_dense_graph(21, 24, &[16, 12], 4);
+        let spec = CompressSpec {
+            default: LayerSpec {
+                sparsity: 0.85,
+                n_in: 10,
+                n_out: 32,
+                ..Default::default()
+            },
+            overrides: vec![(
+                "fc2".to_string(),
+                LayerSpec {
+                    sparsity: 0.75,
+                    quant: QuantMethod::Multibit { n_q: 2, iters: 2 },
+                    n_in: 8,
+                    n_out: 24,
+                    ..Default::default()
+                },
+            )],
+            encrypt: LayerSelect::Named(vec!["fc1".into(), "fc2".into()]),
+        };
+        let opts = CompressOptions { encode_threads: 2, verify: true };
+        let (out, report) = compress_model(&model, &spec, &opts).unwrap();
+        out.validate().unwrap();
+        assert_eq!(out.encrypted_layers().count(), 2);
+        assert_eq!(report.layers.len(), 2);
+        assert_eq!(report.passthrough, vec!["fc3".to_string()]);
+        // Override applied: fc2 got 2 planes at its own design point.
+        let (_, fc2) = out.encrypted_layers().nth(1).unwrap();
+        assert_eq!(fc2.name, "fc2");
+        assert_eq!(fc2.planes.len(), 2);
+        assert_eq!(fc2.planes[0].n_out, 24);
+        // Distinct layer ids and seeds.
+        let ids: Vec<u64> = out.encrypted_layers().map(|(_, e)| e.layer_id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        let seeds: Vec<u64> =
+            out.encrypted_layers().map(|(_, e)| e.planes[0].seed).collect();
+        assert_ne!(seeds[0], seeds[1]);
+        // Report numbers are self-consistent.
+        for r in &report.layers {
+            assert!(r.quant_bits_per_weight() > 0.0);
+            assert!(r.patch_overhead() >= 0.0 && r.patch_overhead() <= 1.0);
+            assert!(r.quant_mse.is_some());
+        }
+        assert_eq!(report.aggregate().original_bits, 16 * 24 + 2 * 12 * 16);
+        assert!(report.render().contains("fc2"));
+        assert!(report.render().contains("TOTAL"));
+    }
+
+    #[test]
+    fn compress_model_is_bit_identical_across_encode_threads() {
+        let model = synthetic_dense_graph(5, 20, &[18], 3);
+        let spec = CompressSpec {
+            default: LayerSpec { sparsity: 0.8, n_in: 10, n_out: 40, ..Default::default() },
+            ..Default::default()
+        };
+        let reference = compress_model(
+            &model,
+            &spec,
+            &CompressOptions { encode_threads: 1, verify: true },
+        )
+        .unwrap()
+        .0
+        .to_bytes();
+        for threads in [2usize, 4, 8] {
+            let got = compress_model(
+                &model,
+                &spec,
+                &CompressOptions { encode_threads: threads, verify: true },
+            )
+            .unwrap()
+            .0
+            .to_bytes();
+            assert_eq!(got, reference, "container diverged at {threads} encode threads");
+        }
+    }
+
+    #[test]
+    fn out_of_range_specs_error_instead_of_panicking() {
+        let model = synthetic_dense_graph(9, 12, &[8], 2);
+        let opts = CompressOptions { encode_threads: 1, verify: true };
+        for bad in [
+            LayerSpec { n_in: 0, ..Default::default() },
+            LayerSpec { n_in: 80, ..Default::default() }, // > solver word width
+            LayerSpec { quant: QuantMethod::Multibit { n_q: 9, iters: 1 }, ..Default::default() },
+            LayerSpec { quant: QuantMethod::Multibit { n_q: 0, iters: 1 }, ..Default::default() },
+            LayerSpec { sparsity: 1.5, ..Default::default() },
+            LayerSpec { prune: PruneMethod::Block { bs: 0 }, ..Default::default() },
+        ] {
+            let spec = CompressSpec { default: bad, ..Default::default() };
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                compress_model(&model, &spec, &opts)
+            }));
+            let res = r.expect("must not panic on an out-of-range spec");
+            assert!(res.is_err(), "spec {bad:?} was accepted");
+        }
+    }
+
+    #[test]
+    fn compress_model_rejects_bad_selection() {
+        let model = synthetic_dense_graph(7, 10, &[8], 2);
+        let spec = CompressSpec {
+            encrypt: LayerSelect::Named(vec!["nope".into()]),
+            ..Default::default()
+        };
+        assert!(compress_model(&model, &spec, &CompressOptions::default()).is_err());
+        // Zero encode threads is a clear error, not a panic.
+        let all = CompressSpec::default();
+        assert!(compress_model(
+            &model,
+            &all,
+            &CompressOptions { encode_threads: 0, verify: true }
+        )
+        .is_err());
+    }
+}

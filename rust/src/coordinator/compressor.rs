@@ -1,21 +1,27 @@
-//! Bundle → `.sqnn` compression: the offline half of the coordinator.
+//! Bundle → `.sqnn` compression: the legacy Python-bundle **frontend** of
+//! the [`compress`](crate::compress) subsystem.
 //!
 //! Consumes the weight bundle exported by `python/compile/pipeline.py`
 //! (`fc1_mask.npy`, `fc1_bits.npy`, `fc1_alphas.npy`, dense tails,
-//! `meta.json`) and produces the compressed [`SqnnModel`] by running
-//! Algorithm 1 over every FC1 bit-plane.
+//! `meta.json`) — weights already pruned and quantized upstream — and
+//! hands the bit-planes to [`LayerCompressor::encrypt_planes`] for
+//! thread-sharded Algorithm 1 encryption. Dense models without a Python
+//! bundle go through [`compress::compress_model`](crate::compress::compress_model)
+//! instead; this module is one frontend among several.
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::{
+    resolve_encode_threads, CompressOptions, CompressionReport, LayerCompressor, LayerSpec,
+};
 use crate::gf2::BitVec;
 use crate::io::json;
 use crate::io::npy::read_npy;
-use crate::io::sqnn_file::{
-    Activation, DenseLayer, EncryptedLayer, Layer, ModelMeta, SqnnModel,
-};
-use crate::xorenc::{BitPlane, EncryptConfig, XorEncoder};
+use crate::io::sqnn_file::{Activation, DenseLayer, Layer, ModelMeta, SqnnModel};
+use crate::quant::QuantMethod;
+use crate::xorenc::BitPlane;
 
 /// Parsed `meta.json` from the Python pipeline.
 #[derive(Clone, Debug)]
@@ -57,8 +63,20 @@ pub fn read_bundle_meta(artifacts_dir: impl AsRef<Path>) -> Result<BundleMeta> {
     })
 }
 
-/// Compress the exported bundle into a `.sqnn` model.
+/// Compress the exported bundle into a `.sqnn` model (encode threads
+/// auto-resolved: `SQNN_ENCODE_THREADS`, else the core count — the result
+/// is bit-identical at every thread count).
 pub fn compress_bundle(artifacts_dir: impl AsRef<Path>) -> Result<SqnnModel> {
+    let opts = CompressOptions { encode_threads: resolve_encode_threads(0)?, verify: true };
+    Ok(compress_bundle_with(artifacts_dir, &opts)?.0)
+}
+
+/// [`compress_bundle`] with explicit [`CompressOptions`], also returning
+/// the per-layer + aggregate [`CompressionReport`].
+pub fn compress_bundle_with(
+    artifacts_dir: impl AsRef<Path>,
+    opts: &CompressOptions,
+) -> Result<(SqnnModel, CompressionReport)> {
     let dir = artifacts_dir.as_ref();
     let meta = read_bundle_meta(dir)?;
     let wdir = dir.join("weights");
@@ -79,39 +97,43 @@ pub fn compress_bundle(artifacts_dir: impl AsRef<Path>) -> Result<SqnnModel> {
     let bits_u8 = bits_arr.as_u8()?;
     let alphas = alphas_arr.as_f32()?.to_vec();
 
-    let enc = XorEncoder::new(EncryptConfig {
+    // The bundle is pre-pruned and pre-quantized: rebuild the bit-planes
+    // and run only the encryption stage, at the bundle's design point.
+    let plane_len = rows * cols;
+    let planes: Vec<BitPlane> = (0..meta.fc1_nq)
+        .map(|q| {
+            let base = q * plane_len;
+            let bits = BitVec::from_fn(plane_len, |j| bits_u8[base + j] != 0);
+            BitPlane::new(bits, mask.clone())
+        })
+        .collect();
+    let spec = LayerSpec {
+        sparsity: meta.fc1_sparsity,
+        quant: QuantMethod::Multibit { n_q: meta.fc1_nq, iters: 0 },
         n_in: meta.n_in,
         n_out: meta.n_out,
         seed: meta.xor_seed,
-        block_slices: 0,
-    });
-    let plane_len = rows * cols;
-    let mut planes = Vec::with_capacity(meta.fc1_nq);
-    for q in 0..meta.fc1_nq {
-        let base = q * plane_len;
-        let bits = BitVec::from_fn(plane_len, |j| bits_u8[base + j] != 0);
-        let plane = BitPlane::new(bits, mask.clone());
-        let ep = enc.encrypt_plane(&plane);
-        if !enc.verify_lossless(&plane, &ep) {
-            bail!("plane {q}: encryption is not lossless (codec bug)");
-        }
-        planes.push(ep);
-    }
-
+        ..Default::default()
+    };
     let bias = read_npy(wdir.join("b1.npy"))?.as_f32()?.to_vec();
-    // Layer graph: the encrypted head (layer_id 0) + dense tails, with the
-    // pipeline's MLP activations (ReLU everywhere except the logit head).
-    let mut layers = vec![Layer::Encrypted(EncryptedLayer {
-        layer_id: 0,
-        name: "fc1".to_string(),
+    let compressor = LayerCompressor::new(spec, *opts);
+    let (fc1, report) = compressor.encrypt_planes(
+        0,
+        "fc1",
         rows,
         cols,
         planes,
         alphas,
         mask,
         bias,
-        activation: Activation::Relu,
-    })];
+        Activation::Relu,
+        None,
+    )?;
+
+    // Layer graph: the encrypted head (layer_id 0) + dense tails, with the
+    // pipeline's MLP activations (ReLU everywhere except the logit head).
+    let mut layers = vec![Layer::Encrypted(fc1)];
+    let mut passthrough = Vec::new();
     for (wname, bname, r, c, activation) in [
         ("w2", "b2", meta.hidden2, meta.hidden1, Activation::Relu),
         ("w3", "b3", meta.num_classes, meta.hidden2, Activation::Identity),
@@ -129,11 +151,21 @@ pub fn compress_bundle(artifacts_dir: impl AsRef<Path>) -> Result<SqnnModel> {
             b: b.as_f32()?.to_vec(),
             activation,
         }));
+        passthrough.push(wname.to_string());
     }
 
-    Ok(SqnnModel::new(
+    let model = SqnnModel::new(
         ModelMeta { input_dim: meta.input_dim, num_classes: meta.num_classes },
         layers,
+    );
+    model.validate()?;
+    Ok((
+        model,
+        CompressionReport {
+            layers: vec![report],
+            passthrough,
+            encode_threads: opts.encode_threads,
+        },
     ))
 }
 
@@ -202,6 +234,33 @@ mod tests {
                     assert_eq!(decoded[q].get(j), bits_u8[q * 8 * 64 + j] != 0, "q={q} j={j}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn bundle_report_and_encode_thread_identity() {
+        let dir = tmpdir("report");
+        make_bundle(&dir, 8, 64, 2);
+        let (m1, rep) = compress_bundle_with(
+            &dir,
+            &CompressOptions { encode_threads: 1, verify: true },
+        )
+        .unwrap();
+        assert_eq!(rep.layers.len(), 1);
+        assert_eq!(rep.layers[0].n_q, 2);
+        assert_eq!(rep.layers[0].n_in, 10);
+        assert_eq!(rep.layers[0].n_out, 32);
+        assert!(rep.layers[0].quant_mse.is_none(), "bundle is pre-quantized");
+        assert_eq!(rep.passthrough, vec!["w2".to_string(), "w3".to_string()]);
+        // The parallel encode is bit-identical: same container bytes at
+        // every encode thread count.
+        for threads in [2usize, 8] {
+            let (mt, _) = compress_bundle_with(
+                &dir,
+                &CompressOptions { encode_threads: threads, verify: true },
+            )
+            .unwrap();
+            assert_eq!(mt.to_bytes(), m1.to_bytes(), "threads={threads}");
         }
     }
 

@@ -1,6 +1,7 @@
 //! Layer-3 coordinator: the serving side of the system.
 //!
-//! * [`compressor`] — weight bundle → `.sqnn` (offline path);
+//! * [`compressor`] — Python weight bundle → `.sqnn` (the legacy frontend
+//!   of the [`compress`](crate::compress) pipeline);
 //! * [`engine`] — compressed model + AOT executables, batch execution;
 //! * [`batcher`] — dynamic batching over a dedicated executor thread;
 //! * [`metrics`] — counters and latency percentiles.
@@ -11,7 +12,7 @@ pub mod engine;
 pub mod metrics;
 
 pub use batcher::{BatchPolicy, Coordinator, CoordinatorHandle};
-pub use compressor::{compress_bundle, read_bundle_meta, BundleMeta};
+pub use compressor::{compress_bundle, compress_bundle_with, read_bundle_meta, BundleMeta};
 pub use engine::{
     build_static_inputs, DecodeMode, EngineOptions, GraphVariant, SqnnEngine, StaticInputs,
 };

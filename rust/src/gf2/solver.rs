@@ -51,6 +51,14 @@ impl IncrementalSolver {
         self.n_vars
     }
 
+    /// Clear every stored equation, keeping the pivot allocation. The
+    /// per-slice encode loop reuses one solver per worker thread instead
+    /// of reallocating the pivot table for every slice.
+    pub fn reset(&mut self) {
+        self.pivots.iter_mut().for_each(|p| *p = None);
+        self.rank = 0;
+    }
+
     /// Current rank (number of independent equations stored).
     pub fn rank(&self) -> usize {
         self.rank

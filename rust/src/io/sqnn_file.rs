@@ -723,6 +723,40 @@ impl SqnnModel {
         Ok(SqnnModel { meta: ModelMeta { input_dim, num_classes }, layers })
     }
 
+    /// A fully-dense clone of the model: every encrypted layer is decoded
+    /// (serial reference decode — bit-identical to every thread count) and
+    /// every CSR layer expanded into a [`Layer::Dense`] with the same
+    /// name, bias, and activation. This is the materialized reference the
+    /// compress→serve equivalence property is measured against: serving
+    /// the reference through the dense kernel is bit-identical to serving
+    /// the compressed model at every kernel × decode mode × thread count.
+    pub fn to_dense_reference(&self) -> SqnnModel {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Encrypted(e) => Layer::Dense(DenseLayer {
+                    name: e.name.clone(),
+                    rows: e.rows,
+                    cols: e.cols,
+                    w: e.reconstruct_dense(),
+                    b: e.bias.clone(),
+                    activation: e.activation,
+                }),
+                Layer::Csr(c) => Layer::Dense(DenseLayer {
+                    name: c.name.clone(),
+                    rows: c.csr.rows,
+                    cols: c.csr.cols,
+                    w: c.csr.to_dense(),
+                    b: c.bias.clone(),
+                    activation: c.activation,
+                }),
+                Layer::Dense(d) => Layer::Dense(d.clone()),
+            })
+            .collect();
+        SqnnModel { meta: self.meta.clone(), layers }
+    }
+
     /// Write the v2 container to disk.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path.as_ref(), self.to_bytes())
@@ -1058,6 +1092,28 @@ mod tests {
         assert_eq!(t.data, e1.reconstruct_dense());
         // One plan per encrypted layer id is cached.
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn dense_reference_materializes_every_kind() {
+        let m = multi_layer_model();
+        let r = m.to_dense_reference();
+        r.validate().unwrap();
+        assert_eq!(r.layers.len(), m.layers.len());
+        assert!(r.layers.iter().all(|l| matches!(l, Layer::Dense(_))));
+        let cache = PlanCache::new();
+        let cfg = DecodeConfig::with_threads(1);
+        for (a, b) in m.layers.iter().zip(&r.layers) {
+            assert_eq!(a.name(), b.name());
+            assert_eq!(a.activation(), b.activation());
+            assert_eq!(a.bias(), b.bias());
+            assert_eq!(
+                a.materialize(&cache, &cfg).data,
+                b.materialize(&cache, &cfg).data,
+                "layer {} reference weights diverge",
+                a.name()
+            );
+        }
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! across the engine's decode workers), its f32 weight values are
 //! reconstructed from mask + alphas into a thread-local scratch buffer,
 //! and the tile is multiplied into the output accumulators *before* the
-//! next tile is decoded. Peak per-layer scratch is one tile
+//! next tile is decoded — with the tile × activation product itself
+//! sharded across contiguous output-row blocks on the same worker pool
+//! once `batch × tile` clears a minimum-work threshold (below it a
+//! spawn costs more than the arithmetic; the result is bit-identical
+//! either way). Peak per-layer scratch is one tile
 //! (`tile_slices × n_out` bits per plane + as many f32s), never the full
 //! `rows × cols` dense matrix.
 //!
@@ -100,10 +104,15 @@ impl FusedDecodeKernel {
 impl FusedDecodeKernel {
     /// The tile-streaming core, batch-major: each tile is decoded and
     /// reconstructed **once**, then multiplied against every input in
-    /// `xs` before the next tile is decoded. Per input, the accumulation
-    /// order is exactly [`affine`](super::affine)'s, so each output row
-    /// is bit-identical to the materialized path regardless of batch
-    /// composition.
+    /// `xs` before the next tile is decoded. Accumulators are kept in a
+    /// `[row][input]` flat matrix so the tile multiply can shard the
+    /// tile's output rows into contiguous blocks across the engine's
+    /// worker threads (disjoint `&mut` sub-slices, no synchronization).
+    /// Per (row, input) the accumulation order is exactly
+    /// [`affine`](super::affine)'s — bias first, tiles in ascending flat
+    /// order, columns ascending within each tile — so each output row is
+    /// bit-identical to the materialized path regardless of batch
+    /// composition, worker count, or row sharding.
     fn run(&self, e: &EncryptedLayer, ctx: &KernelCtx<'_>, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         for (k, x) in xs.iter().enumerate() {
             if x.len() != e.cols {
@@ -111,11 +120,11 @@ impl FusedDecodeKernel {
             }
         }
         let n = e.rows * e.cols;
-        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| e.bias.clone()).collect();
+        let batch = xs.len();
         if n == 0 || e.planes.is_empty() || xs.is_empty() {
             // No weights to decode (an empty plane set reconstructs to
             // all-zero weights): the affine collapses to the bias.
-            return Ok(ys);
+            return Ok(xs.iter().map(|_| e.bias.clone()).collect());
         }
         // One plan serves every plane: a layer's planes share one design
         // point (enforced by the container parser and model validation).
@@ -123,6 +132,11 @@ impl FusedDecodeKernel {
         let n_out = plan.n_out();
         let threads = ctx.decoder.threads();
         let num_slices = e.planes[0].num_slices();
+        // Row-major [row][input] accumulators, bias-initialized.
+        let mut acc = vec![0.0f32; e.rows * batch];
+        for (r, &b) in e.bias.iter().enumerate() {
+            acc[r * batch..(r + 1) * batch].fill(b);
+        }
         SCRATCH.with(|cell| {
             let scratch = &mut *cell.borrow_mut();
             while scratch.bits.len() < e.planes.len() {
@@ -151,25 +165,92 @@ impl FusedDecodeKernel {
                 self.peak_scratch.fetch_max(scratch.vals.len(), Ordering::Relaxed);
                 // 3. Multiply the tile into every input's accumulators
                 //    before the next tile is decoded (weights are read
-                //    once per batch, activations stream over them).
-                for (x, y) in xs.iter().zip(&mut ys) {
-                    let mut flat = b0;
-                    while flat < b1 {
-                        let r = flat / e.cols;
-                        let row_end = ((r + 1) * e.cols).min(b1);
-                        let c0 = flat - r * e.cols;
-                        let mut acc = y[r];
-                        let vals = &scratch.vals[flat - b0..row_end - b0];
-                        for (v, xv) in vals.iter().zip(&x[c0..c0 + vals.len()]) {
-                            acc += v * xv;
-                        }
-                        y[r] = acc;
-                        flat = row_end;
-                    }
-                }
+                //    once per batch, activations stream over them),
+                //    sharded across output-row blocks.
+                multiply_tile(&scratch.vals, e.cols, xs, b0, b1, threads, &mut acc);
             }
         });
-        Ok(ys)
+        // Transpose [row][input] accumulators into one logit row per input.
+        Ok((0..batch)
+            .map(|k| (0..e.rows).map(|r| acc[r * batch + k]).collect())
+            .collect())
+    }
+}
+
+/// Below this many multiply–accumulate ops (`batch × tile weight
+/// positions`) a tile's product runs inline: a thread spawn/join costs
+/// more than the arithmetic it would shard, and sharding never changes
+/// the result (bit-identical either way), only the wall clock.
+const MIN_PARALLEL_MACS: usize = 1 << 15;
+
+/// Multiply one reconstructed tile (flat weight positions `[b0, b1)`,
+/// values in `vals`) into the `[row][input]` accumulator matrix `acc`,
+/// sharding the tile's output rows into contiguous blocks across up to
+/// `threads` scoped workers. Row blocks map to disjoint contiguous `acc`
+/// chunks (`chunks_mut`), so workers share nothing mutable; per
+/// (row, input) the float ops are identical to the serial loop, making
+/// the output bit-identical at every worker count.
+fn multiply_tile(
+    vals: &[f32],
+    cols: usize,
+    xs: &[&[f32]],
+    b0: usize,
+    b1: usize,
+    threads: usize,
+    acc: &mut [f32],
+) {
+    let batch = xs.len();
+    debug_assert!(b1 > b0);
+    let r_lo = b0 / cols;
+    let r_hi = (b1 - 1) / cols; // inclusive (partial edge rows included)
+    let rows_span = r_hi + 1 - r_lo;
+    let workers = threads.max(1).min(rows_span);
+    let tile_acc = &mut acc[r_lo * batch..(r_hi + 1) * batch];
+    if workers <= 1 || batch * (b1 - b0) < MIN_PARALLEL_MACS {
+        multiply_rows(vals, cols, xs, b0, b1, r_lo, r_hi + 1, tile_acc);
+        return;
+    }
+    let rows_per = rows_span.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (wi, chunk) in tile_acc.chunks_mut(rows_per * batch).enumerate() {
+            let w0 = r_lo + wi * rows_per;
+            let w1 = (w0 + rows_per).min(r_hi + 1);
+            scope.spawn(move || multiply_rows(vals, cols, xs, b0, b1, w0, w1, chunk));
+        }
+    });
+}
+
+/// The per-worker share of a tile multiply: rows `[r0, r1)` of the tile,
+/// accumulating into `acc` (that row block's `[row][input]` chunk). Each
+/// row touches only its own columns inside `[b0, b1)`, loaded from and
+/// stored back to its accumulator exactly as the serial path does.
+fn multiply_rows(
+    vals: &[f32],
+    cols: usize,
+    xs: &[&[f32]],
+    b0: usize,
+    b1: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let batch = xs.len();
+    for r in r0..r1 {
+        let flat0 = b0.max(r * cols);
+        let flat1 = b1.min((r + 1) * cols);
+        if flat0 >= flat1 {
+            continue;
+        }
+        let row_vals = &vals[flat0 - b0..flat1 - b0];
+        let c0 = flat0 - r * cols;
+        for (k, x) in xs.iter().enumerate() {
+            let slot = (r - r0) * batch + k;
+            let mut a = acc[slot];
+            for (v, xv) in row_vals.iter().zip(&x[c0..c0 + row_vals.len()]) {
+                a += v * xv;
+            }
+            acc[slot] = a;
+        }
     }
 }
 
@@ -268,6 +349,32 @@ mod tests {
         assert!(peak < 96 * 128 / 2, "peak {peak} approaches the full dense weight");
         // And the output still matches the materialized reference.
         assert_eq!(got, affine(&e.reconstruct_dense(), 96, 128, &x, &e.bias));
+    }
+
+    #[test]
+    fn row_sharded_multiply_is_bit_identical_above_the_threshold() {
+        // 64x128 weights in one 10k-f32 tile × batch 8 = 65536 MACs —
+        // over MIN_PARALLEL_MACS, so the tile product actually shards
+        // across output-row blocks; outputs must still match the
+        // materialized affine exactly at every worker count.
+        let e = layer(64, 128, 2, 48, 21);
+        let w = e.reconstruct_dense();
+        let mut rng = Rng::new(22);
+        let xs: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..128).map(|_| rng.next_gaussian() as f32 * 0.4).collect())
+            .collect();
+        let want: Vec<Vec<f32>> =
+            xs.iter().map(|x| affine(&w, 64, 128, x, &e.bias)).collect();
+        let wrapped = Layer::Encrypted(e.clone());
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        assert!(8 * 64 * 128 >= MIN_PARALLEL_MACS, "test no longer crosses the gate");
+        for threads in [1usize, 2, 4, 8, 64] {
+            let decoder = ParallelDecoder::new(DecodeConfig::with_threads(threads));
+            let ctx = KernelCtx { decoder: &decoder };
+            let k = FusedDecodeKernel::with_tile_f32s(&e, 10_000);
+            let got = k.forward_batch(&wrapped, &ctx, &refs).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 
     #[test]

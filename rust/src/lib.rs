@@ -7,7 +7,10 @@
 //! short seeds for a fixed XOR-gate network, decoded at a fixed rate with
 //! perfect load balance, plus the substrates the paper measures against
 //! (CSR, Viterbi encoding), the pruning/quantization pipeline that produces
-//! SQNNs, a cycle-level decoder simulator, a thread-sharded parallel decode
+//! SQNNs, a native layer-graph compression pipeline (`compress`:
+//! prune → quantize → thread-sharded parallel encryption, dense model in /
+//! N-encrypted-layer container out), a cycle-level decoder simulator, a
+//! thread-sharded parallel decode
 //! runtime, a per-layer matmul kernel registry (dense affine, real CSR
 //! SpMV, and a fused tile-streaming XOR-decode × matmul that never
 //! materializes the dense weights), and a Rust inference coordinator that
@@ -18,6 +21,8 @@
 //! for reproduced tables/figures.
 
 pub mod benchutil;
+#[warn(missing_docs)]
+pub mod compress;
 pub mod coordinator;
 #[warn(missing_docs)]
 pub mod gf2;

@@ -1,7 +1,8 @@
 //! `sqnn` — the coordinator CLI.
 //!
 //! Subcommands:
-//!   compress  --artifacts DIR --out MODEL.sqnn     bundle → .sqnn
+//!   compress  [--artifacts DIR | --input M.sqnn | --synth DIMS] --out MODEL.sqnn
+//!             prune → quantize → encrypt into an N-encrypted-layer container
 //!   verify    --artifacts DIR --model MODEL.sqnn   lossless + accuracy check
 //!   info      --model MODEL.sqnn                   container stats
 //!   serve     --artifacts DIR --model MODEL.sqnn [--port P]
@@ -14,12 +15,19 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use sqnn_xor::compress::{
+    compress_model, resolve_encode_threads, CompressOptions, CompressSpec, LayerSelect,
+    LayerSpec,
+};
 use sqnn_xor::coordinator::{
-    compress_bundle, read_bundle_meta, BatchPolicy, Coordinator, DecodeMode, EngineOptions,
-    KernelChoice, SqnnEngine,
+    compress_bundle, compress_bundle_with, read_bundle_meta, BatchPolicy, Coordinator,
+    DecodeMode, EngineOptions, KernelChoice, SqnnEngine,
 };
 use sqnn_xor::io::npy::read_npy;
 use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
+use sqnn_xor::models::synthetic_dense_graph;
+use sqnn_xor::prune::PruneMethod;
+use sqnn_xor::quant::QuantMethod;
 use sqnn_xor::runtime::Runtime;
 use sqnn_xor::server::{Client, Server};
 
@@ -98,7 +106,18 @@ fn print_help() {
          usage: sqnn <command> [flags]\n\
          \n\
          commands:\n\
-           compress  --artifacts DIR --out MODEL.sqnn   compress the python weight bundle\n\
+           compress  --out MODEL.sqnn                   prune → quantize → encrypt a dense model\n\
+                     input (one of):\n\
+                       --artifacts DIR                  python weight bundle (pre-quantized)\n\
+                       --input MODEL.sqnn               compress a container's dense layers\n\
+                       --synth IN,H1,..,CLASSES         synthetic dense graph (no artifacts)\n\
+                     pipeline knobs (container/synth inputs):\n\
+                       --sparsity S (0.9)  --prune magnitude|row|block[:BS]\n\
+                       --nq N (1)  --quant-iters I (4)  --ternary\n\
+                       --n-in N (20)  --n-out N (0 = auto)  --seed N  --block-slices B\n\
+                       --layers a,b,c | all             which dense layers to encrypt\n\
+                     --encode-threads N                 encode workers (0 = auto; also\n\
+                                                        settable via SQNN_ENCODE_THREADS)\n\
            verify    --artifacts DIR --model M.sqnn     lossless + served-accuracy check\n\
            info      --model M.sqnn                     container statistics\n\
            serve     --artifacts DIR --model M.sqnn --port 7433   TCP inference server\n\
@@ -116,28 +135,103 @@ fn print_help() {
     );
 }
 
-fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
-    let artifacts = flag(flags, "artifacts", "artifacts");
-    let out = flag(flags, "out", "model.sqnn");
-    let model = compress_bundle(artifacts)?;
-    model.save(out)?;
-    println!("wrote {out} ({} layers)", model.layers.len());
-    for (_, e) in model.encrypted_layers() {
-        let p0 = &e.planes[0];
-        println!(
-            "  encrypted {}: {}x{}  S={:.2}  nq={}  (n_in={}, n_out={})",
-            e.name,
-            e.rows,
-            e.cols,
-            e.sparsity(),
-            e.planes.len(),
-            p0.n_in,
-            p0.n_out
-        );
+/// Build the pipeline spec from the CLI flags (container / synth
+/// frontends; the bundle frontend carries its own pre-quantized spec).
+fn compress_spec(flags: &HashMap<String, String>) -> Result<CompressSpec> {
+    let sparsity: f64 = flag(flags, "sparsity", "0.9").parse().context("bad --sparsity")?;
+    if !(0.0..=1.0).contains(&sparsity) {
+        bail!("--sparsity must be in [0, 1]");
     }
+    let quant = if flags.contains_key("ternary") {
+        QuantMethod::Ternary
+    } else {
+        QuantMethod::Multibit {
+            n_q: flag(flags, "nq", "1").parse().context("bad --nq")?,
+            iters: flag(flags, "quant-iters", "4").parse().context("bad --quant-iters")?,
+        }
+    };
+    let default = LayerSpec {
+        sparsity,
+        prune: flag(flags, "prune", "magnitude").parse::<PruneMethod>()?,
+        quant,
+        n_in: flag(flags, "n-in", "20").parse().context("bad --n-in")?,
+        n_out: flag(flags, "n-out", "0").parse().context("bad --n-out")?,
+        seed: match flags.get("seed") {
+            Some(s) => s.parse().context("bad --seed")?,
+            None => LayerSpec::default().seed,
+        },
+        block_slices: flag(flags, "block-slices", "0").parse().context("bad --block-slices")?,
+    };
+    let encrypt = match flags.get("layers").map(String::as_str) {
+        None | Some("all") => LayerSelect::AllDense,
+        Some(list) => {
+            LayerSelect::Named(list.split(',').map(|s| s.trim().to_string()).collect())
+        }
+    };
+    Ok(CompressSpec { default, overrides: Vec::new(), encrypt })
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
+    let out = flag(flags, "out", "model.sqnn");
+    let requested: usize =
+        flag(flags, "encode-threads", "0").parse().context("bad --encode-threads")?;
+    let opts =
+        CompressOptions { encode_threads: resolve_encode_threads(requested)?, verify: true };
+    let t0 = std::time::Instant::now();
+    let (model, report) = if let Some(synth) = flags.get("synth") {
+        // Artifact-free end-to-end: synthesize a dense graph, compress it.
+        let dims: Vec<usize> = synth
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .context("bad --synth (expected in,h1,...,classes e.g. 256,128,10)")?;
+        if dims.len() < 2 {
+            bail!("--synth needs at least input_dim,num_classes");
+        }
+        let synth_seed: u64 =
+            flag(flags, "synth-seed", "42").parse().context("bad --synth-seed")?;
+        let dense = synthetic_dense_graph(
+            synth_seed,
+            dims[0],
+            &dims[1..dims.len() - 1],
+            *dims.last().unwrap(),
+        );
+        compress_model(&dense, &compress_spec(flags)?, &opts)?
+    } else if let Some(input) = flags.get("input") {
+        // Any .sqnn container: its (selected) dense layers are compressed.
+        let dense = SqnnModel::load(input)?;
+        compress_model(&dense, &compress_spec(flags)?, &opts)?
+    } else {
+        // Legacy Python-bundle frontend: the bundle is pre-pruned and
+        // pre-quantized, so pipeline knobs cannot apply — reject them
+        // loudly rather than silently compressing with other settings.
+        let ignored: Vec<&str> = [
+            "sparsity", "prune", "nq", "quant-iters", "ternary", "n-in", "n-out", "seed",
+            "block-slices", "layers", "synth-seed",
+        ]
+        .into_iter()
+        .filter(|k| flags.contains_key(*k))
+        .collect();
+        if !ignored.is_empty() {
+            bail!(
+                "--artifacts input is pre-pruned/pre-quantized; pipeline knobs --{} do not \
+                 apply (use --input or --synth to run the prune→quant→encrypt pipeline)",
+                ignored.join(" --")
+            );
+        }
+        compress_bundle_with(flag(flags, "artifacts", "artifacts"), &opts)?
+    };
+    model.save(out)?;
+    println!(
+        "wrote {out}: {} layers ({} encrypted) in {:.2}s",
+        model.layers.len(),
+        model.encrypted_layers().count(),
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", report.render());
     let st = model.quant_stats();
     println!(
-        "  quant payload: {:.3} bits/weight (codes {:.3} + npatch {:.3} + dpatch {:.3}); ratio {:.2}x",
+        "quant payload: {:.3} bits/weight (codes {:.3} + npatch {:.3} + dpatch {:.3}); ratio {:.2}x",
         st.bits_per_weight(),
         st.code_bits as f64 / st.original_bits as f64,
         st.npatch_bits as f64 / st.original_bits as f64,

@@ -7,8 +7,8 @@
 pub mod synth;
 
 pub use synth::{
-    synthetic_encrypted_layer, synthetic_layer_graph, synthetic_mixed_layer_graph, SynthCsr,
-    SynthEncrypted,
+    synthetic_dense_graph, synthetic_encrypted_layer, synthetic_layer_graph,
+    synthetic_mixed_layer_graph, SynthCsr, SynthEncrypted,
 };
 
 use crate::rng::Rng;

@@ -185,6 +185,42 @@ pub fn synthetic_mixed_layer_graph(
     model
 }
 
+/// Build an **all-dense** synthetic layer graph — the compression
+/// pipeline's input: `input_dim` → each width in `hidden` (dense, ReLU,
+/// Gaussian weights) → `num_classes` (dense logit head, identity).
+/// Deterministic in `seed`; feed it to
+/// [`compress_model`](crate::compress::compress_model) to get an
+/// N-encrypted-layer model without any Python artifacts.
+pub fn synthetic_dense_graph(
+    seed: u64,
+    input_dim: usize,
+    hidden: &[usize],
+    num_classes: usize,
+) -> SqnnModel {
+    let mut rng = Rng::new(seed);
+    let mut layers: Vec<Layer> = Vec::with_capacity(hidden.len() + 1);
+    let mut width = input_dim;
+    let tail: Vec<(usize, Activation)> = hidden
+        .iter()
+        .map(|&h| (h, Activation::Relu))
+        .chain(std::iter::once((num_classes, Activation::Identity)))
+        .collect();
+    for (i, (h, activation)) in tail.into_iter().enumerate() {
+        layers.push(Layer::Dense(DenseLayer {
+            name: format!("fc{}", i + 1),
+            rows: h,
+            cols: width,
+            w: (0..h * width).map(|_| rng.next_gaussian() as f32 * 0.2).collect(),
+            b: (0..h).map(|r| r as f32 * 0.01).collect(),
+            activation,
+        }));
+        width = h;
+    }
+    let model = SqnnModel::new(ModelMeta { input_dim, num_classes }, layers);
+    debug_assert!(model.validate().is_ok());
+    model
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +250,18 @@ mod tests {
         let back = SqnnModel::from_bytes(&m.to_bytes()).unwrap();
         back.validate().unwrap();
         assert_eq!(back.layers.len(), 4);
+    }
+
+    #[test]
+    fn dense_graph_is_valid_dense_only_and_deterministic() {
+        let m = synthetic_dense_graph(11, 20, &[16, 12], 4);
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 3);
+        assert!(m.layers.iter().all(|l| matches!(l, Layer::Dense(_))));
+        assert_eq!(m.layers[0].in_dim(), 20);
+        assert_eq!(m.layers[2].out_dim(), 4);
+        assert_eq!(m.layers[2].activation(), Activation::Identity);
+        assert_eq!(m.to_bytes(), synthetic_dense_graph(11, 20, &[16, 12], 4).to_bytes());
     }
 
     #[test]

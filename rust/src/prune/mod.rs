@@ -11,3 +11,79 @@ pub use binmf::{
     MaskApproxStats,
 };
 pub use magnitude::{block_mask, magnitude_mask, mask_sparsity, row_mask};
+
+use crate::gf2::BitVec;
+
+/// Pruning granularity for the compression pipeline (Fig 2): the paper's
+/// preferred fine-grained magnitude pruning, plus the structured row /
+/// block baselines it argues against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneMethod {
+    /// Keep the largest-magnitude weights, unstructured (Han et al. [11]).
+    Magnitude,
+    /// Prune whole rows by L1 norm (Fig 2 "row").
+    Row,
+    /// Prune `bs×bs` blocks by L1 norm (Fig 2 "block").
+    Block {
+        /// Block side length.
+        bs: usize,
+    },
+}
+
+impl PruneMethod {
+    /// Compute the care mask (set = kept) for a `rows×cols` weight matrix
+    /// at the requested sparsity.
+    pub fn mask_for(&self, w: &[f32], rows: usize, cols: usize, sparsity: f64) -> BitVec {
+        assert_eq!(w.len(), rows * cols, "weight/shape mismatch");
+        match *self {
+            PruneMethod::Magnitude => magnitude_mask(w, sparsity),
+            PruneMethod::Row => row_mask(w, rows, cols, sparsity),
+            PruneMethod::Block { bs } => block_mask(w, rows, cols, bs.max(1), sparsity),
+        }
+    }
+}
+
+impl std::str::FromStr for PruneMethod {
+    type Err = anyhow::Error;
+
+    /// CLI spelling: `magnitude`, `row`, `block` (4×4) or `block:BS`.
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "magnitude" => Ok(PruneMethod::Magnitude),
+            "row" => Ok(PruneMethod::Row),
+            "block" => Ok(PruneMethod::Block { bs: 4 }),
+            other => {
+                if let Some(bs) = other.strip_prefix("block:") {
+                    let bs: usize = bs
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad block size in '{other}'"))?;
+                    if bs == 0 {
+                        anyhow::bail!("block size must be >= 1");
+                    }
+                    Ok(PruneMethod::Block { bs })
+                } else {
+                    anyhow::bail!("bad prune method '{other}' (magnitude | row | block[:BS])")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod method_tests {
+    use super::*;
+
+    #[test]
+    fn prune_method_parses_and_masks() {
+        assert_eq!("magnitude".parse::<PruneMethod>().unwrap(), PruneMethod::Magnitude);
+        assert_eq!("row".parse::<PruneMethod>().unwrap(), PruneMethod::Row);
+        assert_eq!("block:8".parse::<PruneMethod>().unwrap(), PruneMethod::Block { bs: 8 });
+        assert!("block:0".parse::<PruneMethod>().is_err());
+        assert!("magic".parse::<PruneMethod>().is_err());
+        let w: Vec<f32> = (0..64).map(|i| i as f32 - 32.0).collect();
+        for m in [PruneMethod::Magnitude, PruneMethod::Row, PruneMethod::Block { bs: 2 }] {
+            let mask = m.mask_for(&w, 8, 8, 0.75);
+            assert!(mask_sparsity(&mask) >= 0.74, "{m:?}");
+        }
+    }
+}

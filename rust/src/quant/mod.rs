@@ -7,3 +7,70 @@ pub mod ternary;
 
 pub use multibit::{quantize_multibit, MultibitQuant};
 pub use ternary::{baseline_bits_per_weight, quantize_ternary, TernaryQuant};
+
+use crate::gf2::BitVec;
+
+/// Quantizer choice for the compression pipeline. Both produce
+/// [`MultibitQuant`] bit-planes over an *external* pruning mask (pruned
+/// positions are don't-cares — exactly what the XOR encoder exploits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMethod {
+    /// One sign plane at `α = E|w|` over the kept weights — ternary
+    /// values `{−α, 0, +α}` under the given mask (the prune-first analogue
+    /// of TWN [23]; identical to 1-bit multibit with no refinement).
+    Ternary,
+    /// Alternating multi-bit quantization (Xu et al. [32], the paper's §4
+    /// quantizer): `n_q` planes, `iters` alternating refinement rounds.
+    Multibit {
+        /// Quantization bits (planes), `1..=8`.
+        n_q: usize,
+        /// Alternating refinement rounds (0 = greedy init only).
+        iters: usize,
+    },
+}
+
+impl QuantMethod {
+    /// Number of bit-planes this method emits.
+    pub fn n_q(&self) -> usize {
+        match *self {
+            QuantMethod::Ternary => 1,
+            QuantMethod::Multibit { n_q, .. } => n_q,
+        }
+    }
+
+    /// Quantize `w` under the pruning mask (true = keep).
+    pub fn quantize(&self, w: &[f32], mask: &BitVec) -> MultibitQuant {
+        match *self {
+            QuantMethod::Ternary => quantize_multibit(w, mask, 1, 0),
+            QuantMethod::Multibit { n_q, iters } => quantize_multibit(w, mask, n_q, iters),
+        }
+    }
+}
+
+#[cfg(test)]
+mod method_tests {
+    use super::*;
+
+    #[test]
+    fn quant_methods_respect_the_mask() {
+        let w = vec![0.5f32, -0.25, 0.75, -0.5, 0.1, -0.9];
+        let mask = BitVec::from_fn(6, |j| j % 2 == 0);
+        for m in [QuantMethod::Ternary, QuantMethod::Multibit { n_q: 2, iters: 3 }] {
+            assert!(m.n_q() >= 1);
+            let q = m.quantize(&w, &mask);
+            assert_eq!(q.planes.len(), m.n_q());
+            let d = q.dequantize();
+            for j in 0..6 {
+                if !mask.get(j) {
+                    assert_eq!(d[j], 0.0, "{m:?} leaked a pruned weight");
+                }
+            }
+        }
+        // Ternary = sign × mean |kept|.
+        let q = QuantMethod::Ternary.quantize(&w, &mask);
+        let want = (0.5 + 0.75 + 0.1) / 3.0;
+        assert!((q.alphas[0] - want).abs() < 1e-6);
+        // Kept weights 0.5 / 0.75 / 0.1 are all positive → sign bits set.
+        assert!(q.planes[0].bits.get(0) && q.planes[0].bits.get(2) && q.planes[0].bits.get(4));
+    }
+}

@@ -29,7 +29,13 @@ use crate::gf2::BitVec;
 use crate::xorenc::{EncryptedPlane, XorNetwork};
 
 /// Environment variable overriding the worker count (`0`/unset = one
-/// worker per available core).
+/// worker per available core). Invalid values fall back to auto — the
+/// serving path must come up even under a mangled environment. The
+/// offline counterpart,
+/// [`compress::ENCODE_THREADS_ENV`](crate::compress::ENCODE_THREADS_ENV),
+/// is strict instead: compression jobs fail fast on zero/garbage/
+/// conflicting thread counts rather than silently running at an
+/// unintended parallelism.
 pub const THREADS_ENV: &str = "SQNN_DECODE_THREADS";
 
 /// Decode-runtime configuration.

@@ -8,6 +8,7 @@
 //! the representation lossless (§3.2).
 
 use crate::gf2::{AddOutcome, BitVec, IncrementalSolver};
+use crate::runtime::parallel::shard_bounds;
 use crate::util::{bits_for_max, ceil_log2};
 
 use super::network::XorNetwork;
@@ -128,9 +129,23 @@ impl XorEncoder {
     /// care masks (length `n_out`; a trailing partial slice is zero-padded
     /// with don't-cares by the caller).
     pub fn encrypt_slice(&self, bits: &BitVec, care: &BitVec) -> SliceEncryption {
+        let mut solver = IncrementalSolver::new(self.cfg.n_in);
+        self.encrypt_slice_with(bits, care, &mut solver)
+    }
+
+    /// [`XorEncoder::encrypt_slice`] with caller-owned solver scratch.
+    /// `solver` must be empty (freshly built or [`IncrementalSolver::reset`]);
+    /// the encode workers reuse one solver per thread across their whole
+    /// slice range instead of reallocating the pivot table per slice.
+    pub fn encrypt_slice_with(
+        &self,
+        bits: &BitVec,
+        care: &BitVec,
+        solver: &mut IncrementalSolver,
+    ) -> SliceEncryption {
         debug_assert_eq!(bits.len(), self.cfg.n_out);
         debug_assert_eq!(care.len(), self.cfg.n_out);
-        let mut solver = IncrementalSolver::new(self.cfg.n_in);
+        debug_assert_eq!(solver.rank(), 0, "solver scratch must be reset between slices");
         let mut d_patch: Vec<u32> = Vec::new();
         // Lines 2–8: grow the RREF system care bit by care bit; an
         // inconsistent row is dropped (its index becomes a patch).
@@ -159,23 +174,70 @@ impl XorEncoder {
         SliceEncryption { code, d_patch }
     }
 
-    /// Encrypt a full bit-plane (lines 1–12 of Algorithm 1 over all slices).
-    pub fn encrypt_plane(&self, plane: &BitPlane) -> EncryptedPlane {
+    /// Algorithm 1 over the slice range `[k0, k1)` of a plane, one worker's
+    /// share of an encode. Each slice solves its own GF(2) system with the
+    /// canonical free-variable fill, so the result is independent of how
+    /// the range is sharded; `solver` scratch is reused across the range.
+    fn encrypt_slice_range(
+        &self,
+        plane: &BitPlane,
+        k0: usize,
+        k1: usize,
+    ) -> (Vec<u64>, Vec<Vec<u32>>) {
         let n_out = self.cfg.n_out;
-        let len = plane.len();
-        let l = len.div_ceil(n_out);
-        let mut codes = Vec::with_capacity(l);
-        let mut patches = Vec::with_capacity(l);
-        for k in 0..l {
+        let mut solver = IncrementalSolver::new(self.cfg.n_in);
+        let mut codes = Vec::with_capacity(k1 - k0);
+        let mut patches = Vec::with_capacity(k1 - k0);
+        for k in k0..k1 {
             let start = k * n_out;
             let bits = plane.bits.slice_padded(start, n_out);
             // slice_padded zero-fills past `len`, so tail positions are
             // don't-cares automatically (care = 0).
             let care = plane.care.slice_padded(start, n_out);
-            let enc = self.encrypt_slice(&bits, &care);
+            solver.reset();
+            let enc = self.encrypt_slice_with(&bits, &care, &mut solver);
             codes.push(enc.code);
             patches.push(enc.d_patch);
         }
+        (codes, patches)
+    }
+
+    /// Encrypt a full bit-plane (lines 1–12 of Algorithm 1 over all slices).
+    pub fn encrypt_plane(&self, plane: &BitPlane) -> EncryptedPlane {
+        self.encrypt_plane_threaded(plane, 1)
+    }
+
+    /// [`XorEncoder::encrypt_plane`] with the slice loop sharded across up
+    /// to `threads` scoped workers (contiguous [`shard_bounds`] tiles, one
+    /// solver scratch per worker). Every slice solves its own independent
+    /// GF(2) system with the canonical free-variable fill, so the output is
+    /// **bit-identical** to the serial encode at every worker count — same
+    /// codes, same patches, in the same slice order.
+    pub fn encrypt_plane_threaded(&self, plane: &BitPlane, threads: usize) -> EncryptedPlane {
+        let n_out = self.cfg.n_out;
+        let len = plane.len();
+        let l = len.div_ceil(n_out);
+        let workers = threads.max(1).min(l.max(1));
+        let (codes, patches) = if workers <= 1 {
+            self.encrypt_slice_range(plane, 0, l)
+        } else {
+            let bounds = shard_bounds(0, l, workers);
+            let mut codes = Vec::with_capacity(l);
+            let mut patches = Vec::with_capacity(l);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    let (k0, k1) = (bounds[w], bounds[w + 1]);
+                    handles.push(scope.spawn(move || self.encrypt_slice_range(plane, k0, k1)));
+                }
+                for h in handles {
+                    let (c, p) = h.join().expect("encode worker panicked");
+                    codes.extend(c);
+                    patches.extend(p);
+                }
+            });
+            (codes, patches)
+        };
         EncryptedPlane {
             n_in: self.cfg.n_in,
             n_out,
@@ -212,6 +274,57 @@ impl XorEncoder {
     /// Losslessness check (§3.2): decrypt and compare on care positions.
     pub fn verify_lossless(&self, plane: &BitPlane, enc: &EncryptedPlane) -> bool {
         plane.matches(&self.decrypt_plane(enc))
+    }
+
+    /// [`XorEncoder::verify_lossless`] with the decode-and-compare loop
+    /// sharded across up to `threads` scoped workers. Same verdict as the
+    /// serial check (slices are compared independently); each worker
+    /// short-circuits on its first care-bit mismatch.
+    pub fn verify_lossless_threaded(
+        &self,
+        plane: &BitPlane,
+        enc: &EncryptedPlane,
+        threads: usize,
+    ) -> bool {
+        assert_eq!(enc.n_in, self.cfg.n_in);
+        assert_eq!(enc.n_out, self.cfg.n_out);
+        assert_eq!(enc.seed, self.cfg.seed, "verifier must rebuild the same M⊕");
+        assert_eq!(plane.len(), enc.plane_len, "plane/encryption length mismatch");
+        let n_out = self.cfg.n_out;
+        let l = enc.codes.len();
+        let workers = threads.max(1).min(l.max(1));
+        if workers <= 1 {
+            return self.verify_lossless(plane, enc);
+        }
+        let bounds = shard_bounds(0, l, workers);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let (k0, k1) = (bounds[w], bounds[w + 1]);
+                handles.push(scope.spawn(move || {
+                    let mut tmp = BitVec::zeros(n_out);
+                    for k in k0..k1 {
+                        self.net.decode_into(enc.codes[k], &mut tmp);
+                        for &p in &enc.patches[k] {
+                            tmp.flip(p as usize);
+                        }
+                        let base = k * n_out;
+                        let lim = n_out.min(enc.plane_len - base);
+                        for i in 0..lim {
+                            if plane.care.get(base + i)
+                                && plane.bits.get(base + i) != tmp.get(i)
+                            {
+                                return false;
+                            }
+                        }
+                    }
+                    true
+                }));
+            }
+            handles
+                .into_iter()
+                .all(|h| h.join().expect("verify worker panicked"))
+        })
     }
 }
 
@@ -404,6 +517,64 @@ mod tests {
             p_large < p_small,
             "n_in=32 patches {p_large} should be < n_in=12 patches {p_small}"
         );
+    }
+
+    #[test]
+    fn threaded_encrypt_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(31);
+        for &(n_in, n_out, len, s) in &[
+            (10usize, 32usize, 10usize, 0.7f64), // shorter than one slice
+            (12, 60, 60 * 9, 0.8),               // exact slice multiple
+            (20, 100, 100 * 13 + 57, 0.9),       // partial tail slice
+        ] {
+            let e = XorEncoder::new(EncryptConfig { n_in, n_out, seed: 5, block_slices: 0 });
+            let plane = BitPlane::synthetic(len, s, &mut rng);
+            let serial = e.encrypt_plane(&plane);
+            for threads in [1usize, 2, 3, 4, 8, 64] {
+                let par = e.encrypt_plane_threaded(&plane, threads);
+                assert_eq!(
+                    par.codes, serial.codes,
+                    "codes diverge: n_in={n_in} n_out={n_out} len={len} threads={threads}"
+                );
+                assert_eq!(
+                    par.patches, serial.patches,
+                    "patches diverge: n_in={n_in} n_out={n_out} len={len} threads={threads}"
+                );
+                assert_eq!(par.plane_len, serial.plane_len);
+                assert!(
+                    e.verify_lossless_threaded(&plane, &par, threads),
+                    "threaded verify rejected a lossless encode (threads={threads})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_verify_detects_corruption() {
+        let mut rng = Rng::new(37);
+        let e = enc(12, 48);
+        let plane = BitPlane::synthetic(48 * 6 + 11, 0.8, &mut rng);
+        let mut c = e.encrypt_plane(&plane);
+        assert!(e.verify_lossless_threaded(&plane, &c, 4));
+        // Flip one care bit of slice 0 via its patch list: removing an
+        // existing patch (or inserting a bogus one) breaks losslessness.
+        let care0 = plane
+            .care
+            .iter_ones()
+            .find(|&i| i < 48)
+            .expect("slice 0 has care bits at S=0.8") as u32;
+        if let Some(pos) = c.patches[0].iter().position(|&p| p == care0) {
+            c.patches[0].remove(pos);
+        } else {
+            c.patches[0].push(care0);
+        }
+        for threads in [1usize, 3, 8] {
+            assert!(
+                !e.verify_lossless_threaded(&plane, &c, threads),
+                "corruption missed at threads={threads}"
+            );
+        }
+        assert!(!e.verify_lossless(&plane, &c));
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Compress→serve round-trip property tests: a synthetic dense graph
+//! compressed at several sparsity / n_q / design points must (a) encode
+//! bit-identically across 1/2/4/8 encode threads, (b) decode losslessly
+//! on every plane (decoded bits == the quantizer's bits on every care
+//! position), and (c) serve bit-identically to the materialized dense
+//! reference under both decode modes at several decode thread counts.
+
+use sqnn_xor::compress::{
+    compress_model, CompressOptions, CompressSpec, LayerSelect, LayerSpec,
+};
+use sqnn_xor::coordinator::{DecodeMode, EngineOptions, SqnnEngine};
+use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
+use sqnn_xor::models::synthetic_dense_graph;
+use sqnn_xor::quant::QuantMethod;
+use sqnn_xor::rng::Rng;
+
+fn inputs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_gaussian() as f32 * 0.5).collect())
+        .collect()
+}
+
+#[test]
+fn compress_serve_roundtrip_across_design_points_and_threads() {
+    let dense = synthetic_dense_graph(0xAB, 32, &[24, 16], 4);
+    let xs = inputs(6, 32, 99);
+    for (sparsity, quant, n_in, n_out) in [
+        (0.9, QuantMethod::Multibit { n_q: 1, iters: 3 }, 12usize, 0usize),
+        (0.8, QuantMethod::Multibit { n_q: 2, iters: 2 }, 10, 40),
+        (0.7, QuantMethod::Ternary, 8, 24),
+    ] {
+        let spec = CompressSpec {
+            default: LayerSpec { sparsity, quant, n_in, n_out, ..Default::default() },
+            ..Default::default()
+        };
+        // (a) The sharded encode is bit-identical: same container bytes at
+        // every encode thread count.
+        let mut containers = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let (m, report) = compress_model(
+                &dense,
+                &spec,
+                &CompressOptions { encode_threads: threads, verify: true },
+            )
+            .unwrap();
+            assert_eq!(report.layers.len(), 3, "every dense layer compressed");
+            containers.push(m.to_bytes());
+        }
+        for (i, c) in containers.iter().enumerate().skip(1) {
+            assert_eq!(
+                c, &containers[0],
+                "container diverged at encode threads index {i} (S={sparsity})"
+            );
+        }
+        let compressed = SqnnModel::from_bytes(&containers[0]).unwrap();
+        compressed.validate().unwrap();
+
+        // (b) Lossless on every plane: the pipeline is deterministic, so
+        // recomputing prune+quant from the dense layer gives the original
+        // bit-planes; the decoded planes must match them on every care bit.
+        for (li, layer) in compressed.layers.iter().enumerate() {
+            let Layer::Encrypted(e) = layer else {
+                panic!("layer {li} should be encrypted");
+            };
+            let Layer::Dense(d) = &dense.layers[li] else {
+                unreachable!("source graph is all-dense");
+            };
+            let mask = spec.default.prune.mask_for(&d.w, d.rows, d.cols, sparsity);
+            assert_eq!(mask.to_bools(), e.mask.to_bools(), "layer {li} mask drifted");
+            let q = quant.quantize(&d.w, &mask);
+            assert_eq!(q.alphas, e.alphas, "layer {li} alphas drifted");
+            let decoded = e.decode_planes();
+            assert_eq!(decoded.len(), q.planes.len());
+            for (qi, (dec, orig)) in decoded.iter().zip(&q.planes).enumerate() {
+                assert!(
+                    orig.matches(dec),
+                    "layer {li} plane {qi} is not lossless (S={sparsity})"
+                );
+            }
+        }
+
+        // (c) Serving the compressed chain equals serving the materialized
+        // dense reference, bitwise, for both decode modes at several
+        // decode thread counts (Auto kernels: eager dense cache vs fused
+        // tile-streaming).
+        let reference = SqnnEngine::load_native(
+            compressed.to_dense_reference(),
+            &[8],
+            EngineOptions::default(),
+        )
+        .unwrap()
+        .infer(&xs)
+        .unwrap();
+        for mode in [DecodeMode::Eager, DecodeMode::PerBatch] {
+            for threads in [1usize, 2, 4, 8] {
+                let got = SqnnEngine::load_native(
+                    compressed.clone(),
+                    &[8],
+                    EngineOptions {
+                        decode_threads: threads,
+                        decode_mode: mode,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+                .infer(&xs)
+                .unwrap();
+                assert_eq!(
+                    got, reference,
+                    "serve diverged: S={sparsity} mode={mode:?} decode_threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_selection_serves_mixed_chain_bit_identically() {
+    // Encrypt only fc1 and fc3; fc2 passes through dense — the mixed
+    // chain must still serve exactly like its dense reference.
+    let dense = synthetic_dense_graph(0x51, 20, &[16, 12], 3);
+    let spec = CompressSpec {
+        default: LayerSpec {
+            sparsity: 0.85,
+            n_in: 10,
+            n_out: 32,
+            ..Default::default()
+        },
+        overrides: vec![(
+            "fc3".to_string(),
+            LayerSpec {
+                sparsity: 0.5,
+                quant: QuantMethod::Multibit { n_q: 2, iters: 1 },
+                n_in: 8,
+                n_out: 16,
+                ..Default::default()
+            },
+        )],
+        encrypt: LayerSelect::Named(vec!["fc1".into(), "fc3".into()]),
+    };
+    let (compressed, report) = compress_model(
+        &dense,
+        &spec,
+        &CompressOptions { encode_threads: 3, verify: true },
+    )
+    .unwrap();
+    assert_eq!(compressed.encrypted_layers().count(), 2);
+    assert_eq!(report.passthrough, vec!["fc2".to_string()]);
+    assert!(matches!(compressed.layers[1], Layer::Dense(_)));
+    // The fc3 override took effect.
+    let (_, fc3) = compressed.encrypted_layers().nth(1).unwrap();
+    assert_eq!(fc3.planes.len(), 2);
+    assert_eq!(fc3.planes[0].n_in, 8);
+
+    let xs = inputs(5, 20, 7);
+    let reference = SqnnEngine::load_native(
+        compressed.to_dense_reference(),
+        &[4],
+        EngineOptions::default(),
+    )
+    .unwrap()
+    .infer(&xs)
+    .unwrap();
+    for mode in [DecodeMode::Eager, DecodeMode::PerBatch] {
+        let got = SqnnEngine::load_native(
+            compressed.clone(),
+            &[4],
+            EngineOptions { decode_threads: 2, decode_mode: mode, ..Default::default() },
+        )
+        .unwrap()
+        .infer(&xs)
+        .unwrap();
+        assert_eq!(got, reference, "mixed chain diverged under {mode:?}");
+    }
+}
+
+#[test]
+fn compressed_container_roundtrips_and_reports_consistently() {
+    let dense = synthetic_dense_graph(0xC4, 16, &[12], 2);
+    let spec = CompressSpec {
+        default: LayerSpec { sparsity: 0.8, n_in: 10, n_out: 25, ..Default::default() },
+        ..Default::default()
+    };
+    let (compressed, report) =
+        compress_model(&dense, &spec, &CompressOptions { encode_threads: 2, verify: true })
+            .unwrap();
+    // Container round-trip preserves the compressed chain exactly.
+    let back = SqnnModel::from_bytes(&compressed.to_bytes()).unwrap();
+    assert_eq!(back.to_bytes(), compressed.to_bytes());
+    // Report totals agree with the model's own Eq. 2 accounting.
+    let agg = report.aggregate();
+    let model_stats = compressed.quant_stats();
+    assert_eq!(agg.total_bits, model_stats.total_bits);
+    assert_eq!(agg.original_bits, model_stats.original_bits);
+    assert_eq!(agg.total_patches, model_stats.total_patches);
+    assert!(report.total_encode_secs() >= 0.0);
+    let rendered = report.render();
+    assert!(rendered.contains("fc1") && rendered.contains("TOTAL"), "{rendered}");
+}
