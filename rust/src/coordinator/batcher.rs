@@ -173,9 +173,49 @@ fn executor_loop(
                 metrics.record_error();
                 let msg = format!("{e:#}");
                 for req in batch {
+                    // Failed requests feed the latency reservoir too:
+                    // recording only successes would skew p50/p99
+                    // optimistic exactly when the engine is struggling.
+                    metrics.record_latency(req.enqueued.elapsed());
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineOptions;
+    use crate::models::synth::{synthetic_layer_graph, SynthEncrypted};
+
+    fn spawn_toy() -> Coordinator {
+        Coordinator::spawn(BatchPolicy::default(), || {
+            let model = synthetic_layer_graph(
+                0xBA7C,
+                8,
+                &[SynthEncrypted { out_dim: 6, ..Default::default() }],
+                &[],
+                3,
+            );
+            SqnnEngine::load_native(model, &[4], EngineOptions::default())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn error_paths_feed_the_latency_reservoir() {
+        let c = spawn_toy();
+        // One good request, then one the engine rejects (wrong width).
+        assert!(c.handle.infer(vec![0.1; 8]).is_ok());
+        assert!(c.handle.infer(vec![0.1; 5]).is_err());
+        let snap = c.handle.metrics().snapshot();
+        assert_eq!(snap.errors, 1, "engine rejection must count as an error");
+        // Both requests — including the failed one — were recorded in
+        // the latency stream.
+        assert_eq!(snap.requests, 2, "error-path request missing from latency metrics");
+        assert!(snap.latency_p99_ms >= snap.latency_p50_ms);
+        c.handle.shutdown();
     }
 }

@@ -10,14 +10,18 @@
 //!   [`KernelRegistry`](crate::kernels::KernelRegistry) from the layer's
 //!   storage kind, the [`DecodeMode`], and the [`KernelChoice`] knob
 //!   (`--kernel`): dense affine, real CSR SpMV (no densify on the serving
-//!   path), or the fused tile-streaming XOR-decode × matmul that consumes
-//!   decoded tiles immediately and never materializes the dense weights.
-//!   [`DecodeMode`] picks *when* encrypted layers decode: `Eager` decodes
-//!   once at load; `PerBatch` streams decode on every batch — the
-//!   software model of the paper's in-graph fixed-rate decode (§3.1, §6),
-//!   exercising the plan cache on the hot path. Every kernel × mode ×
-//!   thread-count combination is bit-identical because the decode is
-//!   deterministic and all kernels accumulate in the same f32 order.
+//!   path), the fused tile-streaming XOR-decode × matmul that consumes
+//!   decoded tiles immediately and never materializes the dense weights,
+//!   or the bit-plane-native kernel that skips f32 reconstruction
+//!   entirely (popcount lanes / word gathers over decoded planes with a
+//!   per-plane α scale). [`DecodeMode`] picks *when* encrypted layers
+//!   decode: `Eager` decodes once at load; `PerBatch` streams decode on
+//!   every batch — the software model of the paper's in-graph fixed-rate
+//!   decode (§3.1, §6), exercising the plan cache on the hot path. Every
+//!   kernel × mode × thread-count combination except `bitplane` is
+//!   bit-identical because the decode is deterministic and those kernels
+//!   accumulate in the same f32 order; `bitplane` reorders float adds by
+//!   design and is pinned separately (DESIGN.md decision 10).
 //! * **pjrt** (feature `xla`): batches execute through AOT-compiled XLA
 //!   executables, picking the smallest compiled batch bucket, padding,
 //!   executing, and slicing — encrypted weights live in (device) memory,

@@ -185,6 +185,41 @@ impl BitVec {
         &self.words
     }
 
+    /// Raw words as a slice — the word-level view the bit-plane compute
+    /// kernel runs on (alias of [`BitVec::words`], named for symmetry
+    /// with `as_slice`-style accessors).
+    #[inline]
+    pub fn as_words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Read a 64-bit window starting at bit `bit` (LSB of the result =
+    /// bit `bit` of the vector). Bits past the end of the vector read as
+    /// zero, so windows may legally overhang the tail — the unaligned
+    /// word extraction of the bit-plane kernel, where a weight row's
+    /// flat offset is rarely word-aligned.
+    #[inline]
+    pub fn window_word(&self, bit: usize) -> u64 {
+        if bit >= self.len {
+            return 0;
+        }
+        let w = bit >> 6;
+        let s = bit & 63;
+        let mut out = self.words[w] >> s;
+        if s != 0 && w + 1 < self.words.len() {
+            out |= self.words[w + 1] << (64 - s);
+        }
+        out
+    }
+
+    /// Iterator over the word-wise AND of two equal-length vectors —
+    /// masked word traversal (e.g. `plane & mask`) without allocating an
+    /// intermediate `BitVec`.
+    pub fn word_and_iter<'a>(&'a self, other: &'a BitVec) -> impl Iterator<Item = u64> + 'a {
+        debug_assert_eq!(self.len, other.len);
+        self.words.iter().zip(&other.words).map(|(a, b)| a & b)
+    }
+
     /// Zero the whole vector in place (hot path; no allocation).
     #[inline]
     pub fn clear(&mut self) {
@@ -404,5 +439,42 @@ mod tests {
         assert_eq!(v.len(), 4);
         let w = BitVec::from_u64(u64::MAX, 10);
         assert_eq!(w.count_ones(), 10);
+    }
+
+    #[test]
+    fn window_word_matches_bitwise_reads() {
+        let mut rng = Rng::new(31);
+        for len in [1usize, 63, 64, 65, 127, 128, 300] {
+            let v = BitVec::from_fn(len, |_| rng.next_bit());
+            for start in [0usize, 1, 5, 62, 63, 64, 65, 100, len - 1, len, len + 7] {
+                let w = v.window_word(start);
+                for b in 0..64usize {
+                    let i = start + b;
+                    let expect = i < len && v.get(i);
+                    assert_eq!((w >> b) & 1 == 1, expect, "len={len} start={start} bit {b}");
+                }
+            }
+        }
+        assert_eq!(BitVec::zeros(0).window_word(0), 0);
+    }
+
+    #[test]
+    fn as_words_aliases_words() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.as_words(), v.words());
+        assert_eq!(v.as_words().len(), 2);
+    }
+
+    #[test]
+    fn word_and_iter_matches_and_assign() {
+        let mut rng = Rng::new(33);
+        for len in [1usize, 64, 100, 257] {
+            let a = BitVec::from_fn(len, |_| rng.next_bit());
+            let b = BitVec::from_fn(len, |_| rng.next_bit());
+            let mut want = a.clone();
+            want.and_assign(&b);
+            let got: Vec<u64> = a.word_and_iter(&b).collect();
+            assert_eq!(got.as_slice(), want.words(), "len={len}");
+        }
     }
 }

@@ -1,0 +1,415 @@
+//! Bit-plane-native matmul kernel: the decoded format IS the compute
+//! format.
+//!
+//! [`FusedDecodeKernel`](super::FusedDecodeKernel) still reconstructs
+//! f32 weights from decoded bit-planes before multiplying. This kernel
+//! never does: for an encrypted layer the affine factors per output row
+//! `r` as
+//!
+//! ```text
+//! y[r] = bias[r] + Σ_q α_q · (2·S⁺_q(r) − S_mask(r))
+//!
+//! S_mask(r) = Σ x[c]            over columns with mask bit set
+//! S⁺_q(r)  = Σ x[c]            over columns with mask & plane-q bit set
+//! ```
+//!
+//! because a masked-in weight is `Σ_q ±α_q` with sign `+` where plane
+//! `q`'s bit is 1. So after XOR-decoding a tile's bit-planes (through
+//! the cached [`DecodePlan`](crate::runtime::parallel::DecodePlan), same
+//! as the fused kernel) the row product runs directly over the packed
+//! u64 words of [`BitVec`]: AND the mask window with the plane windows,
+//! then either
+//!
+//! * **popcount lanes** — when an input's activations are all in
+//!   {−1, 0, +1} (ternary nets, the paper's own quantized regime), the
+//!   activation vector sign-buckets into two bitmasks `X⁺`/`X⁻` and
+//!   every partial sum is an exact integer popcount:
+//!   `S = popcount(m∧X⁺) − popcount(m∧X⁻)`, per plane
+//!   `S⁺_q = popcount(m∧b_q∧X⁺) − popcount(m∧b_q∧X⁻)`; or
+//! * **word-at-a-time gather** — for general f32 activations, iterate
+//!   the set bits of the masked word in ascending order
+//!   (`trailing_zeros`) and add `x[c]` into the row's mask sum and into
+//!   each plane whose bit is set — on a 90 %-pruned layer this touches
+//!   ~10 % of the columns and performs **no per-weight multiply**;
+//!
+//! and apply `alphas[q]` exactly once per row per plane. Tiles are
+//! row-aligned (a tile is a contiguous range of output rows, decoded as
+//! the covering slice range), and rows are sharded across the engine's
+//! worker pool via
+//! [`shard_rows_mut`](crate::runtime::parallel::shard_rows_mut).
+//!
+//! **Determinism contract.** Unlike the other kernels this one legally
+//! *reorders* float adds relative to the materialized reference (that is
+//! the point: no f32 reconstruction), so it is pinned two ways instead
+//! (DESIGN.md decision 10):
+//!
+//! 1. **Bit-identity within the kernel** across every thread count and
+//!    tile size: each output row is computed entirely from its own
+//!    window reads, in ascending word-then-bit order, by exactly one
+//!    worker — decode is bit-identical at any worker count (decision 2)
+//!    and window extraction does not depend on where tile or shard
+//!    boundaries fall, so neither knob can change a single ULP.
+//! 2. **Equivalence to the materialized reference**: exact when every
+//!    float op is exact (integer-valued activations with power-of-two
+//!    alphas and dyadic biases; ternary activations on the popcount
+//!    path), within 1e-4 relative on Gaussian activations
+//!    (`tests/kernels.rs`, `perf_hotpath`).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::gf2::BitVec;
+use crate::io::sqnn_file::{EncryptedLayer, Layer};
+use crate::runtime::parallel::{decode_slice_range_into, shard_rows_mut};
+
+use super::{KernelCtx, MatmulKernel};
+
+/// Default decode-scratch budget in *bits per plane*: a tile covers
+/// `max(1, budget / cols)` whole output rows (256 Kibit = 32 KiB of
+/// plane scratch — cache-resident next to the activations, like the
+/// fused kernel's tile).
+pub const DEFAULT_TILE_BITS: usize = 1 << 18;
+
+/// Below this much work (`batch × tile weight positions`) a tile's
+/// accumulation runs inline: a spawn/join costs more than the bit
+/// gathering it would shard. Sharding never changes the result (every
+/// row is self-contained), only the wall clock — same contract as the
+/// fused kernel's MAC gate.
+const MIN_PARALLEL_WORK: usize = 1 << 15;
+
+/// Per-thread decode scratch: one decoded-bit buffer per quantization
+/// plane, `reset` per tile, allocations kept across tiles/batches/layers
+/// (the engine executes layers sequentially).
+#[derive(Default)]
+struct Scratch {
+    bits: Vec<BitVec>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Sign-bucketed view of one activation vector whose values are all
+/// exactly −1.0, 0.0, or +1.0: bit `c` of `pos`/`neg` marks `x[c] ==
+/// ±1.0`. Turns the row product into pure integer popcounts.
+struct SignBuckets {
+    pos: BitVec,
+    neg: BitVec,
+}
+
+/// Bucket `x` if it is ternary; general f32 inputs return `None` and
+/// take the gather path. Both paths produce the exact same sums on any
+/// input that qualifies here (integer adds below 2^24 are exact in f32,
+/// and the gather also accumulates those integers), so path selection
+/// can never change a result.
+fn sign_buckets(x: &[f32]) -> Option<SignBuckets> {
+    if !x.iter().all(|&v| v == 0.0 || v == 1.0 || v == -1.0) {
+        return None;
+    }
+    let pos = BitVec::from_fn(x.len(), |c| x[c] == 1.0);
+    let neg = BitVec::from_fn(x.len(), |c| x[c] == -1.0);
+    Some(SignBuckets { pos, neg })
+}
+
+/// The bit-plane-native kernel for one encrypted layer.
+pub struct BitplaneKernel {
+    /// Output rows per tile (fixed at construction from the layer's
+    /// column count and the bit budget).
+    tile_rows: usize,
+    /// High-water mark of the per-plane decode scratch in bits ×
+    /// planes — observability for the "never materializes, never even
+    /// reconstructs" invariant.
+    peak_scratch_bits: AtomicUsize,
+}
+
+impl BitplaneKernel {
+    /// Build for `layer` with the [`DEFAULT_TILE_BITS`] budget.
+    pub fn new(layer: &EncryptedLayer) -> Self {
+        Self::with_tile_bits(layer, DEFAULT_TILE_BITS)
+    }
+
+    /// Build with an explicit per-plane scratch budget in bits (tests
+    /// and tuning; rounded down to whole rows, minimum one).
+    pub fn with_tile_bits(layer: &EncryptedLayer, tile_bits: usize) -> Self {
+        BitplaneKernel {
+            tile_rows: (tile_bits / layer.cols.max(1)).max(1),
+            peak_scratch_bits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Output rows decoded per tile.
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    /// Largest decode scratch filled so far (bits, summed over planes).
+    pub fn peak_scratch_bits(&self) -> usize {
+        self.peak_scratch_bits.load(Ordering::Relaxed)
+    }
+
+    /// The batch-major core: decode each row-aligned tile's planes once,
+    /// accumulate every input against it, move to the next tile.
+    fn run(&self, e: &EncryptedLayer, ctx: &KernelCtx<'_>, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        for (k, x) in xs.iter().enumerate() {
+            if x.len() != e.cols {
+                bail!("layer {}: input {k} length {} != {} columns", e.name, x.len(), e.cols);
+            }
+        }
+        let batch = xs.len();
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        let n = e.rows * e.cols;
+        if n == 0 || e.planes.is_empty() {
+            // No weights to decode: the affine collapses to the bias.
+            return Ok(xs.iter().map(|_| e.bias.clone()).collect());
+        }
+        // One plan serves every plane: a layer's planes share one design
+        // point (enforced by the container parser and model validation).
+        let plan = ctx.decoder.cache().plan_for(e.layer_id, &e.planes[0]);
+        let n_out = plan.n_out();
+        let threads = ctx.decoder.threads();
+        let num_slices = e.planes[0].num_slices();
+        let nq = e.planes.len();
+        // Bucket each input once per batch; ternary inputs ride the
+        // popcount lanes for every tile.
+        let buckets: Vec<Option<SignBuckets>> = xs.iter().map(|x| sign_buckets(x)).collect();
+        // [row][input] accumulators; bias is applied in the per-row
+        // combine, so these start at zero.
+        let mut acc = vec![0.0f32; e.rows * batch];
+        SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            while scratch.bits.len() < nq {
+                scratch.bits.push(BitVec::zeros(0));
+            }
+            let mut r0 = 0usize;
+            while r0 < e.rows {
+                let r1 = (r0 + self.tile_rows).min(e.rows);
+                // Slice range covering rows [r0, r1): up to one partial
+                // slice of over-decode at each edge, never a split row.
+                let k0 = (r0 * e.cols) / n_out;
+                let k1 = (r1 * e.cols).div_ceil(n_out).min(num_slices);
+                for (q, p) in e.planes.iter().enumerate() {
+                    decode_slice_range_into(&plan, p, k0, k1, threads, &mut scratch.bits[q]);
+                }
+                self.peak_scratch_bits
+                    .fetch_max(nq * scratch.bits[0].len(), Ordering::Relaxed);
+                let base_bit = k0 * n_out;
+                let bits = &scratch.bits[..nq];
+                let tile_acc = &mut acc[r0 * batch..r1 * batch];
+                let shard_threads =
+                    if batch * (r1 - r0) * e.cols < MIN_PARALLEL_WORK { 1 } else { threads };
+                shard_rows_mut(r1 - r0, shard_threads, batch, tile_acc, |w0, w1, chunk| {
+                    accumulate_rows(e, bits, xs, &buckets, base_bit, r0 + w0, r0 + w1, chunk);
+                });
+                r0 = r1;
+            }
+        });
+        // Transpose [row][input] accumulators into one logit row per input.
+        Ok((0..batch)
+            .map(|k| (0..e.rows).map(|r| acc[r * batch + k]).collect())
+            .collect())
+    }
+}
+
+/// One worker's share of a tile: rows `[r0, r1)` (absolute), writing the
+/// `[row][input]` chunk `acc` (row `r` lives at `(r − r0) × batch`).
+/// `bits` holds the tile's decoded planes, whose bit 0 is plane bit
+/// `base_bit`. Every read is a 64-bit window at the row's own offset, so
+/// the computation is independent of tile and shard boundaries.
+fn accumulate_rows(
+    e: &EncryptedLayer,
+    bits: &[BitVec],
+    xs: &[&[f32]],
+    buckets: &[Option<SignBuckets>],
+    base_bit: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+) {
+    let batch = xs.len();
+    let nq = bits.len();
+    let n_words = e.cols.div_ceil(64);
+    // Which inputs ride which path (fixed per batch).
+    let popc: Vec<usize> = (0..batch).filter(|&k| buckets[k].is_some()).collect();
+    let gather: Vec<usize> = (0..batch).filter(|&k| buckets[k].is_none()).collect();
+    // Per-row partial sums, reused across rows. Gather lanes accumulate
+    // f32 activation sums; popcount lanes accumulate exact i32 counts.
+    let mut smask = vec![0.0f32; batch];
+    let mut psum = vec![0.0f32; nq * batch];
+    let mut scnt = vec![0i32; batch];
+    let mut pcnt = vec![0i32; nq * batch];
+    let mut pwords = vec![0u64; nq];
+    for r in r0..r1 {
+        smask.fill(0.0);
+        psum.fill(0.0);
+        scnt.fill(0);
+        pcnt.fill(0);
+        let row_bit = r * e.cols; // flat offset into mask / whole plane
+        let local_bit = row_bit - base_bit; // offset into the tile scratch
+        for wi in 0..n_words {
+            let c0 = wi * 64;
+            let width = (e.cols - c0).min(64);
+            let mut m = e.mask.window_word(row_bit + c0);
+            if width < 64 {
+                // Window bits past this row belong to the next row.
+                m &= (1u64 << width) - 1;
+            }
+            if m == 0 {
+                continue;
+            }
+            for (q, plane) in bits.iter().enumerate() {
+                pwords[q] = plane.window_word(local_bit + c0);
+            }
+            // Popcount lanes: ternary inputs reduce to set-bit counting.
+            for &k in &popc {
+                let b = buckets[k].as_ref().expect("popc lane has buckets");
+                let xp = b.pos.as_words()[wi];
+                let xn = b.neg.as_words()[wi];
+                scnt[k] += (m & xp).count_ones() as i32 - (m & xn).count_ones() as i32;
+                for q in 0..nq {
+                    let w = m & pwords[q];
+                    pcnt[q * batch + k] +=
+                        (w & xp).count_ones() as i32 - (w & xn).count_ones() as i32;
+                }
+            }
+            // Gather lanes: walk the masked word's set bits ascending;
+            // each surviving column costs adds only, no multiply.
+            if !gather.is_empty() {
+                let mut t = m;
+                while t != 0 {
+                    let b = t.trailing_zeros() as usize;
+                    let c = c0 + b;
+                    for &k in &gather {
+                        let xv = xs[k][c];
+                        smask[k] += xv;
+                        for q in 0..nq {
+                            if (pwords[q] >> b) & 1 == 1 {
+                                psum[q * batch + k] += xv;
+                            }
+                        }
+                    }
+                    t &= t - 1;
+                }
+            }
+        }
+        // Combine: y = bias + Σ_q α_q·(2·S⁺_q − S_mask), one α scale per
+        // row per plane (the whole point — α never touches per-column
+        // arithmetic).
+        let arow = &mut acc[(r - r0) * batch..(r - r0 + 1) * batch];
+        for (k, slot) in arow.iter_mut().enumerate() {
+            let mut y = e.bias[r];
+            if buckets[k].is_some() {
+                let s = scnt[k] as f32;
+                for q in 0..nq {
+                    y += e.alphas[q] * (2.0 * pcnt[q * batch + k] as f32 - s);
+                }
+            } else {
+                let s = smask[k];
+                for q in 0..nq {
+                    y += e.alphas[q] * (2.0 * psum[q * batch + k] - s);
+                }
+            }
+            *slot = y;
+        }
+    }
+}
+
+impl MatmulKernel for BitplaneKernel {
+    fn name(&self) -> &'static str {
+        "bitplane"
+    }
+
+    fn forward(&self, layer: &Layer, ctx: &KernelCtx<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        let Layer::Encrypted(e) = layer else {
+            bail!("bitplane kernel bound to a non-encrypted layer {}", layer.name());
+        };
+        Ok(self.run(e, ctx, &[x])?.pop().expect("one output per input"))
+    }
+
+    /// Batch-major streaming: every tile's planes are decoded once per
+    /// batch, then every input accumulates against the decoded words.
+    fn forward_batch(
+        &self,
+        layer: &Layer,
+        ctx: &KernelCtx<'_>,
+        xs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let Layer::Encrypted(e) = layer else {
+            bail!("bitplane kernel bound to a non-encrypted layer {}", layer.name());
+        };
+        self.run(e, ctx, xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::sqnn_file::Activation;
+    use crate::kernels::affine;
+    use crate::models::synth::synthetic_encrypted_layer;
+    use crate::rng::Rng;
+    use crate::runtime::parallel::{DecodeConfig, ParallelDecoder};
+
+    #[test]
+    fn sign_buckets_detects_ternary_only() {
+        assert!(sign_buckets(&[0.0, 1.0, -1.0, 0.0]).is_some());
+        assert!(sign_buckets(&[]).is_some());
+        assert!(sign_buckets(&[0.5]).is_none());
+        assert!(sign_buckets(&[1.0, f32::NAN]).is_none());
+        assert!(sign_buckets(&[2.0]).is_none());
+        let b = sign_buckets(&[1.0, 0.0, -1.0]).unwrap();
+        assert!(b.pos.get(0) && !b.pos.get(1) && !b.pos.get(2));
+        assert!(!b.neg.get(0) && !b.neg.get(1) && b.neg.get(2));
+    }
+
+    #[test]
+    fn wrong_input_width_and_kind_rejected() {
+        let mut rng = Rng::new(2);
+        let (e, _) = synthetic_encrypted_layer(
+            1, "enc", 6, 10, 1, 0.8, 8, 16, 2, Activation::Relu, &mut rng,
+        );
+        let k = BitplaneKernel::new(&e);
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+        let ctx = KernelCtx { decoder: &decoder };
+        let wrapped = Layer::Encrypted(e);
+        assert!(k.forward(&wrapped, &ctx, &[0.0; 9]).is_err());
+        let dense = Layer::Dense(crate::io::sqnn_file::DenseLayer {
+            name: "d".into(),
+            rows: 2,
+            cols: 2,
+            w: vec![0.0; 4],
+            b: vec![0.0; 2],
+            activation: Activation::Identity,
+        });
+        assert!(k.forward(&dense, &ctx, &[0.0; 2]).is_err());
+        assert!(k.forward_batch(&wrapped, &ctx, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scratch_stays_one_tile_and_output_tracks_reference() {
+        let mut rng = Rng::new(0x51);
+        // 120×200 = 24000 bits per plane ≫ a 4000-bit tile budget.
+        let (e, _) = synthetic_encrypted_layer(
+            4, "big", 120, 200, 2, 0.9, 12, 48, 19, Activation::Relu, &mut rng,
+        );
+        let k = BitplaneKernel::with_tile_bits(&e, 4000);
+        assert_eq!(k.tile_rows(), 20);
+        let decoder = ParallelDecoder::new(DecodeConfig::with_threads(2));
+        let ctx = KernelCtx { decoder: &decoder };
+        let x: Vec<f32> = (0..200).map(|i| ((i as f32) * 0.13).sin()).collect();
+        let wrapped = Layer::Encrypted(e.clone());
+        let got = k.forward(&wrapped, &ctx, &x).unwrap();
+        let peak = k.peak_scratch_bits();
+        assert!(peak > 0, "scratch high-water mark not recorded");
+        // 20 rows × 200 cols × 2 planes + slice-alignment overhang.
+        assert!(peak <= 2 * (20 * 200 + 2 * 48), "peak {peak} exceeds one tile");
+        assert!(peak < 2 * 120 * 200 / 2, "peak {peak} approaches whole-layer decode");
+        let want = affine(&e.reconstruct_dense(), 120, 200, &x, &e.bias);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

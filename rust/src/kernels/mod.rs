@@ -20,15 +20,24 @@
 //!   each tile's f32 weights in a thread-local scratch buffer, and
 //!   multiplies the tile into the output before decoding the next — the
 //!   full dense weight matrix is never materialized.
+//! * [`BitplaneKernel`] — bit-plane-native compute: decodes row-aligned
+//!   tiles like the fused kernel but never reconstructs f32 weights at
+//!   all — each output row is a per-plane accumulation over the packed
+//!   u64 words (mask AND + popcount lanes for ternary activations, a
+//!   word-at-a-time gather otherwise) with the per-plane `α` applied
+//!   once per row.
 //!
 //! [`KernelRegistry`] picks one kernel per layer from the layer's storage
 //! kind, the engine's [`DecodeMode`], and the user's [`KernelChoice`]
-//! (`--kernel auto|dense|csr|fused`); see the selection table in
-//! DESIGN.md. Every kernel is bit-identical to the reference
-//! materialize-then-[`dense_matmul`](crate::sparse::dense_matmul) path at
-//! every decode thread count: per output row, contributions accumulate in
-//! ascending column order through a single `f32` chain, so the exact same
-//! float operations happen in the exact same order.
+//! (`--kernel auto|dense|csr|fused|bitplane`); see the selection table in
+//! DESIGN.md. Every kernel except `bitplane` is bit-identical to the
+//! reference materialize-then-[`dense_matmul`](crate::sparse::dense_matmul)
+//! path at every decode thread count: per output row, contributions
+//! accumulate in ascending column order through a single `f32` chain, so
+//! the exact same float operations happen in the exact same order. The
+//! bitplane kernel legally reorders float adds (that is its point) and is
+//! instead pinned by self-bit-identity across threads/tiles plus exact /
+//! 1e-4-relative equivalence to the reference (DESIGN.md decision 10).
 //!
 //! Caveat: the SpMV identity assumes **finite activations**. CSR skips
 //! the `0·x` products the dense path performs on pruned positions; those
@@ -37,10 +46,12 @@
 //! finite). Inputs of real models are finite; the equivalence tests use
 //! finite inputs by construction.
 
+mod bitplane;
 mod csr;
 mod dense;
 mod fused;
 
+pub use bitplane::{BitplaneKernel, DEFAULT_TILE_BITS};
 pub use csr::CsrSpmvKernel;
 pub use dense::{affine, DenseKernel};
 pub use fused::{DEFAULT_TILE_F32S, FusedDecodeKernel};
@@ -74,16 +85,22 @@ pub enum KernelChoice {
     /// every batch (even under [`DecodeMode::Eager`]); dense and CSR
     /// layers serve as in [`KernelChoice::Auto`].
     Fused,
+    /// Encrypted layers run bit-plane-native through [`BitplaneKernel`]
+    /// on every batch (regardless of decode mode — there is nothing to
+    /// decode eagerly, because f32 weights are never reconstructed);
+    /// dense and CSR layers serve as in [`KernelChoice::Auto`].
+    Bitplane,
 }
 
 impl KernelChoice {
-    /// The CLI spelling (`auto` / `dense` / `csr` / `fused`).
+    /// The CLI spelling (`auto` / `dense` / `csr` / `fused` / `bitplane`).
     pub fn as_str(&self) -> &'static str {
         match self {
             KernelChoice::Auto => "auto",
             KernelChoice::Dense => "dense",
             KernelChoice::Csr => "csr",
             KernelChoice::Fused => "fused",
+            KernelChoice::Bitplane => "bitplane",
         }
     }
 }
@@ -97,7 +114,10 @@ impl std::str::FromStr for KernelChoice {
             "dense" => Ok(KernelChoice::Dense),
             "csr" => Ok(KernelChoice::Csr),
             "fused" => Ok(KernelChoice::Fused),
-            other => anyhow::bail!("bad kernel '{other}' (auto | dense | csr | fused)"),
+            "bitplane" => Ok(KernelChoice::Bitplane),
+            other => {
+                anyhow::bail!("bad kernel '{other}' (auto | dense | csr | fused | bitplane)")
+            }
         }
     }
 }
@@ -193,6 +213,7 @@ impl KernelRegistry {
                     _ => Box::new(CsrSpmvKernel::for_layer()),
                 },
                 Layer::Encrypted(e) => match (choice, mode) {
+                    (KernelChoice::Bitplane, _) => Box::new(BitplaneKernel::new(e)),
                     (KernelChoice::Fused, _) | (KernelChoice::Auto, DecodeMode::PerBatch) => {
                         Box::new(FusedDecodeKernel::new(e))
                     }
@@ -260,8 +281,13 @@ mod tests {
 
     #[test]
     fn kernel_choice_parses_and_prints() {
-        for c in [KernelChoice::Auto, KernelChoice::Dense, KernelChoice::Csr, KernelChoice::Fused]
-        {
+        for c in [
+            KernelChoice::Auto,
+            KernelChoice::Dense,
+            KernelChoice::Csr,
+            KernelChoice::Fused,
+            KernelChoice::Bitplane,
+        ] {
             assert_eq!(c.as_str().parse::<KernelChoice>().unwrap(), c);
         }
         assert!("gemm".parse::<KernelChoice>().is_err());
@@ -296,6 +322,16 @@ mod tests {
                 DecodeMode::Eager,
                 vec!["fused-decode", "csr-spmv", "dense", "dense"],
             ),
+            (
+                KernelChoice::Bitplane,
+                DecodeMode::Eager,
+                vec!["bitplane", "csr-spmv", "dense", "dense"],
+            ),
+            (
+                KernelChoice::Bitplane,
+                DecodeMode::PerBatch,
+                vec!["bitplane", "csr-spmv", "dense", "dense"],
+            ),
         ];
         for (choice, mode, want) in cases {
             let reg = KernelRegistry::build(&model, choice, mode, &decoder).unwrap();
@@ -323,6 +359,7 @@ mod tests {
                 KernelChoice::Dense,
                 KernelChoice::Csr,
                 KernelChoice::Fused,
+                KernelChoice::Bitplane,
             ] {
                 let reg =
                     KernelRegistry::build(&model, choice, DecodeMode::PerBatch, &decoder)

@@ -131,7 +131,9 @@ fn print_help() {
                                 (re-decode encrypted layers on every batch)\n\
            --kernel K           per-layer matmul kernel: auto (default),\n\
                                 dense (materialize-then-matmul), csr (SpMV\n\
-                                everywhere), fused (tile-streaming decode)"
+                                everywhere), fused (tile-streaming decode),\n\
+                                bitplane (plane-native popcount/gather, no\n\
+                                f32 weight reconstruction)"
     );
 }
 

@@ -272,6 +272,36 @@ pub fn decode_slice_range_into(
     });
 }
 
+/// Shard `rows` output rows across up to `threads` scoped workers, each
+/// owning a disjoint contiguous chunk of the `[row][lane]` accumulator
+/// matrix `acc` (`row_stride` f32 lanes per row). Worker `w` receives its
+/// row range `(r0, r1)` plus the `&mut` chunk covering exactly those
+/// rows, so no synchronization exists between workers — the row-parallel
+/// accumulation primitive of the bit-plane kernel. With one worker (or
+/// one row) the callback runs inline on the calling thread; either way
+/// each row is processed exactly once by exactly one callback, so
+/// per-row results are identical at every worker count.
+pub fn shard_rows_mut<F>(rows: usize, threads: usize, row_stride: usize, acc: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(acc.len(), rows * row_stride);
+    let workers = threads.max(1).min(rows.max(1));
+    if workers <= 1 || row_stride == 0 {
+        f(0, rows, acc);
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (wi, chunk) in acc.chunks_mut(rows_per * row_stride).enumerate() {
+            let r0 = wi * rows_per;
+            let r1 = (r0 + rows_per).min(rows);
+            let f = &f;
+            scope.spawn(move || f(r0, r1, chunk));
+        }
+    });
+}
+
 /// Decode slices `[k0, k1)` into a tile-local bit vector (bit 0 of the
 /// result = bit `k0 * n_out` of the plane).
 fn decode_tile(plan: &DecodePlan, enc: &EncryptedPlane, k0: usize, k1: usize) -> BitVec {
@@ -468,6 +498,32 @@ mod tests {
         assert_eq!(slice_tiles(0, 4).count(), 0);
         // tile_slices = 0 is clamped to 1, not an infinite loop.
         assert_eq!(slice_tiles(3, 0).collect::<Vec<_>>(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn shard_rows_cover_each_row_once_at_any_worker_count() {
+        for rows in [0usize, 1, 5, 16, 17] {
+            for threads in [1usize, 2, 4, 8, 64] {
+                let stride = 3usize;
+                let mut acc = vec![0.0f32; rows * stride];
+                shard_rows_mut(rows, threads, stride, &mut acc, |r0, r1, chunk| {
+                    assert_eq!(chunk.len(), (r1 - r0) * stride);
+                    for (i, slot) in chunk.iter_mut().enumerate() {
+                        // += (not =) so a row visited twice is caught.
+                        *slot += (r0 + i / stride) as f32 + (i % stride) as f32 * 0.25;
+                    }
+                });
+                for r in 0..rows {
+                    for l in 0..stride {
+                        assert_eq!(
+                            acc[r * stride + l],
+                            r as f32 + l as f32 * 0.25,
+                            "rows={rows} threads={threads} r={r} l={l}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

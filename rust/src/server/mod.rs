@@ -19,6 +19,7 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -101,8 +102,50 @@ fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
     }
 }
 
-fn read_exact(s: &mut TcpStream, buf: &mut [u8]) -> std::io::Result<()> {
-    s.read_exact(buf)
+/// How long a started frame may sit with **no bytes arriving** before
+/// the connection is dropped. Distinguishes a slow writer (pauses
+/// between opcode, length, and payload chunks are retried) from an
+/// abandoned truncated frame (which must not pin a handler thread
+/// forever).
+const FRAME_STALL_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Read exactly `buf.len()` bytes of an already-started frame.
+///
+/// The socket's 100 ms read timeout exists so *idle* connections poll
+/// the stop flag; it must not kill a client that pauses mid-frame (e.g.
+/// >100 ms between the `I` opcode and its length/payload). So
+/// `WouldBlock`/`TimedOut` here retries — still honoring `stop` — and
+/// only gives up once no byte has arrived for [`FRAME_STALL_TIMEOUT`].
+fn read_frame_exact(
+    s: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    use std::io::{Error, ErrorKind};
+    let mut filled = 0usize;
+    let mut last_progress = Instant::now();
+    while filled < buf.len() {
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => return Err(Error::new(ErrorKind::UnexpectedEof, "peer closed mid-frame")),
+            Ok(n) => {
+                filled += n;
+                last_progress = Instant::now();
+            }
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(ref e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Err(Error::other("server stopping"));
+                }
+                if last_progress.elapsed() >= FRAME_STALL_TIMEOUT {
+                    return Err(Error::new(ErrorKind::TimedOut, "frame stalled mid-read"));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Write a structured `E` response (protocol errors get one before the
@@ -122,7 +165,7 @@ fn handle_conn(
 ) -> Result<()> {
     // Idle connections poll the stop flag so `Server::stop` can join this
     // thread even while a client keeps the socket open.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     loop {
         let mut op = [0u8; 1];
         match stream.read(&mut op) {
@@ -142,14 +185,14 @@ fn handle_conn(
         match op[0] {
             b'I' => {
                 let mut nb = [0u8; 4];
-                read_exact(&mut stream, &mut nb)?;
+                read_frame_exact(&mut stream, &mut nb, &stop)?;
                 let n = u32::from_le_bytes(nb) as usize;
                 if n > 1 << 20 {
                     let _ = write_err(&mut stream, &format!("oversized request ({n} floats)"));
                     anyhow::bail!("oversized request ({n} floats)");
                 }
                 let mut raw = vec![0u8; n * 4];
-                read_exact(&mut stream, &mut raw)?;
+                read_frame_exact(&mut stream, &mut raw, &stop)?;
                 let input: Vec<f32> = raw
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -219,12 +262,26 @@ impl Client {
         let mut nb = [0u8; 4];
         self.stream.read_exact(&mut nb)?;
         let n = u32::from_le_bytes(nb) as usize;
-        let mut raw = vec![0u8; if op[0] == b'O' { n * 4 } else { n }];
-        self.stream.read_exact(&mut raw)?;
-        if op[0] == b'E' {
-            anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw));
+        // Only `O` (logits) and `E` (error) are valid replies; anything
+        // else means a desynced or incompatible peer, and guessing its
+        // payload length (then parsing garbage as f32 logits) would
+        // silently corrupt results — bail like `Client::stats` does.
+        match op[0] {
+            b'O' => {
+                let mut raw = vec![0u8; n * 4];
+                self.stream.read_exact(&mut raw)?;
+                Ok(raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect())
+            }
+            b'E' => {
+                let mut raw = vec![0u8; n];
+                self.stream.read_exact(&mut raw)?;
+                anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw));
+            }
+            other => anyhow::bail!("unexpected infer reply opcode {other}"),
         }
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     pub fn stats_json(&mut self) -> Result<String> {

@@ -94,12 +94,50 @@ fn unknown_opcode_gets_structured_error_then_close() {
     server.stop();
 }
 
+/// A client that dribbles its frame slowly — pausing longer than the
+/// 100 ms idle read timeout between the opcode, the length, and payload
+/// chunks — must still be served. Only *idle* opcode polling may time
+/// out; mid-frame reads retry until the frame stalls outright.
+#[test]
+fn slow_writer_mid_frame_is_served_not_dropped() {
+    let (_coordinator, mut server) = start_server();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let pause = Duration::from_millis(300);
+    s.write_all(b"I").unwrap();
+    std::thread::sleep(pause);
+    s.write_all(&(INPUT_DIM as u32).to_le_bytes()).unwrap();
+    std::thread::sleep(pause);
+    let payload: Vec<u8> =
+        (0..INPUT_DIM).flat_map(|_| 0.25f32.to_le_bytes()).collect();
+    let (a, b) = payload.split_at(payload.len() / 2);
+    s.write_all(a).unwrap();
+    std::thread::sleep(pause);
+    s.write_all(b).unwrap();
+    // The reply is a normal O frame with NUM_CLASSES logits.
+    let mut op = [0u8; 1];
+    s.read_exact(&mut op).unwrap();
+    assert_eq!(op[0], b'O', "slow writer was dropped instead of served");
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb).unwrap();
+    assert_eq!(u32::from_le_bytes(nb) as usize, NUM_CLASSES);
+    let mut raw = vec![0u8; NUM_CLASSES * 4];
+    s.read_exact(&mut raw).unwrap();
+    // …and the connection keeps serving afterwards.
+    s.write_all(b"M").unwrap();
+    s.read_exact(&mut op).unwrap();
+    assert_eq!(op[0], b'M');
+    server.stop();
+}
+
 #[test]
 fn truncated_frame_closes_connection() {
     let (_coordinator, mut server) = start_server();
     let addr = format!("127.0.0.1:{}", server.port);
-    // Announce 8 floats but send only 2: the server's frame read times
-    // out and the connection is dropped rather than hanging forever.
+    // Announce 8 floats but send only 2: the frame stalls (no bytes for
+    // the server's mid-frame stall deadline) and the connection is
+    // dropped rather than hanging forever.
     let mut s = TcpStream::connect(&addr).unwrap();
     s.write_all(b"I").unwrap();
     s.write_all(&8u32.to_le_bytes()).unwrap();
