@@ -1,0 +1,231 @@
+//! §Perf serving-tier concurrency bench: hundreds of concurrent framed
+//! connections (mixed named-infer / stats / load-unload traffic)
+//! against an in-process multi-model server, reporting sustained
+//! request throughput and p50/p99 round-trip latency per worker-thread
+//! count.
+//!
+//! This is also CI's serving-regression gate (bench-smoke):
+//!
+//! * it opens ≥500 concurrent framed connections against ≥2 loaded
+//!   models and fails if the server ever sheds or drops one;
+//! * every infer reply is checked bit-exact against a fresh-engine
+//!   oracle for the (model, input) it asked for — one wrong payload
+//!   (cross-talk between multiplexed connections) fails the run;
+//! * a sanity floor on req/s catches order-of-magnitude serving-tier
+//!   regressions without flaking on slow CI hosts.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use sqnn_xor::coordinator::{
+    EngineOptions, ModelRegistry, RegistryConfig, SqnnEngine,
+};
+use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
+use sqnn_xor::server::{Client, Server, ServerConfig};
+use sqnn_xor::util::percentile;
+
+const INPUT_DIM: usize = 16;
+const NUM_CLASSES: usize = 4;
+/// Concurrent framed connections held open through the timed phase.
+const CONNS: usize = 500;
+/// Driver threads; each owns CONNS / DRIVERS connections.
+const DRIVERS: usize = 10;
+/// Timed requests per connection.
+const ROUNDS: usize = 4;
+/// Distinct probe inputs (oracle table size per model).
+const VARIANTS: usize = 4;
+/// Sanity floor: an order-of-magnitude guard, not a perf target —
+/// single-core CI runners must pass it with slack.
+const FLOOR_REQ_PER_S: f64 = 200.0;
+
+fn model(seed: u64) -> SqnnModel {
+    synthetic_layer_graph(
+        seed,
+        INPUT_DIM,
+        &[SynthEncrypted { out_dim: 12, ..Default::default() }],
+        &[],
+        NUM_CLASSES,
+    )
+}
+
+fn probe(v: usize) -> Vec<f32> {
+    vec![0.1 + 0.05 * v as f32; INPUT_DIM]
+}
+
+fn main() {
+    let opts = EngineOptions { decode_threads: 1, ..Default::default() };
+
+    // Oracle table: expected logits per (model, input variant), from
+    // fresh engines outside any server.
+    let seeds = [0xD0u64, 0xD1];
+    let names = ["m0", "m1"];
+    let mut oracle = vec![vec![Vec::new(); VARIANTS]; names.len()];
+    for (m, seed) in seeds.iter().enumerate() {
+        let engine = SqnnEngine::load_native(model(*seed), &[1, 8], opts).unwrap();
+        for v in 0..VARIANTS {
+            oracle[m][v] = engine.infer(&[probe(v)]).unwrap().remove(0);
+        }
+    }
+    let oracle = Arc::new(oracle);
+
+    println!(
+        "perf_serve: {CONNS} concurrent connections, {DRIVERS} drivers, \
+         {ROUNDS} reqs/conn, 2 models + load/unload churn"
+    );
+    println!(
+        "{:<10} {:>10} {:>12} {:>10} {:>10} {:>10}",
+        "workers", "reqs", "elapsed_s", "req/s", "p50_ms", "p99_ms"
+    );
+    for workers in [2usize, 4] {
+        run_config(workers, opts, &names, &oracle);
+    }
+    println!("perf_serve OK: zero wrong payloads, floor {FLOOR_REQ_PER_S} req/s held");
+}
+
+fn run_config(
+    workers: usize,
+    opts: EngineOptions,
+    names: &[&'static str; 2],
+    oracle: &Arc<Vec<Vec<Vec<f32>>>>,
+) {
+    let registry = ModelRegistry::new(RegistryConfig {
+        max_loaded: 3,
+        buckets: vec![1, 8],
+        engine: opts,
+        ..Default::default()
+    });
+    registry.register_model("m0", model(0xD0)).unwrap();
+    registry.register_model("m1", model(0xD1)).unwrap();
+    registry.register_model("churn", model(0xD2)).unwrap();
+    let registry = Arc::new(registry);
+
+    let mut server = Server::start_registry(
+        registry,
+        "127.0.0.1:0",
+        ServerConfig { acceptors: 2, workers, max_conns: CONNS + 64 },
+    )
+    .unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+
+    // Background churn over the wire: hot load/unload of a third model
+    // while the infer traffic runs (registry locking + drain on the hot
+    // path, but never touching m0/m1 under a max_loaded of 3).
+    let stop_churn = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let addr = addr.clone();
+        let stop = stop_churn.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut cycles = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                c.load("churn").unwrap();
+                c.models_json().unwrap();
+                c.unload("churn").unwrap();
+                cycles += 1;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            cycles
+        })
+    };
+
+    let start_gate = Arc::new(Barrier::new(DRIVERS + 1));
+    let end_gate = Arc::new(Barrier::new(DRIVERS + 1));
+    let wrong = Arc::new(AtomicU64::new(0));
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let mut drivers = Vec::new();
+    for d in 0..DRIVERS {
+        let addr = addr.clone();
+        let oracle = oracle.clone();
+        let names = *names;
+        let start_gate = start_gate.clone();
+        let end_gate = end_gate.clone();
+        let wrong = wrong.clone();
+        let latencies = latencies.clone();
+        drivers.push(std::thread::spawn(move || {
+            // Open this driver's share of the connection fleet, with a
+            // warm round-trip each so every connection is registered
+            // with a worker before the clock starts.
+            let mut conns = Vec::new();
+            for k in 0..CONNS / DRIVERS {
+                let mut c = Client::connect(&addr).unwrap();
+                let m = (d + k) % names.len();
+                let got = c.infer_named(Some(names[m]), &probe(0)).unwrap();
+                if got != oracle[m][0] {
+                    wrong.fetch_add(1, Ordering::SeqCst);
+                }
+                conns.push(c);
+            }
+            start_gate.wait();
+            let mut local = Vec::with_capacity(conns.len() * ROUNDS);
+            for r in 0..ROUNDS {
+                for (k, c) in conns.iter_mut().enumerate() {
+                    let m = (d + k + r) % names.len();
+                    let v = (k + r) % VARIANTS;
+                    let t0 = Instant::now();
+                    if (k + r) % 16 == 15 {
+                        // Mixed traffic: a framed stats round-trip.
+                        let stats = c.stats().unwrap();
+                        if !stats.starts_with('{') {
+                            wrong.fetch_add(1, Ordering::SeqCst);
+                        }
+                    } else {
+                        let got = c.infer_named(Some(names[m]), &probe(v)).unwrap();
+                        if got != oracle[m][v] {
+                            wrong.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    local.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            latencies.lock().unwrap().extend(local);
+            end_gate.wait();
+            // Connections stay open (concurrent) until after the gate.
+            drop(conns);
+        }));
+    }
+
+    start_gate.wait();
+    let t0 = Instant::now();
+    // Every driver did a warm round-trip on every connection, so the
+    // whole fleet is live and concurrently held open right now.
+    let live = server.live_conns();
+    assert!(live >= CONNS, "expected >={CONNS} live connections, saw {live}");
+    end_gate.wait();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    stop_churn.store(true, Ordering::SeqCst);
+    let churn_cycles = churn.join().unwrap();
+    for h in drivers {
+        h.join().unwrap();
+    }
+
+    let lat = latencies.lock().unwrap();
+    let reqs = lat.len();
+    let rate = reqs as f64 / elapsed;
+    println!(
+        "{:<10} {:>10} {:>12.2} {:>10.0} {:>10.3} {:>10.3}   (churn cycles: {})",
+        workers,
+        reqs,
+        elapsed,
+        rate,
+        percentile(&lat, 0.50),
+        percentile(&lat, 0.99),
+        churn_cycles
+    );
+
+    assert_eq!(reqs, CONNS * ROUNDS, "driver lost requests");
+    assert_eq!(
+        wrong.load(Ordering::SeqCst),
+        0,
+        "wrong payloads observed: cross-talk or corruption in the serving tier"
+    );
+    assert_eq!(server.shed_conns_total(), 0, "fleet within max_conns must never shed");
+    assert!(
+        rate >= FLOOR_REQ_PER_S,
+        "serving tier regressed: {rate:.0} req/s under the {FLOOR_REQ_PER_S} floor"
+    );
+    server.stop();
+}

@@ -5,9 +5,18 @@
 //! shared across threads) and drains the queue into the largest batch
 //! bucket available, bounded by a max-wait deadline — the standard
 //! size-or-deadline policy of production inference routers.
+//!
+//! The pending queue is the admission-control boundary: it is bounded
+//! (`queue_cap`), [`CoordinatorHandle::try_submit`] refuses work with
+//! [`SubmitError::Busy`] when it is full (counted as `shed_total`, the
+//! server's `E busy` path), and the gauge behind
+//! [`MetricsSnapshot::queue_depth`](super::metrics::MetricsSnapshot)
+//! tracks how deep it currently is. On shutdown the executor *drains*
+//! the queue — every request that was admitted gets an answer before the
+//! thread exits, so unloading a model never drops in-flight work.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -31,11 +40,37 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Default bound on the pending request queue.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
     reply: SyncSender<Result<Vec<f32>>>,
 }
+
+/// The receiving end of one request's reply (resolves exactly once).
+pub type ReplyReceiver = Receiver<Result<Vec<f32>>>;
+
+/// Why a non-blocking submit was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded pending queue is full — shed the request (`E busy`).
+    Busy,
+    /// The executor is gone; no request will ever be served again.
+    Down,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "busy: pending queue full"),
+            SubmitError::Down => write!(f, "coordinator is down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Handle for submitting work; cheap to clone across client threads.
 #[derive(Clone)]
@@ -47,13 +82,35 @@ pub struct CoordinatorHandle {
 
 impl CoordinatorHandle {
     /// Synchronous single inference (blocks until the batch it joined
-    /// completes).
+    /// completes). Blocks — rather than shedding — when the pending
+    /// queue is full; servers under admission control use
+    /// [`CoordinatorHandle::try_submit`] instead.
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
             .send(Request { input, enqueued: Instant::now(), reply: reply_tx })
             .map_err(|_| anyhow!("coordinator is down"))?;
+        self.metrics.queue_enqueued();
         reply_rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+
+    /// Non-blocking submit: the admission-control edge. `Ok` hands back
+    /// the reply channel (the request *will* be answered, even through a
+    /// shutdown drain); a full queue sheds with [`SubmitError::Busy`]
+    /// and counts toward `shed_total`.
+    pub fn try_submit(&self, input: Vec<f32>) -> std::result::Result<ReplyReceiver, SubmitError> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        match self.tx.try_send(Request { input, enqueued: Instant::now(), reply: reply_tx }) {
+            Ok(()) => {
+                self.metrics.queue_enqueued();
+                Ok(reply_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Down),
+        }
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -74,13 +131,28 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn the executor thread. `make_engine` runs *inside* the thread
-    /// so non-Send PJRT state never crosses threads.
+    /// Spawn the executor thread with the default pending-queue bound.
+    /// `make_engine` runs *inside* the thread so non-Send PJRT state
+    /// never crosses threads.
     pub fn spawn<F>(policy: BatchPolicy, make_engine: F) -> Result<Coordinator>
     where
         F: FnOnce() -> Result<SqnnEngine> + Send + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(1024);
+        Self::spawn_with(policy, DEFAULT_QUEUE_CAP, make_engine)
+    }
+
+    /// [`Coordinator::spawn`] with an explicit pending-queue bound
+    /// (`queue_cap` is clamped to ≥ 1) — the per-model admission-control
+    /// knob (`--queue-cap`).
+    pub fn spawn_with<F>(
+        policy: BatchPolicy,
+        queue_cap: usize,
+        make_engine: F,
+    ) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<SqnnEngine> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(queue_cap.max(1));
         let metrics = Arc::new(Metrics::new());
         let running = Arc::new(AtomicBool::new(true));
         let handle =
@@ -116,6 +188,38 @@ impl Drop for Coordinator {
     }
 }
 
+/// Execute one assembled batch and answer every request in it.
+fn run_batch(engine: &SqnnEngine, batch: Vec<Request>, metrics: &Metrics) {
+    let start = Instant::now();
+    let mut batch = batch;
+    // Move the inputs out of the batch (replies only need the channel
+    // + enqueue time) — cloning every vector here would put one
+    // allocation + copy per request on the hot path.
+    let inputs: Vec<Vec<f32>> =
+        batch.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
+    match engine.infer(&inputs) {
+        Ok(outputs) => {
+            let elapsed = start.elapsed();
+            metrics.record_batch(batch.len(), elapsed);
+            for (req, out) in batch.into_iter().zip(outputs) {
+                metrics.record_latency(req.enqueued.elapsed());
+                let _ = req.reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            let msg = format!("{e:#}");
+            for req in batch {
+                // Failed requests feed the latency reservoir too:
+                // recording only successes would skew p50/p99
+                // optimistic exactly when the engine is struggling.
+                metrics.record_latency(req.enqueued.elapsed());
+                let _ = req.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
 fn executor_loop(
     engine: SqnnEngine,
     rx: Receiver<Request>,
@@ -123,7 +227,7 @@ fn executor_loop(
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
-    let max_batch = policy.max_batch.min(engine.buckets().last().copied().unwrap_or(1));
+    let max_batch = policy.max_batch.min(engine.buckets().last().copied().unwrap_or(1)).max(1);
     while running.load(Ordering::SeqCst) {
         // Block (briefly) for the first request.
         let first = match rx.recv_timeout(Duration::from_millis(20)) {
@@ -153,34 +257,25 @@ fn executor_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-
-        let start = Instant::now();
-        // Move the inputs out of the batch (replies only need the channel
-        // + enqueue time) — cloning every vector here would put one
-        // allocation + copy per request on the hot path.
-        let inputs: Vec<Vec<f32>> =
-            batch.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
-        match engine.infer(&inputs) {
-            Ok(outputs) => {
-                let elapsed = start.elapsed();
-                metrics.record_batch(batch.len(), elapsed);
-                for (req, out) in batch.into_iter().zip(outputs) {
-                    metrics.record_latency(req.enqueued.elapsed());
-                    let _ = req.reply.send(Ok(out));
-                }
-            }
-            Err(e) => {
-                metrics.record_error();
-                let msg = format!("{e:#}");
-                for req in batch {
-                    // Failed requests feed the latency reservoir too:
-                    // recording only successes would skew p50/p99
-                    // optimistic exactly when the engine is struggling.
-                    metrics.record_latency(req.enqueued.elapsed());
-                    let _ = req.reply.send(Err(anyhow!("{msg}")));
-                }
+        metrics.queue_dequeued(batch.len());
+        run_batch(&engine, batch, &metrics);
+    }
+    // Shutdown drain: every request that made it past admission control
+    // still gets an answer — unloading a model must never turn admitted
+    // requests into dropped-channel errors.
+    loop {
+        let mut batch = Vec::new();
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
             }
         }
+        if batch.is_empty() {
+            break;
+        }
+        metrics.queue_dequeued(batch.len());
+        run_batch(&engine, batch, &metrics);
     }
 }
 
@@ -191,7 +286,11 @@ mod tests {
     use crate::models::synth::{synthetic_layer_graph, SynthEncrypted};
 
     fn spawn_toy() -> Coordinator {
-        Coordinator::spawn(BatchPolicy::default(), || {
+        spawn_toy_with_cap(DEFAULT_QUEUE_CAP)
+    }
+
+    fn spawn_toy_with_cap(cap: usize) -> Coordinator {
+        Coordinator::spawn_with(BatchPolicy::default(), cap, || {
             let model = synthetic_layer_graph(
                 0xBA7C,
                 8,
@@ -217,5 +316,65 @@ mod tests {
         assert_eq!(snap.requests, 2, "error-path request missing from latency metrics");
         assert!(snap.latency_p99_ms >= snap.latency_p50_ms);
         c.handle.shutdown();
+    }
+
+    #[test]
+    fn try_submit_sheds_when_queue_overflows() {
+        // A tiny queue and a burst far wider than it: some requests must
+        // be shed with Busy (counted in shed_total), and every *admitted*
+        // request still resolves with real logits.
+        let c = spawn_toy_with_cap(2);
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for _ in 0..256 {
+            match c.handle.try_submit(vec![0.1; 8]) {
+                Ok(rx) => admitted.push(rx),
+                Err(SubmitError::Busy) => shed += 1,
+                Err(SubmitError::Down) => panic!("executor died mid-burst"),
+            }
+        }
+        assert!(shed > 0, "a 256-wide burst into a 2-deep queue must shed");
+        assert!(!admitted.is_empty(), "admission control must not shed everything");
+        for rx in admitted {
+            let logits = rx.recv().expect("admitted request dropped").expect("infer failed");
+            assert_eq!(logits.len(), 3);
+        }
+        let snap = c.handle.metrics().snapshot();
+        assert_eq!(snap.shed_total as usize, shed, "every Busy must count in shed_total");
+        // Sheds are not errors and not requests: they never entered the
+        // latency stream.
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.requests as usize + shed, 256);
+        let json = snap.to_json();
+        assert!(json.contains("\"shed_total\":"), "{json}");
+        assert!(json.contains("\"queue_depth\":"), "{json}");
+    }
+
+    #[test]
+    fn queue_depth_returns_to_zero_when_drained() {
+        let c = spawn_toy();
+        let rxs: Vec<_> =
+            (0..8).map(|_| c.handle.try_submit(vec![0.2; 8]).expect("admit")).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        // All replies delivered ⇒ everything was dequeued.
+        assert_eq!(c.handle.metrics().snapshot().queue_depth, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_requests() {
+        let c = spawn_toy();
+        // Admit a pile of requests, then immediately shut down: the
+        // executor must drain and answer them all, not drop channels.
+        let rxs: Vec<_> = (0..64)
+            .map(|_| c.handle.try_submit(vec![0.3; 8]).expect("admit"))
+            .collect();
+        c.handle.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let got = rx.recv();
+            let logits = got.unwrap_or_else(|_| panic!("request {i} dropped at shutdown"));
+            assert_eq!(logits.expect("infer failed").len(), 3, "request {i}");
+        }
     }
 }

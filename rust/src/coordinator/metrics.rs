@@ -9,7 +9,7 @@
 //! every percentile on the first few minutes of traffic.) Means are exact
 //! — computed from monotonic totals, not the sample.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -63,6 +63,12 @@ pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     errors: AtomicU64,
+    /// Requests refused by admission control (pending queue full).
+    shed: AtomicU64,
+    /// Requests currently sitting in the pending queue. Signed because
+    /// enqueue/dequeue race across threads (a dequeue can be observed
+    /// before its enqueue); the snapshot clamps at zero.
+    queue_depth: AtomicI64,
     batch_items: AtomicU64,
     /// Exact totals for means (nanoseconds; ~584 years before overflow).
     latency_total_ns: AtomicU64,
@@ -88,6 +94,11 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Engine/coordinator errors.
     pub errors: u64,
+    /// Requests shed by admission control (bounded pending queue full —
+    /// the server answered `E busy` without queueing them).
+    pub shed_total: u64,
+    /// Requests waiting in the pending queue right now.
+    pub queue_depth: u64,
     /// Mean requests per executed batch.
     pub mean_batch_size: f64,
     /// Exact mean end-to-end request latency.
@@ -107,12 +118,15 @@ impl MetricsSnapshot {
     /// and framed `M` stats opcodes (hand-rolled; no serde offline).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"requests\":{},\"batches\":{},\"errors\":{},\"mean_batch\":{:.3},\
+            "{{\"requests\":{},\"batches\":{},\"errors\":{},\"shed_total\":{},\
+             \"queue_depth\":{},\"mean_batch\":{:.3},\
              \"latency_mean_ms\":{:.3},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
              \"exec_mean_ms\":{:.3},\"exec_p99_ms\":{:.3}}}",
             self.requests,
             self.batches,
             self.errors,
+            self.shed_total,
+            self.queue_depth,
             self.mean_batch_size,
             self.latency_mean_ms,
             self.latency_p50_ms,
@@ -136,6 +150,8 @@ impl Metrics {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            queue_depth: AtomicI64::new(0),
             batch_items: AtomicU64::new(0),
             latency_total_ns: AtomicU64::new(0),
             exec_total_ns: AtomicU64::new(0),
@@ -164,6 +180,21 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one request shed by admission control (queue full).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request entered the pending queue.
+    pub fn queue_enqueued(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` requests left the pending queue for an executing batch.
+    pub fn queue_dequeued(&self, n: usize) {
+        self.queue_depth.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
     /// Consistent point-in-time view of every counter and distribution.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap();
@@ -181,6 +212,8 @@ impl Metrics {
             requests,
             batches,
             errors: self.errors.load(Ordering::Relaxed),
+            shed_total: self.shed.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed).max(0) as u64,
             mean_batch_size: if batches == 0 {
                 0.0
             } else {
@@ -255,6 +288,8 @@ mod tests {
             "\"requests\"",
             "\"batches\"",
             "\"errors\"",
+            "\"shed_total\"",
+            "\"queue_depth\"",
             "\"mean_batch\"",
             "\"latency_mean_ms\"",
             "\"p50_ms\"",
@@ -265,5 +300,23 @@ mod tests {
             assert!(json.contains(key), "missing {key} in {json}");
         }
         assert!(json.starts_with('{') && json.ends_with('}'));
+    }
+
+    #[test]
+    fn shed_and_queue_depth_counters() {
+        let m = Metrics::new();
+        m.queue_enqueued();
+        m.queue_enqueued();
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.shed_total, 1, "shed counter");
+        assert_eq!(s.queue_depth, 2, "queue depth gauge");
+        let json = s.to_json();
+        assert!(json.contains("\"shed_total\":1"), "{json}");
+        assert!(json.contains("\"queue_depth\":2"), "{json}");
+        // Enqueue/dequeue race over-dequeue is clamped at zero, not
+        // wrapped to u64::MAX.
+        m.queue_dequeued(3);
+        assert_eq!(m.snapshot().queue_depth, 0);
     }
 }

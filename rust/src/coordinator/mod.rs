@@ -3,15 +3,23 @@
 //! * [`compressor`] — Python weight bundle → `.sqnn` (the legacy frontend
 //!   of the [`compress`](crate::compress) pipeline);
 //! * [`engine`] — compressed model + AOT executables, batch execution;
-//! * [`batcher`] — dynamic batching over a dedicated executor thread;
-//! * [`metrics`] — counters and latency percentiles.
+//! * [`batcher`] — dynamic batching over a dedicated executor thread,
+//!   with a bounded pending queue (admission control);
+//! * [`registry`] — named models, hot load/unload, LRU bound over
+//!   loaded engines;
+//! * [`metrics`] — counters, shed/queue-depth gauges, latency
+//!   percentiles.
 
 pub mod batcher;
 pub mod compressor;
 pub mod engine;
 pub mod metrics;
+pub mod registry;
 
-pub use batcher::{BatchPolicy, Coordinator, CoordinatorHandle};
+pub use batcher::{
+    BatchPolicy, Coordinator, CoordinatorHandle, ReplyReceiver, SubmitError, DEFAULT_QUEUE_CAP,
+};
+pub use registry::{ModelRegistry, ModelSource, ModelStatus, RegistryConfig, RegistryError};
 pub use compressor::{compress_bundle, compress_bundle_with, read_bundle_meta, BundleMeta};
 pub use engine::{
     build_static_inputs, DecodeMode, EngineOptions, GraphVariant, SqnnEngine, StaticInputs,

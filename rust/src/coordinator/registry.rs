@@ -1,0 +1,642 @@
+//! Multi-model registry: named models, hot load/unload, an LRU bound
+//! over loaded engines, and per-model admission control.
+//!
+//! Every *loaded* model owns a full serving stack of its own — a
+//! [`Coordinator`] (dedicated executor thread + adaptive [`BatchPolicy`]
+//! batching), a bounded pending queue, and a [`Metrics`] sink with its
+//! own latency reservoirs — so models never share queues, batches, or
+//! percentile streams. *Registered* models are just a name → source
+//! mapping ([`ModelSource`]: a `.sqnn` path, an in-memory model, or an
+//! engine factory); loading is what spawns the stack, and the LRU bound
+//! (`max_loaded`, the `--max-loaded` knob) caps how many stacks exist at
+//! once: loading past the bound evicts the least-recently-*used* model
+//! (every infer touches), which stays registered and reloads on demand.
+//!
+//! Two guarantees the property tests in `tests/registry.rs` pin:
+//!
+//! * **Eviction is lossless.** A reloaded model is rebuilt from its
+//!   source through the same deterministic decode/kernel plan, so
+//!   load → evict → reload serves bit-identical logits to a fresh
+//!   engine at every kernel × decode-mode combination.
+//! * **Unload drains.** Evicting or unloading a model shuts its
+//!   executor down through the batcher's shutdown drain: every request
+//!   already past admission control is answered before the engine (and
+//!   its decode-plan / eager caches) is dropped.
+//!
+//! [`Metrics`]: super::metrics::Metrics
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{
+    BatchPolicy, Coordinator, CoordinatorHandle, ReplyReceiver, SubmitError, DEFAULT_QUEUE_CAP,
+};
+use super::engine::{EngineOptions, SqnnEngine};
+use super::metrics::MetricsSnapshot;
+use crate::io::sqnn_file::SqnnModel;
+
+/// Registry construction knobs (`sqnn serve --models … --max-loaded …
+/// --queue-cap …`). One config applies to every model the registry
+/// loads; per-model engine tuning can use [`ModelSource::Factory`].
+#[derive(Clone)]
+pub struct RegistryConfig {
+    /// Max models loaded at once (LRU-evicted beyond this; 0 = unbounded).
+    pub max_loaded: usize,
+    /// Per-model pending-queue bound (admission control; `E busy` past it).
+    pub queue_cap: usize,
+    /// Per-model adaptive batching policy.
+    pub policy: BatchPolicy,
+    /// Engine options for models loaded from a path or in-memory model.
+    pub engine: EngineOptions,
+    /// Batch buckets for models loaded from a path or in-memory model.
+    pub buckets: Vec<usize>,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            max_loaded: 4,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            policy: BatchPolicy::default(),
+            engine: EngineOptions::default(),
+            buckets: vec![1, 8, 32],
+        }
+    }
+}
+
+/// Where a registered model's engine comes from on (re)load.
+#[derive(Clone)]
+pub enum ModelSource {
+    /// A `.sqnn` container on disk, re-read on every load.
+    Path(PathBuf),
+    /// An in-memory model, cloned into each load (tests, synth serving).
+    Model(SqnnModel),
+    /// An arbitrary engine factory, called on every load (per-model
+    /// engine options, PJRT backends, …). Must be repeatable: evicted
+    /// models reload through the same factory.
+    Factory(Arc<dyn Fn() -> Result<SqnnEngine> + Send + Sync>),
+}
+
+/// Registry operation errors, separated so the server can map them to
+/// wire semantics: `Busy` keeps the connection and answers `E busy…`,
+/// `Unknown` answers a plain `E`, `Other` carries engine/IO context.
+#[derive(Debug)]
+pub enum RegistryError {
+    /// The model's bounded pending queue is full (admission control shed;
+    /// already counted in the model's `shed_total`).
+    Busy(String),
+    /// No model is registered under this name.
+    Unknown(String),
+    /// Load/engine/channel failure.
+    Other(anyhow::Error),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Busy(m) => write!(f, "busy: model '{m}' pending queue full"),
+            RegistryError::Unknown(m) => write!(f, "unknown model '{m}'"),
+            RegistryError::Other(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+impl From<anyhow::Error> for RegistryError {
+    fn from(e: anyhow::Error) -> Self {
+        RegistryError::Other(e)
+    }
+}
+
+impl RegistryError {
+    /// Whether this is the admission-control shed path (`E busy`).
+    pub fn is_busy(&self) -> bool {
+        matches!(self, RegistryError::Busy(_))
+    }
+}
+
+/// One model's status in [`ModelRegistry::list`] (the `P` opcode body).
+#[derive(Clone, Debug)]
+pub struct ModelStatus {
+    /// Registered name.
+    pub name: String,
+    /// Whether a serving stack is currently loaded for it.
+    pub loaded: bool,
+    /// Whether it is the default model (bare `I` requests route here).
+    pub default: bool,
+    /// Pinned entries (adopted externally-owned coordinators) are never
+    /// LRU-evicted and refuse `unload`.
+    pub pinned: bool,
+    /// Metrics snapshot, for loaded models.
+    pub snapshot: Option<MetricsSnapshot>,
+}
+
+/// A loaded model: its name, the handle work is submitted through, and
+/// (for registry-owned stacks) the coordinator whose `Drop` performs the
+/// shutdown drain + executor join when the last user releases the entry.
+struct ModelEntry {
+    name: String,
+    handle: CoordinatorHandle,
+    /// `None` for adopted (externally-owned) entries. Held only so that
+    /// dropping the entry shuts the executor down after draining.
+    _coordinator: Option<Coordinator>,
+    pinned: bool,
+}
+
+struct Inner {
+    sources: HashMap<String, ModelSource>,
+    entries: HashMap<String, Arc<ModelEntry>>,
+    /// Non-pinned loaded names, least-recently-used first.
+    lru: Vec<String>,
+    /// Names mid-load (lock released during the engine build; other
+    /// users of the same name wait on the condvar instead of double-
+    /// loading).
+    loading: HashSet<String>,
+    default_name: Option<String>,
+}
+
+/// The registry. Cheap to share behind an `Arc`; all methods take
+/// `&self`.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    loaded_cv: Condvar,
+}
+
+fn touch_lru(lru: &mut Vec<String>, name: &str) {
+    if let Some(pos) = lru.iter().position(|n| n == name) {
+        let n = lru.remove(pos);
+        lru.push(n);
+    }
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new(cfg: RegistryConfig) -> Self {
+        ModelRegistry {
+            cfg,
+            inner: Mutex::new(Inner {
+                sources: HashMap::new(),
+                entries: HashMap::new(),
+                lru: Vec::new(),
+                loading: HashSet::new(),
+                default_name: None,
+            }),
+            loaded_cv: Condvar::new(),
+        }
+    }
+
+    /// A registry wrapping one externally-owned coordinator as the
+    /// pinned default model — the single-model compatibility path
+    /// (`Server::start(handle, …)`). The caller keeps ownership of the
+    /// [`Coordinator`]; the registry never evicts or unloads it.
+    pub fn with_default_handle(handle: CoordinatorHandle) -> Self {
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        reg.adopt("default", handle);
+        reg
+    }
+
+    /// Adopt an externally-owned coordinator as a pinned, always-loaded
+    /// model. Becomes the default if none is set.
+    pub fn adopt(&self, name: &str, handle: CoordinatorHandle) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.insert(
+            name.to_string(),
+            Arc::new(ModelEntry {
+                name: name.to_string(),
+                handle,
+                _coordinator: None,
+                pinned: true,
+            }),
+        );
+        if inner.default_name.is_none() {
+            inner.default_name = Some(name.to_string());
+        }
+    }
+
+    /// Register a model source under `name` (replacing any previous
+    /// source; an already-loaded stack keeps serving the old engine
+    /// until its next reload). The first registered name becomes the
+    /// default model.
+    pub fn register(&self, name: &str, source: ModelSource) -> Result<()> {
+        if name.is_empty() || name.len() > 255 {
+            anyhow::bail!("model name must be 1..=255 bytes, got {}", name.len());
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.sources.insert(name.to_string(), source);
+        if inner.default_name.is_none() {
+            inner.default_name = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Register a `.sqnn` container path.
+    pub fn register_path(&self, name: &str, path: impl Into<PathBuf>) -> Result<()> {
+        self.register(name, ModelSource::Path(path.into()))
+    }
+
+    /// Register an in-memory model.
+    pub fn register_model(&self, name: &str, model: SqnnModel) -> Result<()> {
+        self.register(name, ModelSource::Model(model))
+    }
+
+    /// Register an engine factory.
+    pub fn register_factory<F>(&self, name: &str, factory: F) -> Result<()>
+    where
+        F: Fn() -> Result<SqnnEngine> + Send + Sync + 'static,
+    {
+        self.register(name, ModelSource::Factory(Arc::new(factory)))
+    }
+
+    /// Route bare (unnamed) requests to `name` from now on.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.sources.contains_key(name) && !inner.entries.contains_key(name) {
+            anyhow::bail!("cannot default to unregistered model '{name}'");
+        }
+        inner.default_name = Some(name.to_string());
+        Ok(())
+    }
+
+    /// The current default model name.
+    pub fn default_name(&self) -> Option<String> {
+        self.inner.lock().unwrap().default_name.clone()
+    }
+
+    /// Load `name` now (idempotent; touches the LRU). `infer`/`submit`
+    /// also load on demand, so this exists for warm-up and the `L`
+    /// opcode.
+    pub fn load(&self, name: &str) -> std::result::Result<(), RegistryError> {
+        self.entry(Some(name)).map(|_| ())
+    }
+
+    /// Unload `name`: its stack is removed from the registry and shut
+    /// down through the drain (requests already admitted are answered
+    /// first; in-flight holders finish on their own clone of the entry).
+    /// Returns whether a loaded stack was actually torn down. The model
+    /// stays registered and reloads on the next use.
+    pub fn unload(&self, name: &str) -> std::result::Result<bool, RegistryError> {
+        let removed = {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(e) = inner.entries.get(name) {
+                if e.pinned {
+                    return Err(RegistryError::Other(anyhow!(
+                        "model '{name}' is pinned and cannot be unloaded"
+                    )));
+                }
+            } else if !inner.sources.contains_key(name) {
+                return Err(RegistryError::Unknown(name.to_string()));
+            }
+            inner.lru.retain(|n| n != name);
+            inner.entries.remove(name)
+        };
+        // The drop happens outside the lock: it joins the executor after
+        // the shutdown drain, which must not block other models.
+        Ok(removed.is_some())
+    }
+
+    /// Non-blocking submit to `name` (`None` = default model), loading
+    /// it first if needed. `Ok` hands back the reply channel; a full
+    /// pending queue sheds with [`RegistryError::Busy`].
+    pub fn submit(
+        &self,
+        name: Option<&str>,
+        input: Vec<f32>,
+    ) -> std::result::Result<ReplyReceiver, RegistryError> {
+        let entry = self.entry(name)?;
+        match entry.handle.try_submit(input) {
+            Ok(rx) => Ok(rx),
+            Err(SubmitError::Busy) => Err(RegistryError::Busy(entry.name.clone())),
+            Err(SubmitError::Down) => {
+                Err(RegistryError::Other(anyhow!("model '{}' executor is down", entry.name)))
+            }
+        }
+    }
+
+    /// Blocking inference against `name` (`None` = default model).
+    pub fn infer(
+        &self,
+        name: Option<&str>,
+        input: Vec<f32>,
+    ) -> std::result::Result<Vec<f32>, RegistryError> {
+        let rx = self.submit(name, input)?;
+        match rx.recv() {
+            Ok(res) => res.map_err(RegistryError::Other),
+            Err(_) => Err(RegistryError::Other(anyhow!("reply channel dropped"))),
+        }
+    }
+
+    /// Metrics snapshot for a loaded model (`None` = default). Does not
+    /// touch the LRU — observability must not keep a model hot.
+    pub fn snapshot(
+        &self,
+        name: Option<&str>,
+    ) -> std::result::Result<MetricsSnapshot, RegistryError> {
+        let inner = self.inner.lock().unwrap();
+        let name = resolve_name(&inner, name)?;
+        match inner.entries.get(&name) {
+            Some(e) => Ok(e.handle.metrics().snapshot()),
+            None if inner.sources.contains_key(&name) => {
+                Err(RegistryError::Other(anyhow!("model '{name}' is not loaded")))
+            }
+            None => Err(RegistryError::Unknown(name)),
+        }
+    }
+
+    /// [`ModelRegistry::list`] as a JSON array — the `P` opcode body and
+    /// the `sqnn models` output. Loaded models embed their full metrics
+    /// snapshot under `"metrics"`; unloaded ones carry `"metrics":null`.
+    pub fn list_json(&self) -> String {
+        let mut out = String::from("[");
+        for (i, st) in self.list().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"loaded\":{},\"default\":{},\"pinned\":{},\"metrics\":{}}}",
+                json_escape(&st.name),
+                st.loaded,
+                st.default,
+                st.pinned,
+                st.snapshot.as_ref().map(|s| s.to_json()).unwrap_or_else(|| "null".to_string()),
+            ));
+        }
+        out.push(']');
+        out
+    }
+
+    /// Status of every registered/adopted model, sorted by name.
+    pub fn list(&self) -> Vec<ModelStatus> {
+        let inner = self.inner.lock().unwrap();
+        let mut names: Vec<String> =
+            inner.sources.keys().chain(inner.entries.keys()).cloned().collect();
+        names.sort();
+        names.dedup();
+        names
+            .into_iter()
+            .map(|name| {
+                let entry = inner.entries.get(&name);
+                ModelStatus {
+                    loaded: entry.is_some(),
+                    default: inner.default_name.as_deref() == Some(name.as_str()),
+                    pinned: entry.map(|e| e.pinned).unwrap_or(false),
+                    snapshot: entry.map(|e| e.handle.metrics().snapshot()),
+                    name,
+                }
+            })
+            .collect()
+    }
+
+    /// Names of currently loaded models, sorted.
+    pub fn loaded_names(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut names: Vec<String> = inner.entries.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Whether `name` currently has a loaded stack.
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(name)
+    }
+
+    /// Get (loading if necessary) the entry for `name`, touching the LRU.
+    fn entry(
+        &self,
+        name: Option<&str>,
+    ) -> std::result::Result<Arc<ModelEntry>, RegistryError> {
+        let mut evicted: Vec<Arc<ModelEntry>> = Vec::new();
+        let result = self.entry_impl(name, &mut evicted);
+        // Evicted stacks are dropped outside the lock: each drop runs the
+        // shutdown drain and joins an executor thread.
+        drop(evicted);
+        result
+    }
+
+    fn entry_impl(
+        &self,
+        name: Option<&str>,
+        evicted: &mut Vec<Arc<ModelEntry>>,
+    ) -> std::result::Result<Arc<ModelEntry>, RegistryError> {
+        let mut inner = self.inner.lock().unwrap();
+        let name = resolve_name(&inner, name)?;
+        loop {
+            if let Some(e) = inner.entries.get(&name).cloned() {
+                touch_lru(&mut inner.lru, &name);
+                return Ok(e);
+            }
+            if !inner.sources.contains_key(&name) {
+                return Err(RegistryError::Unknown(name));
+            }
+            if inner.loading.contains(&name) {
+                // Someone else is building this engine; wait for them.
+                inner = self.loaded_cv.wait(inner).unwrap();
+                continue;
+            }
+            inner.loading.insert(name.clone());
+            break;
+        }
+        let source = inner.sources.get(&name).cloned().unwrap();
+        drop(inner);
+
+        // The engine build happens without the lock — loading one model
+        // must not stall serving on every other model.
+        let built = self.spawn_stack(&name, source);
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.loading.remove(&name);
+        let out = match built {
+            Ok(coordinator) => {
+                let entry = Arc::new(ModelEntry {
+                    name: name.clone(),
+                    handle: coordinator.handle.clone(),
+                    _coordinator: Some(coordinator),
+                    pinned: false,
+                });
+                inner.entries.insert(name.clone(), entry.clone());
+                inner.lru.push(name);
+                if self.cfg.max_loaded > 0 {
+                    while inner.lru.len() > self.cfg.max_loaded {
+                        let victim = inner.lru.remove(0);
+                        if let Some(e) = inner.entries.remove(&victim) {
+                            evicted.push(e);
+                        }
+                    }
+                }
+                Ok(entry)
+            }
+            Err(e) => Err(RegistryError::Other(e)),
+        };
+        drop(inner);
+        self.loaded_cv.notify_all();
+        out
+    }
+
+    /// Spawn the per-model serving stack (executor thread + engine).
+    fn spawn_stack(&self, name: &str, source: ModelSource) -> Result<Coordinator> {
+        let policy = self.cfg.policy;
+        let cap = self.cfg.queue_cap;
+        let opts = self.cfg.engine;
+        let buckets = self.cfg.buckets.clone();
+        let name = name.to_string();
+        match source {
+            ModelSource::Path(p) => Coordinator::spawn_with(policy, cap, move || {
+                let model = SqnnModel::load(&p)
+                    .with_context(|| format!("loading model '{name}' from {}", p.display()))?;
+                SqnnEngine::load_native(model, &buckets, opts)
+            }),
+            ModelSource::Model(m) => Coordinator::spawn_with(policy, cap, move || {
+                SqnnEngine::load_native(m, &buckets, opts)
+            }),
+            ModelSource::Factory(f) => Coordinator::spawn_with(policy, cap, move || f()),
+        }
+    }
+}
+
+/// Minimal JSON string escaping for model names (quotes, backslashes,
+/// control bytes — names are capped at 255 bytes at registration).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn resolve_name(
+    inner: &Inner,
+    name: Option<&str>,
+) -> std::result::Result<String, RegistryError> {
+    match name {
+        Some(n) => Ok(n.to_string()),
+        None => inner
+            .default_name
+            .clone()
+            .ok_or_else(|| RegistryError::Unknown("<default>".to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::{synthetic_layer_graph, SynthEncrypted};
+
+    fn toy(seed: u64) -> SqnnModel {
+        synthetic_layer_graph(
+            seed,
+            8,
+            &[SynthEncrypted { out_dim: 6, ..Default::default() }],
+            &[],
+            3,
+        )
+    }
+
+    fn small_registry(max_loaded: usize) -> ModelRegistry {
+        ModelRegistry::new(RegistryConfig {
+            max_loaded,
+            buckets: vec![1, 4],
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn register_load_infer_and_default_routing() {
+        let reg = small_registry(4);
+        reg.register_model("a", toy(1)).unwrap();
+        reg.register_model("b", toy(2)).unwrap();
+        assert_eq!(reg.default_name().as_deref(), Some("a"), "first registered is default");
+        let via_default = reg.infer(None, vec![0.1; 8]).unwrap();
+        let via_name = reg.infer(Some("a"), vec![0.1; 8]).unwrap();
+        assert_eq!(via_default, via_name, "default routing must hit the same model");
+        assert!(reg.is_loaded("a"));
+        assert!(!reg.is_loaded("b"), "models load on demand, not at register");
+        match reg.infer(Some("nope"), vec![0.1; 8]) {
+            Err(RegistryError::Unknown(n)) => assert_eq!(n, "nope"),
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let reg = small_registry(2);
+        for (name, seed) in [("a", 1u64), ("b", 2), ("c", 3)] {
+            reg.register_model(name, toy(seed)).unwrap();
+        }
+        reg.load("a").unwrap();
+        reg.load("b").unwrap();
+        assert_eq!(reg.loaded_names(), vec!["a", "b"]);
+        // Touch a so b becomes the LRU victim.
+        reg.infer(Some("a"), vec![0.1; 8]).unwrap();
+        reg.load("c").unwrap();
+        assert_eq!(reg.loaded_names(), vec!["a", "c"], "b was least-recently used");
+        // b reloads on demand.
+        reg.infer(Some("b"), vec![0.1; 8]).unwrap();
+        assert!(reg.is_loaded("b"));
+        assert_eq!(reg.loaded_names().len(), 2, "LRU bound holds through reload");
+    }
+
+    #[test]
+    fn unload_and_pinned_semantics() {
+        let reg = small_registry(4);
+        reg.register_model("a", toy(1)).unwrap();
+        assert!(!reg.unload("a").unwrap(), "unloading an unloaded model is a no-op");
+        reg.load("a").unwrap();
+        assert!(reg.unload("a").unwrap());
+        assert!(!reg.is_loaded("a"));
+        // Still registered: serves again on demand.
+        assert_eq!(reg.infer(Some("a"), vec![0.2; 8]).unwrap().len(), 3);
+        match reg.unload("ghost") {
+            Err(RegistryError::Unknown(_)) => {}
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+        // Adopted handles are pinned.
+        let c = Coordinator::spawn(BatchPolicy::default(), || {
+            SqnnEngine::load_native(toy(9), &[4], EngineOptions::default())
+        })
+        .unwrap();
+        reg.adopt("pinned", c.handle.clone());
+        assert!(reg.unload("pinned").is_err(), "pinned entries refuse unload");
+        let st = reg.list();
+        let p = st.iter().find(|s| s.name == "pinned").unwrap();
+        assert!(p.pinned && p.loaded);
+    }
+
+    #[test]
+    fn list_json_shape_and_escaping() {
+        let reg = small_registry(4);
+        reg.register_model("plain", toy(1)).unwrap();
+        reg.register_model("quo\"te", toy(2)).unwrap();
+        reg.infer(Some("plain"), vec![0.1; 8]).unwrap();
+        let json = reg.list_json();
+        assert!(json.starts_with('[') && json.ends_with(']'), "{json}");
+        assert!(json.contains("\"name\":\"plain\""), "{json}");
+        assert!(json.contains("\"name\":\"quo\\\"te\""), "{json}");
+        assert!(json.contains("\"loaded\":true"), "{json}");
+        assert!(json.contains("\"metrics\":null"), "{json}");
+        assert!(json.contains("\"requests\":1"), "{json}");
+    }
+
+    #[test]
+    fn list_reports_default_loaded_and_metrics() {
+        let reg = small_registry(4);
+        reg.register_model("a", toy(1)).unwrap();
+        reg.register_model("b", toy(2)).unwrap();
+        reg.infer(Some("a"), vec![0.1; 8]).unwrap();
+        let st = reg.list();
+        assert_eq!(st.len(), 2);
+        let a = st.iter().find(|s| s.name == "a").unwrap();
+        let b = st.iter().find(|s| s.name == "b").unwrap();
+        assert!(a.default && a.loaded);
+        assert_eq!(a.snapshot.as_ref().unwrap().requests, 1);
+        assert!(!b.default && !b.loaded && b.snapshot.is_none());
+    }
+}

@@ -21,7 +21,7 @@ use sqnn_xor::compress::{
 };
 use sqnn_xor::coordinator::{
     compress_bundle, compress_bundle_with, read_bundle_meta, BatchPolicy, Coordinator,
-    DecodeMode, EngineOptions, KernelChoice, SqnnEngine,
+    DecodeMode, EngineOptions, KernelChoice, ModelRegistry, RegistryConfig, SqnnEngine,
 };
 use sqnn_xor::io::npy::read_npy;
 use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
@@ -29,7 +29,7 @@ use sqnn_xor::models::synthetic_dense_graph;
 use sqnn_xor::prune::PruneMethod;
 use sqnn_xor::quant::QuantMethod;
 use sqnn_xor::runtime::Runtime;
-use sqnn_xor::server::{Client, Server};
+use sqnn_xor::server::{Client, Server, ServerConfig};
 
 fn main() {
     if let Err(e) = run() {
@@ -87,6 +87,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(&flags),
         "serve" => cmd_serve(&flags),
         "stats" => cmd_stats(&flags),
+        "models" => cmd_models(&flags),
         "demo" => cmd_demo(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -120,8 +121,19 @@ fn print_help() {
                                                         settable via SQNN_ENCODE_THREADS)\n\
            verify    --artifacts DIR --model M.sqnn     lossless + served-accuracy check\n\
            info      --model M.sqnn                     container statistics\n\
-           serve     --artifacts DIR --model M.sqnn --port 7433   TCP inference server\n\
+           serve     TCP inference server, two modes:\n\
+                       --artifacts DIR --model M.sqnn   single model (pinned default)\n\
+                       --models a=a.sqnn,b=b.sqnn       multi-model registry with hot\n\
+                                                        load/unload (L/U/P opcodes)\n\
+                     registry knobs (multi-model mode):\n\
+                       --max-loaded N (4)   LRU bound on loaded engines\n\
+                       --queue-cap N (1024) per-model pending queue (sheds E busy)\n\
+                       --default-model NAME --buckets 1,8,32\n\
+                     tier shape (both modes):\n\
+                       --port 7433  --acceptors N (2)  --workers N (0 = auto)\n\
+                       --max-conns N (1024)  --max-wait-ms MS (2)\n\
            stats     --addr HOST:PORT                   metrics snapshot from a running server\n\
+           models    --addr HOST:PORT                   per-model status + metrics (JSON)\n\
            demo      --artifacts DIR                    compress + serve a demo batch\n\
          \n\
          decode knobs (verify/serve/demo):\n\
@@ -349,29 +361,104 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Serving-tier shape from the CLI flags (shared by both serve modes).
+fn server_config(flags: &HashMap<String, String>) -> Result<ServerConfig> {
+    Ok(ServerConfig {
+        acceptors: flag(flags, "acceptors", "2").parse().context("bad --acceptors")?,
+        workers: flag(flags, "workers", "0").parse().context("bad --workers")?,
+        max_conns: flag(flags, "max-conns", "1024").parse().context("bad --max-conns")?,
+    })
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let artifacts = flag(flags, "artifacts", "artifacts").to_string();
-    let model_path = flag(flags, "model", "model.sqnn").to_string();
     let port: u16 = flag(flags, "port", "7433").parse().context("bad --port")?;
-    let meta = read_bundle_meta(&artifacts)?;
-    let policy = BatchPolicy {
-        max_batch: meta.batch_sizes.iter().copied().max().unwrap_or(32),
-        max_wait: std::time::Duration::from_millis(
-            flag(flags, "max-wait-ms", "2").parse().context("bad --max-wait-ms")?,
-        ),
-    };
-    let batch_sizes = meta.batch_sizes.clone();
+    let bind = format!("127.0.0.1:{port}");
+    let max_wait = std::time::Duration::from_millis(
+        flag(flags, "max-wait-ms", "2").parse().context("bad --max-wait-ms")?,
+    );
     let opts = engine_options(flags)?;
-    let coordinator = Coordinator::spawn(policy, move || {
-        let runtime = Runtime::cpu()?;
-        let model = SqnnModel::load(&model_path)?;
-        SqnnEngine::load_with(&runtime, model, &artifacts, &batch_sizes, opts)
-    })?;
-    let server = Server::start(coordinator.handle.clone(), &format!("127.0.0.1:{port}"))?;
-    println!("serving on 127.0.0.1:{} (Ctrl-C to stop)", server.port);
+    let cfg = server_config(flags)?;
+
+    if let Some(models) = flags.get("models") {
+        // Multi-model registry mode: --models a=a.sqnn,b=b.sqnn with an
+        // LRU bound over loaded engines and per-model admission control.
+        let buckets: Vec<usize> = flag(flags, "buckets", "1,8,32")
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .context("bad --buckets (expected e.g. 1,8,32)")?;
+        let registry = ModelRegistry::new(RegistryConfig {
+            max_loaded: flag(flags, "max-loaded", "4").parse().context("bad --max-loaded")?,
+            queue_cap: flag(flags, "queue-cap", "1024").parse().context("bad --queue-cap")?,
+            policy: BatchPolicy {
+                max_batch: buckets.iter().copied().max().unwrap_or(32),
+                max_wait,
+            },
+            engine: opts,
+            buckets,
+        });
+        for spec in models.split(',') {
+            let (name, path) = spec
+                .split_once('=')
+                .with_context(|| format!("bad --models entry '{spec}' (expected name=path)"))?;
+            registry.register_path(name.trim(), path.trim())?;
+        }
+        if let Some(name) = flags.get("default-model") {
+            registry.set_default(name)?;
+        }
+        let registry = std::sync::Arc::new(registry);
+        // Warm the default model so the first request pays no load.
+        if let Some(name) = registry.default_name() {
+            registry.load(&name).map_err(|e| anyhow::anyhow!("warm-up load failed: {e}"))?;
+        }
+        let server = Server::start_registry(registry.clone(), &bind, cfg)?;
+        println!(
+            "serving {} model(s) on 127.0.0.1:{} (default '{}', max-loaded {}; Ctrl-C to stop)",
+            registry.list().len(),
+            server.port,
+            registry.default_name().unwrap_or_default(),
+            flag(flags, "max-loaded", "4"),
+        );
+        serve_forever(&server)
+    } else {
+        // Legacy single-model mode: an artifacts bundle + one container,
+        // served as the pinned default model.
+        let artifacts = flag(flags, "artifacts", "artifacts").to_string();
+        let model_path = flag(flags, "model", "model.sqnn").to_string();
+        let meta = read_bundle_meta(&artifacts)?;
+        let policy = BatchPolicy {
+            max_batch: meta.batch_sizes.iter().copied().max().unwrap_or(32),
+            max_wait,
+        };
+        let batch_sizes = meta.batch_sizes.clone();
+        let coordinator = Coordinator::spawn(policy, move || {
+            let runtime = Runtime::cpu()?;
+            let model = SqnnModel::load(&model_path)?;
+            SqnnEngine::load_with(&runtime, model, &artifacts, &batch_sizes, opts)
+        })?;
+        let registry =
+            std::sync::Arc::new(ModelRegistry::with_default_handle(coordinator.handle.clone()));
+        let server = Server::start_registry(registry, &bind, cfg)?;
+        println!("serving on 127.0.0.1:{} (Ctrl-C to stop)", server.port);
+        // `coordinator` stays in scope: the pinned default model's
+        // executor must outlive the serve loop.
+        serve_forever(&server)
+    }
+}
+
+/// Park the main thread forever; the server's own threads do the work.
+fn serve_forever(_server: &Server) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_models(flags: &HashMap<String, String>) -> Result<()> {
+    let default_addr = format!("127.0.0.1:{}", flag(flags, "port", "7433"));
+    let addr = flags.get("addr").cloned().unwrap_or(default_addr);
+    let mut client = Client::connect(&addr)?;
+    println!("{}", client.models_json()?);
+    Ok(())
 }
 
 fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {

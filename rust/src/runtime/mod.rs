@@ -8,6 +8,11 @@
 //!   paper's "decoding through XOR-gate network … in a parallel manner"
 //!   (§3.1): every worker decodes its own contiguous tile of output rows
 //!   at the same fixed rate, so load balance is perfect by construction.
+//! * [`pool`] — the serving tier's concurrency substrate: a bounded
+//!   MPMC [`pool::BlockQueue`] with non-blocking shed-on-full pushes and
+//!   a fixed [`pool::WorkerPool`] of named threads, in the spirit of
+//!   prisirv's Job/BlockQueue pool. The TCP server's sharded acceptors
+//!   hand connections to pool workers through it.
 //! * [`pjrt`] (feature `xla`) — the PJRT runtime: load AOT-lowered HLO
 //!   text, compile once, execute many. Requires the vendored `xla` crate
 //!   (xla_extension 0.5.1, CPU PJRT); see `rust/Cargo.toml` for how to
@@ -17,6 +22,7 @@
 //!   backend in `coordinator::engine`.
 
 pub mod parallel;
+pub mod pool;
 
 #[cfg(feature = "xla")]
 pub mod pjrt;

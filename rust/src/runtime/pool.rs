@@ -1,0 +1,234 @@
+//! Fixed worker pool + bounded blocking queue — the serving tier's
+//! concurrency substrate (in the spirit of prisirv's `threads.rs`
+//! Job/BlockQueue pool: a fixed set of named threads pulling work from a
+//! bounded queue, no per-job thread spawn).
+//!
+//! Two pieces:
+//!
+//! * [`BlockQueue`] — a bounded MPMC queue (mutex + condvar; the offline
+//!   image has no crossbeam). `try_push` is the admission-control edge:
+//!   it never blocks, and a full or closed queue hands the item back so
+//!   the caller can shed it (`E busy`) instead of stalling or dying.
+//! * [`WorkerPool`] — N named threads each running one long-lived worker
+//!   function. The server's workers multiplex many connections each, so
+//!   hundreds of concurrent clients are served by a handful of threads —
+//!   the accept path can never exhaust thread resources the way the old
+//!   thread-per-connection `expect("spawn conn thread")` could.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a non-blocking push was refused (the item is handed back).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity — shed the item.
+    Full(T),
+    /// The queue was closed — no worker will ever pop again.
+    Closed(T),
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer/multi-consumer FIFO queue.
+pub struct BlockQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> BlockQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        BlockQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Push without blocking; a full or closed queue refuses the item.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(PushError::Closed(item));
+        }
+        if q.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop without blocking. Items still queued when the queue closes are
+    /// drained, not dropped — callers own their cleanup.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Pop, waiting up to `timeout` for an item. Returns `None` on
+    /// timeout or when the queue is closed *and* drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(q, timeout).unwrap();
+            q = guard;
+            if res.timed_out() {
+                return q.items.pop_front();
+            }
+        }
+    }
+
+    /// Close the queue: further pushes fail, blocked poppers wake.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Whether [`BlockQueue::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A fixed set of named worker threads, each running one long-lived
+/// worker function until it returns. Dropping the pool joins every
+/// worker (ask them to exit first — e.g. by closing their queue).
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers named `{name}-{i}`, each running `f(i)` once.
+    /// The worker function is the whole lifetime of the thread: loop
+    /// inside it, and return when the pool should wind down.
+    pub fn spawn<F>(name: &str, n: usize, f: F) -> std::io::Result<WorkerPool>
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(n.max(1));
+        for i in 0..n.max(1) {
+            let f = f.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))?,
+            );
+        }
+        Ok(WorkerPool { handles })
+    }
+
+    /// Worker-thread count.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Whether the pool holds no threads (never true for a spawned pool).
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Join every worker. Signal them to exit first or this blocks.
+    pub fn join(mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn bounded_push_sheds_when_full() {
+        let q = BlockQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        // FIFO order.
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn closed_queue_refuses_pushes_and_drains_pops() {
+        let q = BlockQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.try_push(8) {
+            Err(PushError::Closed(8)) => {}
+            other => panic!("expected Closed(8), got {other:?}"),
+        }
+        // Items queued before close are drained, not dropped.
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(7));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q = Arc::new(BlockQueue::<u32>::new(1));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(50));
+        q.close();
+        assert_eq!(t.join().unwrap(), None, "close must wake the popper promptly");
+    }
+
+    #[test]
+    fn pool_runs_every_worker_and_joins() {
+        let q = Arc::new(BlockQueue::new(64));
+        for i in 0..40 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        let done = Arc::new(AtomicUsize::new(0));
+        let (q2, done2) = (q.clone(), done.clone());
+        let pool = WorkerPool::spawn("test-worker", 4, move |_| {
+            while let Some(_item) = q2.pop_timeout(Duration::from_millis(10)) {
+                done2.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert_eq!(pool.len(), 4);
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 40, "every queued item processed");
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal blocking client (tests, examples, `sqnn client` / `sqnn
+//! stats` / `sqnn models`). One request in flight per connection, like
+//! the server expects.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use super::conn::NAMED_INFER_FLAG;
+
+/// Blocking framed-protocol client.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// Infer against the server's default model.
+    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.infer_named(None, input)
+    }
+
+    /// Infer, optionally against a named model (bit 31 of the count word
+    /// flags the in-band name; bare requests stay wire-identical to the
+    /// single-model protocol).
+    pub fn infer_named(&mut self, model: Option<&str>, input: &[f32]) -> Result<Vec<f32>> {
+        // One buffered write per request: hundreds of tiny write()s
+        // would hit Nagle + syscall overhead and dominate latency.
+        let mut msg = Vec::with_capacity(8 + input.len() * 4);
+        msg.push(b'I');
+        match model {
+            None => msg.extend_from_slice(&(input.len() as u32).to_le_bytes()),
+            Some(name) => {
+                anyhow::ensure!(
+                    !name.is_empty() && name.len() <= 255,
+                    "model name must be 1..=255 bytes"
+                );
+                msg.extend_from_slice(&(input.len() as u32 | NAMED_INFER_FLAG).to_le_bytes());
+                msg.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                msg.extend_from_slice(name.as_bytes());
+            }
+        }
+        for v in input {
+            msg.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&msg)?;
+        let mut op = [0u8; 1];
+        self.stream.read_exact(&mut op)?;
+        let mut nb = [0u8; 4];
+        self.stream.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        // Only `O` (logits: n is a float count) and `E` (error: n is a
+        // byte length) are valid replies; anything else means a desynced
+        // or incompatible peer, and parsing its payload as f32 logits
+        // would silently corrupt results.
+        match op[0] {
+            b'O' => {
+                let mut raw = vec![0u8; n * 4];
+                self.stream.read_exact(&mut raw)?;
+                Ok(raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect())
+            }
+            b'E' => {
+                let mut raw = vec![0u8; n];
+                self.stream.read_exact(&mut raw)?;
+                anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw));
+            }
+            other => anyhow::bail!("unexpected infer reply opcode {other}"),
+        }
+    }
+
+    /// Ask the server to load a model now (`L`). Returns the ack text.
+    pub fn load(&mut self, name: &str) -> Result<String> {
+        self.control(b'L', name)
+    }
+
+    /// Ask the server to unload a model (`U`). Returns the ack text.
+    pub fn unload(&mut self, name: &str) -> Result<String> {
+        self.control(b'U', name)
+    }
+
+    fn control(&mut self, op: u8, name: &str) -> Result<String> {
+        anyhow::ensure!(
+            !name.is_empty() && name.len() <= 255,
+            "model name must be 1..=255 bytes"
+        );
+        let mut msg = Vec::with_capacity(3 + name.len());
+        msg.push(op);
+        msg.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        msg.extend_from_slice(name.as_bytes());
+        self.stream.write_all(&msg)?;
+        let (rop, raw) = self.read_framed()?;
+        match rop {
+            b'K' => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            other => anyhow::bail!("unexpected control reply opcode {other}"),
+        }
+    }
+
+    /// Model list (`P`): JSON array of per-model status + metrics.
+    pub fn models_json(&mut self) -> Result<String> {
+        self.stream.write_all(b"P")?;
+        let (op, raw) = self.read_framed()?;
+        match op {
+            b'P' => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            other => anyhow::bail!("unexpected models reply opcode {other}"),
+        }
+    }
+
+    /// Legacy bare-framed stats (`S`: u32 len + JSON, no opcode byte).
+    pub fn stats_json(&mut self) -> Result<String> {
+        self.stream.write_all(b"S")?;
+        let mut nb = [0u8; 4];
+        self.stream.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        let mut raw = vec![0u8; n];
+        self.stream.read_exact(&mut raw)?;
+        Ok(String::from_utf8_lossy(&raw).into_owned())
+    }
+
+    /// Framed metrics snapshot (`M` opcode): the reply carries an opcode
+    /// byte like `O`/`E`, so errors are distinguishable from payloads.
+    /// Returns the snapshot JSON line (`sqnn stats` prints it verbatim).
+    pub fn stats(&mut self) -> Result<String> {
+        self.stream.write_all(b"M")?;
+        let (op, raw) = self.read_framed()?;
+        match op {
+            b'M' => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            other => anyhow::bail!("unexpected stats reply opcode {other}"),
+        }
+    }
+
+    fn read_framed(&mut self) -> Result<(u8, Vec<u8>)> {
+        let mut op = [0u8; 1];
+        self.stream.read_exact(&mut op)?;
+        let mut nb = [0u8; 4];
+        self.stream.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        let mut raw = vec![0u8; n];
+        self.stream.read_exact(&mut raw)?;
+        Ok((op[0], raw))
+    }
+}

@@ -1,0 +1,416 @@
+//! Per-connection incremental frame state machine.
+//!
+//! Workers multiplex many nonblocking connections each, so nothing here
+//! may block: reads accumulate into `rbuf` until the current stage's
+//! byte count arrives, writes drain from `wbuf` as the socket accepts
+//! them, and an in-flight inference is a `ReplyReceiver` polled with
+//! `try_recv`. One request is outstanding per connection at a time —
+//! the next frame is not read until the previous reply is queued — so
+//! reply ordering is trivially correct and a connection can never
+//! interleave two models' responses.
+//!
+//! Timeouts: a *started* frame (or an unread reply) that makes no
+//! progress for [`FRAME_STALL_TIMEOUT`] closes the connection — that is
+//! an abandoned peer, and it must not pin a multiplexing slot forever.
+//! Waiting on the engine is never a stall: admission control bounds
+//! that wait by queue depth, not wall clock.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::ReplyReceiver;
+use crate::coordinator::registry::ModelRegistry;
+
+/// How long a started frame (or an unflushed reply) may sit with no
+/// bytes moving before the connection is dropped. Distinguishes a slow
+/// peer (pauses between chunks are fine) from an abandoned truncated
+/// frame.
+pub(crate) const FRAME_STALL_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Hard cap on `I` payload size, pre-allocation guard.
+const MAX_INFER_FLOATS: usize = 1 << 20;
+
+/// Bit 31 of the `I` float-count word flags an in-band model name
+/// (u16 length + UTF-8 bytes) between the count and the floats. Safe to
+/// steal: the float count is capped at [`MAX_INFER_FLOATS`] anyway.
+pub(crate) const NAMED_INFER_FLAG: u32 = 1 << 31;
+
+/// RAII live-connection counter: constructed at accept, decremented on
+/// drop wherever the connection dies (worker close, queue drain, shed).
+pub(crate) struct LiveGuard(Arc<AtomicUsize>);
+
+impl LiveGuard {
+    pub(crate) fn new(counter: Arc<AtomicUsize>) -> Self {
+        counter.fetch_add(1, Ordering::SeqCst);
+        LiveGuard(counter)
+    }
+}
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// What the connection is waiting for; `need` (on [`Conn`]) is how many
+/// bytes complete the stage.
+enum Stage {
+    /// Between frames: one opcode byte.
+    Op,
+    /// `I` float-count word (4 bytes).
+    IHdr,
+    /// Named-infer name length (2 bytes); `n` is the float count.
+    INameLen { n: usize },
+    /// Named-infer name bytes.
+    IName { n: usize },
+    /// Infer payload floats.
+    IBody { model: Option<String> },
+    /// `L`/`U` name length (2 bytes).
+    CtlNameLen { op: u8 },
+    /// `L`/`U` name bytes.
+    CtlName { op: u8 },
+}
+
+/// Result of one [`Conn::poll`] tick.
+pub(crate) struct Poll {
+    /// Keep the connection (false → drop it).
+    pub keep: bool,
+    /// Any bytes or replies moved (workers idle-sleep when nothing did).
+    pub progressed: bool,
+}
+
+/// One multiplexed client connection.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    stage: Stage,
+    /// Bytes that complete the current stage.
+    need: usize,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pending: Option<ReplyReceiver>,
+    last_progress: Instant,
+    close_after_flush: bool,
+    _live: LiveGuard,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream, live: Arc<AtomicUsize>) -> std::io::Result<Conn> {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true)?;
+        Ok(Conn {
+            stream,
+            stage: Stage::Op,
+            need: 1,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: None,
+            last_progress: Instant::now(),
+            close_after_flush: false,
+            _live: LiveGuard::new(live),
+        })
+    }
+
+    /// Whether the connection still owes its peer something (an engine
+    /// reply or unflushed bytes). Stop-time grace keeps exactly these.
+    pub(crate) fn in_flight(&self) -> bool {
+        self.pending.is_some() || self.wpos < self.wbuf.len()
+    }
+
+    /// Best-effort `E busy` + drop, for connections shed at admission
+    /// (the connection queue refused them).
+    pub(crate) fn reject_busy(mut self) {
+        let mut out = Vec::new();
+        push_framed(&mut out, b'E', b"busy: connection limit reached");
+        let _ = self.stream.write_all(&out);
+    }
+
+    /// One nonblocking tick: collect a finished reply, read/process as
+    /// many frames as the socket has bytes for, flush pending writes,
+    /// and check the stall clock.
+    pub(crate) fn poll(&mut self, registry: &ModelRegistry) -> Poll {
+        let mut progressed = false;
+
+        // 1. An in-flight inference whose reply arrived becomes bytes.
+        if let Some(rx) = &self.pending {
+            match rx.try_recv() {
+                Ok(Ok(logits)) => {
+                    push_logits(&mut self.wbuf, &logits);
+                    self.pending = None;
+                    progressed = true;
+                }
+                Ok(Err(e)) => {
+                    push_framed(&mut self.wbuf, b'E', format!("{e:#}").as_bytes());
+                    self.pending = None;
+                    progressed = true;
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    push_framed(&mut self.wbuf, b'E', b"executor dropped reply");
+                    self.pending = None;
+                    progressed = true;
+                }
+            }
+            if progressed {
+                self.last_progress = Instant::now();
+            }
+        }
+
+        // 2. Read and process frames (blocked while a reply is pending:
+        //    one outstanding request per connection).
+        if self.pending.is_none() && !self.close_after_flush {
+            let (p, keep) = self.read_step(registry);
+            progressed |= p;
+            if !keep {
+                return Poll { keep: false, progressed: true };
+            }
+        }
+
+        // 3. Drain the write buffer.
+        match self.flush() {
+            Ok(p) => progressed |= p,
+            Err(_) => return Poll { keep: false, progressed: true },
+        }
+        if self.close_after_flush && self.wbuf.is_empty() {
+            return Poll { keep: false, progressed: true };
+        }
+
+        // 4. Stall check: a half-read frame or half-written reply with
+        //    no movement for the timeout is an abandoned peer. A pending
+        //    engine reply is not a stall. Closed silently — a peer that
+        //    abandoned its own frame mid-write is not reading either, and
+        //    clients expect bare EOF after a truncated frame.
+        let mid_frame = !matches!(self.stage, Stage::Op) || !self.rbuf.is_empty();
+        let unflushed = self.wpos < self.wbuf.len();
+        if (mid_frame || unflushed)
+            && self.pending.is_none()
+            && self.last_progress.elapsed() >= FRAME_STALL_TIMEOUT
+        {
+            return Poll { keep: false, progressed: true };
+        }
+
+        Poll { keep: true, progressed }
+    }
+
+    /// Read toward the current stage's byte count and advance through as
+    /// many stages as the buffered bytes complete. Returns (progressed,
+    /// keep).
+    fn read_step(&mut self, registry: &ModelRegistry) -> (bool, bool) {
+        let mut progressed = false;
+        loop {
+            if self.pending.is_some() || self.close_after_flush {
+                break;
+            }
+            if self.rbuf.len() < self.need {
+                let mut tmp = [0u8; 4096];
+                let want = (self.need - self.rbuf.len()).min(tmp.len());
+                match self.stream.read(&mut tmp[..want]) {
+                    Ok(0) => return (progressed, false), // peer closed
+                    Ok(n) => {
+                        self.rbuf.extend_from_slice(&tmp[..n]);
+                        self.last_progress = Instant::now();
+                        progressed = true;
+                    }
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        break;
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return (progressed, false),
+                }
+            }
+            if self.rbuf.len() >= self.need {
+                self.advance(registry);
+                progressed = true;
+            }
+        }
+        (progressed, true)
+    }
+
+    /// Process one completed stage; queues replies and sets the next
+    /// stage. Protocol errors queue an `E` and arm `close_after_flush`.
+    fn advance(&mut self, registry: &ModelRegistry) {
+        let data = std::mem::take(&mut self.rbuf);
+        let stage = std::mem::replace(&mut self.stage, Stage::Op);
+        self.need = 1;
+        match stage {
+            Stage::Op => match data[0] {
+                b'I' => self.enter(Stage::IHdr, 4),
+                b'M' => match registry.snapshot(None) {
+                    Ok(s) => push_framed(&mut self.wbuf, b'M', s.to_json().as_bytes()),
+                    Err(e) => push_framed(&mut self.wbuf, b'E', e.to_string().as_bytes()),
+                },
+                b'S' => {
+                    // Legacy bare-framed stats: u32 len + JSON, no opcode
+                    // byte. Errors become a JSON object for old clients.
+                    let json = match registry.snapshot(None) {
+                        Ok(s) => s.to_json(),
+                        Err(e) => format!("{{\"error\":\"{e}\"}}"),
+                    };
+                    self.wbuf.extend_from_slice(&(json.len() as u32).to_le_bytes());
+                    self.wbuf.extend_from_slice(json.as_bytes());
+                }
+                b'P' => push_framed(&mut self.wbuf, b'P', registry.list_json().as_bytes()),
+                b'Q' => self.close_after_flush = true,
+                op @ (b'L' | b'U') => self.enter(Stage::CtlNameLen { op }, 2),
+                other => {
+                    push_framed(
+                        &mut self.wbuf,
+                        b'E',
+                        format!("unknown opcode {other}").as_bytes(),
+                    );
+                    self.close_after_flush = true;
+                }
+            },
+            Stage::IHdr => {
+                let raw = u32::from_le_bytes(data[..4].try_into().unwrap());
+                let named = raw & NAMED_INFER_FLAG != 0;
+                let n = (raw & !NAMED_INFER_FLAG) as usize;
+                if n > MAX_INFER_FLOATS {
+                    push_framed(
+                        &mut self.wbuf,
+                        b'E',
+                        format!("oversized request ({n} floats)").as_bytes(),
+                    );
+                    self.close_after_flush = true;
+                } else if named {
+                    self.enter(Stage::INameLen { n }, 2);
+                } else {
+                    self.enter(Stage::IBody { model: None }, n * 4);
+                }
+            }
+            Stage::INameLen { n } => {
+                let len = u16::from_le_bytes(data[..2].try_into().unwrap()) as usize;
+                if len == 0 || len > 255 {
+                    push_framed(
+                        &mut self.wbuf,
+                        b'E',
+                        format!("invalid model name length {len}").as_bytes(),
+                    );
+                    self.close_after_flush = true;
+                } else {
+                    self.enter(Stage::IName { n }, len);
+                }
+            }
+            Stage::IName { n } => match String::from_utf8(data) {
+                Ok(name) => self.enter(Stage::IBody { model: Some(name) }, n * 4),
+                Err(_) => {
+                    push_framed(&mut self.wbuf, b'E', b"model name is not UTF-8");
+                    self.close_after_flush = true;
+                }
+            },
+            Stage::IBody { model } => {
+                let input: Vec<f32> = data
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                match registry.submit(model.as_deref(), input) {
+                    Ok(rx) => self.pending = Some(rx),
+                    // Busy sheds and unknown-model/engine errors are
+                    // request-level: answer `E`, keep the connection.
+                    Err(e) => push_framed(&mut self.wbuf, b'E', e.to_string().as_bytes()),
+                }
+            }
+            Stage::CtlNameLen { op } => {
+                let len = u16::from_le_bytes(data[..2].try_into().unwrap()) as usize;
+                if len == 0 || len > 255 {
+                    push_framed(
+                        &mut self.wbuf,
+                        b'E',
+                        format!("invalid model name length {len}").as_bytes(),
+                    );
+                    self.close_after_flush = true;
+                } else {
+                    self.enter(Stage::CtlName { op }, len);
+                }
+            }
+            Stage::CtlName { op } => match String::from_utf8(data) {
+                Ok(name) => {
+                    let res = if op == b'L' {
+                        registry.load(&name).map(|()| format!("loaded '{name}'"))
+                    } else {
+                        registry.unload(&name).map(|was_loaded| {
+                            if was_loaded {
+                                format!("unloaded '{name}'")
+                            } else {
+                                format!("'{name}' was not loaded")
+                            }
+                        })
+                    };
+                    match res {
+                        Ok(msg) => push_framed(&mut self.wbuf, b'K', msg.as_bytes()),
+                        Err(e) => push_framed(&mut self.wbuf, b'E', e.to_string().as_bytes()),
+                    }
+                }
+                Err(_) => {
+                    push_framed(&mut self.wbuf, b'E', b"model name is not UTF-8");
+                    self.close_after_flush = true;
+                }
+            },
+        }
+    }
+
+    fn enter(&mut self, stage: Stage, need: usize) {
+        self.stage = stage;
+        self.need = need;
+    }
+
+    /// Nonblocking write of whatever the socket will take.
+    fn flush(&mut self) -> std::io::Result<bool> {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "peer stopped reading",
+                    ))
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_progress = Instant::now();
+                    progressed = true;
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if !self.wbuf.is_empty() && self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(progressed)
+    }
+}
+
+/// Queue an opcode-framed reply: op byte + u32 length + payload.
+pub(crate) fn push_framed(wbuf: &mut Vec<u8>, op: u8, payload: &[u8]) {
+    wbuf.push(op);
+    wbuf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    wbuf.extend_from_slice(payload);
+}
+
+/// Queue an `O` logits reply: count then little-endian floats.
+fn push_logits(wbuf: &mut Vec<u8>, logits: &[f32]) {
+    wbuf.push(b'O');
+    wbuf.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+    for v in logits {
+        wbuf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Best-effort `E busy` on a just-accepted stream that is being refused
+/// at the connection limit (no [`Conn`] is ever built for it).
+pub(crate) fn refuse_at_limit(mut stream: &TcpStream) {
+    let mut out = Vec::new();
+    push_framed(&mut out, b'E', b"busy: connection limit reached");
+    let _ = stream.write_all(&out);
+}

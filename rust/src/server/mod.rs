@@ -1,84 +1,200 @@
-//! TCP inference server (std::net — the offline image has no tokio; a
-//! thread-per-connection acceptor over the batching coordinator is
-//! entirely adequate for the CPU-PJRT testbed).
+//! TCP inference server: sharded acceptors + a fixed worker pool over a
+//! model registry (std::net — the offline image has no tokio).
 //!
-//! Wire protocol (little-endian):
-//!   request:  `b'I'` + u32 n + n×f32   → infer one input vector
-//!             `b'M'`                   → metrics snapshot (framed JSON)
-//!             `b'S'`                   → metrics snapshot (legacy, bare)
-//!             `b'Q'`                   → close connection
-//!   response: `b'O'` + u32 n + n×f32 (logits) | `b'E'` + u32 len + msg
-//!             for `M`: `b'M'` + u32 len + JSON bytes (framed like `O`/`E`)
-//!             for `S`: u32 len + JSON bytes (no opcode byte; kept for
-//!             old clients — prefer `M`)
+//! ## Architecture
 //!
-//! Engine errors answer `E` and keep the connection; protocol errors
-//! (oversized frame, unknown opcode) answer `E` and then close it.
+//! * **Sharded acceptors** — `acceptors` threads each own a
+//!   `try_clone` of one nonblocking listener and race on `accept`, so
+//!   an accept burst is not serialized through one thread.
+//! * **Fixed worker pool** — `workers` threads *multiplex* nonblocking
+//!   connections: each worker owns a set of [`conn::Conn`] state
+//!   machines and round-robins `poll` over them. Hundreds of concurrent
+//!   clients are served by a handful of threads, and the accept path
+//!   can never die spawning a thread (the old thread-per-connection
+//!   design panicked at `expect("spawn conn thread")` under saturation;
+//!   now an over-limit accept is answered `E busy…` and shed).
+//! * **Admission control, twice** — at the edge, `max_conns` bounds
+//!   live connections (beyond it: `E busy` + close, counted in
+//!   [`Server::shed_conns_total`]); per model, the registry's bounded
+//!   pending queue sheds `E busy…` *without* closing the connection
+//!   (counted in that model's `shed_total`).
+//!
+//! ## Wire protocol (little-endian)
+//!
+//! ```text
+//! request:  b'I' + u32 n + n×f32          infer, default model
+//!           b'I' + u32 (n|bit31) + u16 k + k bytes + n×f32
+//!                                          infer against named model
+//!           b'L' + u16 k + k bytes        load model         → K | E
+//!           b'U' + u16 k + k bytes        unload model       → K | E
+//!           b'P'                          list models (JSON) → P
+//!           b'M'                          metrics snapshot   → M
+//!           b'S'                          metrics, legacy bare framing
+//!           b'Q'                          close connection
+//! response: b'O' + u32 n + n×f32          logits
+//!           b'E' + u32 len + msg          error ("busy…" = shed; the
+//!                                          connection stays open)
+//!           b'K' + u32 len + msg          load/unload ack
+//!           b'M'/b'P' + u32 len + JSON
+//!           for b'S': u32 len + JSON      (no opcode byte; old clients)
+//! ```
+//!
+//! Engine/registry errors answer `E` and keep the connection; protocol
+//! errors (oversized frame, bad name length, unknown opcode) answer `E`
+//! and then close it. On [`Server::stop`], connections with a reply in
+//! flight are drained (bounded by a grace window) before workers join.
 
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+mod client;
+pub(crate) mod conn;
+
+pub use client::Client;
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::CoordinatorHandle;
+use crate::coordinator::registry::ModelRegistry;
+use crate::runtime::pool::{BlockQueue, PushError, WorkerPool};
+use conn::Conn;
 
-/// Serve until `stop` flips. Returns the bound port (0 → ephemeral).
+/// How long stopping workers keep polling connections that still owe a
+/// reply (engine drain + flush) before dropping them.
+const STOP_GRACE: Duration = Duration::from_secs(5);
+
+/// Serving-tier shape knobs (`sqnn serve --acceptors --workers
+/// --max-conns`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Accept threads sharing the listener.
+    pub acceptors: usize,
+    /// Connection-multiplexing workers (0 = `max(2, cores)`).
+    pub workers: usize,
+    /// Live-connection bound; accepts beyond it shed `E busy` + close.
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { acceptors: 2, workers: 0, max_conns: 1024 }
+    }
+}
+
+/// State shared by acceptors and workers.
+struct ServerShared {
+    registry: Arc<ModelRegistry>,
+    stop: AtomicBool,
+    /// Hand-off from acceptors to workers; bounded by `max_conns` so it
+    /// can never refuse below the connection limit.
+    queue: BlockQueue<Conn>,
+    /// Live connections (owned by workers or queued), via `LiveGuard`.
+    live: Arc<AtomicUsize>,
+    accepted: AtomicU64,
+    conn_shed: AtomicU64,
+}
+
+/// The serving tier. Dropping it stops and joins everything.
 pub struct Server {
+    /// Bound port (useful when binding to port 0).
     pub port: u16,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    stop: Arc<AtomicBool>,
+    shared: Arc<ServerShared>,
+    acceptors: Option<WorkerPool>,
+    workers: Option<WorkerPool>,
 }
 
 impl Server {
+    /// Single-model compatibility front door: serve one externally-owned
+    /// coordinator as the pinned default model, with default tier shape.
     pub fn start(handle: CoordinatorHandle, bind: &str) -> Result<Server> {
+        let registry = Arc::new(ModelRegistry::with_default_handle(handle));
+        Server::start_registry(registry, bind, ServerConfig::default())
+    }
+
+    /// Serve a model registry.
+    pub fn start_registry(
+        registry: Arc<ModelRegistry>,
+        bind: &str,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let port = listener.local_addr()?.port();
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let accept_thread = std::thread::Builder::new().name("sqnn-accept".into()).spawn(
-            move || {
-                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-                while !stop2.load(Ordering::SeqCst) {
-                    // Reap finished connection threads so a long-lived
-                    // server doesn't grow this Vec one handle per
-                    // connection until shutdown.
-                    reap_finished(&mut conns);
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let _ = stream.set_nodelay(true);
-                            let h = handle.clone();
-                            let st = stop2.clone();
-                            conns.push(
-                                std::thread::Builder::new()
-                                    .name("sqnn-conn".into())
-                                    .spawn(move || {
-                                        let _ = handle_conn(stream, h, st);
-                                    })
-                                    .expect("spawn conn thread"),
-                            );
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                for c in conns {
-                    let _ = c.join();
-                }
-            },
-        )?;
-        Ok(Server { port, accept_thread: Some(accept_thread), stop })
+
+        let n_acceptors = cfg.acceptors.max(1);
+        let n_workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).max(2)
+        } else {
+            cfg.workers
+        };
+        let max_conns = cfg.max_conns.max(1);
+
+        let shared = Arc::new(ServerShared {
+            registry,
+            stop: AtomicBool::new(false),
+            queue: BlockQueue::new(max_conns),
+            live: Arc::new(AtomicUsize::new(0)),
+            accepted: AtomicU64::new(0),
+            conn_shed: AtomicU64::new(0),
+        });
+
+        // One listener clone per acceptor; each thread takes its own by
+        // index out of the shared slot vector.
+        let mut listeners = Vec::with_capacity(n_acceptors);
+        for _ in 1..n_acceptors {
+            listeners.push(Some(listener.try_clone().context("clone listener")?));
+        }
+        listeners.push(Some(listener));
+        let listeners = Arc::new(Mutex::new(listeners));
+
+        let sh = shared.clone();
+        let acceptors = WorkerPool::spawn("sqnn-accept", n_acceptors, move |i| {
+            let listener = listeners.lock().unwrap()[i].take().expect("listener slot");
+            acceptor_loop(&listener, &sh, max_conns);
+        })
+        .context("spawn acceptors")?;
+
+        let sh = shared.clone();
+        let workers = WorkerPool::spawn("sqnn-worker", n_workers, move |_| worker_loop(&sh))
+            .context("spawn workers")?;
+
+        Ok(Server { port, shared, acceptors: Some(acceptors), workers: Some(workers) })
     }
 
+    /// The registry this server fronts (for hot load/unload from the
+    /// embedding process).
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.shared.registry.clone()
+    }
+
+    /// Connections currently live (queued or owned by workers).
+    pub fn live_conns(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+
+    /// Connections accepted since start (including ones later shed).
+    pub fn accepted_total(&self) -> u64 {
+        self.shared.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Connections shed at the edge (`max_conns` reached or hand-off
+    /// queue refused): answered `E busy` and closed.
+    pub fn shed_conns_total(&self) -> u64 {
+        self.shared.conn_shed.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain in-flight replies (bounded by the grace
+    /// window), and join every acceptor and worker.
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        if let Some(a) = self.acceptors.take() {
+            a.join();
+        }
+        if let Some(w) = self.workers.take() {
+            w.join();
         }
     }
 }
@@ -89,227 +205,100 @@ impl Drop for Server {
     }
 }
 
-/// Join (and drop) every connection thread that has already exited,
-/// keeping live ones. Called from the accept loop.
-fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
-    let mut i = 0;
-    while i < conns.len() {
-        if conns[i].is_finished() {
-            let _ = conns.swap_remove(i).join();
-        } else {
-            i += 1;
+fn acceptor_loop(listener: &TcpListener, shared: &ServerShared, max_conns: usize) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.accepted.fetch_add(1, Ordering::SeqCst);
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                // Edge admission control: beyond the live-connection
+                // bound, answer busy and close instead of queueing.
+                if shared.live.load(Ordering::SeqCst) >= max_conns {
+                    shared.conn_shed.fetch_add(1, Ordering::SeqCst);
+                    conn::refuse_at_limit(&stream);
+                    continue;
+                }
+                let c = match Conn::new(stream, shared.live.clone()) {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                };
+                if let Err(PushError::Full(c) | PushError::Closed(c)) = shared.queue.try_push(c)
+                {
+                    shared.conn_shed.fetch_add(1, Ordering::SeqCst);
+                    c.reject_busy();
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // Transient accept errors (EMFILE under fd pressure, peer
+            // reset before accept) must not kill the acceptor.
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
         }
     }
 }
 
-/// How long a started frame may sit with **no bytes arriving** before
-/// the connection is dropped. Distinguishes a slow writer (pauses
-/// between opcode, length, and payload chunks are retried) from an
-/// abandoned truncated frame (which must not pin a handler thread
-/// forever).
-const FRAME_STALL_TIMEOUT: Duration = Duration::from_secs(2);
-
-/// Read exactly `buf.len()` bytes of an already-started frame.
-///
-/// The socket's 100 ms read timeout exists so *idle* connections poll
-/// the stop flag; it must not kill a client that pauses mid-frame (e.g.
-/// >100 ms between the `I` opcode and its length/payload). So
-/// `WouldBlock`/`TimedOut` here retries — still honoring `stop` — and
-/// only gives up once no byte has arrived for [`FRAME_STALL_TIMEOUT`].
-fn read_frame_exact(
-    s: &mut TcpStream,
-    buf: &mut [u8],
-    stop: &AtomicBool,
-) -> std::io::Result<()> {
-    use std::io::{Error, ErrorKind};
-    let mut filled = 0usize;
-    let mut last_progress = Instant::now();
-    while filled < buf.len() {
-        match s.read(&mut buf[filled..]) {
-            Ok(0) => return Err(Error::new(ErrorKind::UnexpectedEof, "peer closed mid-frame")),
-            Ok(n) => {
-                filled += n;
-                last_progress = Instant::now();
-            }
-            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(ref e)
-                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
-            {
-                if stop.load(Ordering::SeqCst) {
-                    return Err(Error::other("server stopping"));
-                }
-                if last_progress.elapsed() >= FRAME_STALL_TIMEOUT {
-                    return Err(Error::new(ErrorKind::TimedOut, "frame stalled mid-read"));
-                }
-            }
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(())
-}
-
-/// Write a structured `E` response (protocol errors get one before the
-/// connection is closed, so clients see a reason instead of a bare EOF).
-fn write_err(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
-    let mut out = Vec::with_capacity(5 + msg.len());
-    out.push(b'E');
-    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
-    out.extend_from_slice(msg.as_bytes());
-    stream.write_all(&out)
-}
-
-fn handle_conn(
-    mut stream: TcpStream,
-    handle: CoordinatorHandle,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    // Idle connections poll the stop flag so `Server::stop` can join this
-    // thread even while a client keeps the socket open.
-    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+fn worker_loop(shared: &ServerShared) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut stop_seen: Option<Instant> = None;
     loop {
-        let mut op = [0u8; 1];
-        match stream.read(&mut op) {
-            Ok(0) => return Ok(()), // peer closed
-            Ok(_) => {}
-            Err(ref e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if stop.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-                continue;
-            }
-            Err(_) => return Ok(()),
+        let stopping = shared.stop.load(Ordering::SeqCst);
+        if stopping && stop_seen.is_none() {
+            stop_seen = Some(Instant::now());
         }
-        match op[0] {
-            b'I' => {
-                let mut nb = [0u8; 4];
-                read_frame_exact(&mut stream, &mut nb, &stop)?;
-                let n = u32::from_le_bytes(nb) as usize;
-                if n > 1 << 20 {
-                    let _ = write_err(&mut stream, &format!("oversized request ({n} floats)"));
-                    anyhow::bail!("oversized request ({n} floats)");
+
+        // Acquire connections: an idle worker blocks briefly on the
+        // hand-off queue; a busy one grabs a few more without blocking.
+        if !stopping {
+            if conns.is_empty() {
+                match shared.queue.pop_timeout(Duration::from_millis(50)) {
+                    Some(c) => conns.push(c),
+                    None => continue,
                 }
-                let mut raw = vec![0u8; n * 4];
-                read_frame_exact(&mut stream, &mut raw, &stop)?;
-                let input: Vec<f32> = raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect();
-                match handle.infer(input) {
-                    Ok(logits) => {
-                        let mut msg = Vec::with_capacity(5 + logits.len() * 4);
-                        msg.push(b'O');
-                        msg.extend_from_slice(&(logits.len() as u32).to_le_bytes());
-                        for v in logits {
-                            msg.extend_from_slice(&v.to_le_bytes());
-                        }
-                        stream.write_all(&msg)?;
-                    }
-                    Err(e) => {
-                        write_err(&mut stream, &format!("{e:#}"))?;
+            } else {
+                for _ in 0..8 {
+                    match shared.queue.try_pop() {
+                        Some(c) => conns.push(c),
+                        None => break,
                     }
                 }
             }
-            b'M' => {
-                let json = handle.metrics().snapshot().to_json();
-                let mut msg = Vec::with_capacity(5 + json.len());
-                msg.push(b'M');
-                msg.extend_from_slice(&(json.len() as u32).to_le_bytes());
-                msg.extend_from_slice(json.as_bytes());
-                stream.write_all(&msg)?;
-            }
-            b'S' => {
-                // Legacy bare-framed stats (no opcode byte in the reply).
-                let json = handle.metrics().snapshot().to_json();
-                stream.write_all(&(json.len() as u32).to_le_bytes())?;
-                stream.write_all(json.as_bytes())?;
-            }
-            b'Q' => return Ok(()),
-            other => {
-                let _ = write_err(&mut stream, &format!("unknown opcode {other}"));
-                anyhow::bail!("unknown opcode {other}");
+        } else {
+            // Stopping: freshly queued connections have nothing in
+            // flight — drain and drop them (their LiveGuard decrements).
+            while let Some(c) = shared.queue.try_pop() {
+                drop(c);
             }
         }
-    }
-}
 
-/// Minimal blocking client (used by tests, examples, and `sqnn client`).
-pub struct Client {
-    stream: TcpStream,
-}
+        // Poll every owned connection once.
+        let mut progressed = false;
+        conns.retain_mut(|c| {
+            let p = c.poll(&shared.registry);
+            progressed |= p.progressed;
+            p.keep
+        });
 
-impl Client {
-    pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        stream.set_nodelay(true)?;
-        Ok(Client { stream })
-    }
-
-    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        // One buffered write per request: 784 tiny write()s would hit
-        // Nagle + syscall overhead and dominate end-to-end latency.
-        let mut msg = Vec::with_capacity(5 + input.len() * 4);
-        msg.push(b'I');
-        msg.extend_from_slice(&(input.len() as u32).to_le_bytes());
-        for v in input {
-            msg.extend_from_slice(&v.to_le_bytes());
-        }
-        self.stream.write_all(&msg)?;
-        let mut op = [0u8; 1];
-        self.stream.read_exact(&mut op)?;
-        let mut nb = [0u8; 4];
-        self.stream.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
-        // Only `O` (logits) and `E` (error) are valid replies; anything
-        // else means a desynced or incompatible peer, and guessing its
-        // payload length (then parsing garbage as f32 logits) would
-        // silently corrupt results — bail like `Client::stats` does.
-        match op[0] {
-            b'O' => {
-                let mut raw = vec![0u8; n * 4];
-                self.stream.read_exact(&mut raw)?;
-                Ok(raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect())
+        if stopping {
+            let grace_over = stop_seen.map(|t| t.elapsed() >= STOP_GRACE).unwrap_or(true);
+            if grace_over {
+                conns.clear();
+            } else {
+                // Keep only connections that still owe a reply; idle and
+                // mid-read ones close now (matches the old server, whose
+                // read loops bailed on the stop flag).
+                conns.retain(Conn::in_flight);
             }
-            b'E' => {
-                let mut raw = vec![0u8; n];
-                self.stream.read_exact(&mut raw)?;
-                anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw));
+            if conns.is_empty() && shared.queue.is_closed() && shared.queue.is_empty() {
+                return;
             }
-            other => anyhow::bail!("unexpected infer reply opcode {other}"),
         }
-    }
 
-    pub fn stats_json(&mut self) -> Result<String> {
-        self.stream.write_all(b"S")?;
-        let mut nb = [0u8; 4];
-        self.stream.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
-        let mut raw = vec![0u8; n];
-        self.stream.read_exact(&mut raw)?;
-        Ok(String::from_utf8_lossy(&raw).into_owned())
-    }
-
-    /// Framed metrics snapshot (`M` opcode): the reply carries an opcode
-    /// byte like `O`/`E`, so errors are distinguishable from payloads.
-    /// Returns the snapshot JSON line (`sqnn stats` prints it verbatim).
-    pub fn stats(&mut self) -> Result<String> {
-        self.stream.write_all(b"M")?;
-        let mut op = [0u8; 1];
-        self.stream.read_exact(&mut op)?;
-        let mut nb = [0u8; 4];
-        self.stream.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
-        let mut raw = vec![0u8; n];
-        self.stream.read_exact(&mut raw)?;
-        match op[0] {
-            b'M' => Ok(String::from_utf8_lossy(&raw).into_owned()),
-            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
-            other => anyhow::bail!("unexpected stats reply opcode {other}"),
+        if !progressed && !conns.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 }

@@ -1,0 +1,201 @@
+//! Property tests for the model registry's serving guarantees:
+//!
+//! * **Eviction is lossless** — load → evict → reload serves logits
+//!   bit-identical to a fresh engine, at every kernel × decode-mode
+//!   combination (eviction only drops derived state: decode plans,
+//!   eager weight caches, kernel plans — never information).
+//! * **The LRU bound holds** — concurrent inference across more models
+//!   than `max_loaded` never observes more than `max_loaded` loaded.
+//! * **Unload drains** — every request admitted before `unload` has its
+//!   reply by the time `unload` returns; nothing is dropped on the
+//!   floor with the engine.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sqnn_xor::coordinator::{
+    DecodeMode, EngineOptions, KernelChoice, ModelRegistry, RegistryConfig, SqnnEngine,
+};
+use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
+
+const INPUT_DIM: usize = 12;
+const NUM_CLASSES: usize = 4;
+const BUCKETS: [usize; 2] = [1, 4];
+
+fn model(seed: u64) -> SqnnModel {
+    synthetic_layer_graph(
+        seed,
+        INPUT_DIM,
+        &[
+            SynthEncrypted { out_dim: 10, ..Default::default() },
+            SynthEncrypted { out_dim: 8, nq: 2, ..Default::default() },
+        ],
+        &[],
+        NUM_CLASSES,
+    )
+}
+
+fn opts(kernel: KernelChoice, decode_mode: DecodeMode) -> EngineOptions {
+    EngineOptions { decode_threads: 1, decode_mode, kernel }
+}
+
+fn registry(max_loaded: usize, engine: EngineOptions) -> ModelRegistry {
+    ModelRegistry::new(RegistryConfig {
+        max_loaded,
+        buckets: BUCKETS.to_vec(),
+        engine,
+        ..Default::default()
+    })
+}
+
+/// Fresh-engine oracle: one-shot logits outside any registry.
+fn fresh_logits(seed: u64, engine: EngineOptions, input: &[f32]) -> Vec<f32> {
+    let e = SqnnEngine::load_native(model(seed), &BUCKETS, engine).unwrap();
+    e.infer(&[input.to_vec()]).unwrap().remove(0)
+}
+
+#[test]
+fn evict_reload_bit_identical_across_kernels_and_decode_modes() {
+    let kernels = [
+        KernelChoice::Auto,
+        KernelChoice::Dense,
+        KernelChoice::Csr,
+        KernelChoice::Fused,
+        KernelChoice::Bitplane,
+    ];
+    let modes = [DecodeMode::Eager, DecodeMode::PerBatch];
+    let inputs: Vec<Vec<f32>> =
+        (0..6).map(|i| vec![0.1 + 0.02 * i as f32; INPUT_DIM]).collect();
+    for kernel in kernels {
+        for mode in modes {
+            let engine = opts(kernel, mode);
+            let ctx = format!("kernel {kernel:?} mode {mode:?}");
+            let oracle: Vec<Vec<f32>> =
+                inputs.iter().map(|x| fresh_logits(0xAA, engine, x)).collect();
+
+            // max_loaded = 1: loading the second model must evict the
+            // first.
+            let reg = registry(1, engine);
+            reg.register_model("a", model(0xAA)).unwrap();
+            reg.register_model("b", model(0xBB)).unwrap();
+
+            let first: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|x| reg.infer(Some("a"), x.clone()).unwrap())
+                .collect();
+            assert_eq!(first, oracle, "[{ctx}] registry-served != fresh engine");
+
+            reg.infer(Some("b"), inputs[0].clone()).unwrap();
+            assert!(!reg.is_loaded("a"), "[{ctx}] LRU eviction did not happen");
+            assert!(reg.is_loaded("b"), "[{ctx}]");
+
+            // Reload (evicting b in turn) and demand bit-identity.
+            let again: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|x| reg.infer(Some("a"), x.clone()).unwrap())
+                .collect();
+            assert_eq!(again, oracle, "[{ctx}] evict→reload changed logits");
+            assert_eq!(
+                reg.loaded_names().len(),
+                1,
+                "[{ctx}] LRU bound violated after reload"
+            );
+        }
+    }
+}
+
+#[test]
+fn lru_bound_holds_under_concurrent_inference() {
+    const MODELS: usize = 4;
+    const MAX_LOADED: usize = 2;
+    const THREADS: usize = 4;
+    const REQS: usize = 24;
+
+    let reg = Arc::new(registry(MAX_LOADED, opts(KernelChoice::Auto, DecodeMode::Eager)));
+    let names: Vec<String> = (0..MODELS).map(|i| format!("m{i}")).collect();
+    for (i, name) in names.iter().enumerate() {
+        reg.register_model(name, model(0x100 + i as u64)).unwrap();
+    }
+    // Oracle per model, one shared probe input.
+    let input = vec![0.25f32; INPUT_DIM];
+    let eager = opts(KernelChoice::Auto, DecodeMode::Eager);
+    let oracle: Vec<Vec<f32>> =
+        (0..MODELS).map(|i| fresh_logits(0x100 + i as u64, eager, &input)).collect();
+
+    let done = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let reg = reg.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut max_seen = 0;
+            while !done.load(Ordering::SeqCst) {
+                max_seen = max_seen.max(reg.loaded_names().len());
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            max_seen
+        })
+    };
+
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let reg = reg.clone();
+        let names = names.clone();
+        let oracle = oracle.clone();
+        let input = input.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..REQS {
+                let m = (t + i) % MODELS;
+                let got = reg.infer(Some(names[m].as_str()), input.clone()).unwrap();
+                assert_eq!(
+                    got, oracle[m],
+                    "thread {t} req {i}: model {m} served foreign logits mid-churn"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("churn thread panicked");
+    }
+    done.store(true, Ordering::SeqCst);
+    let max_seen = sampler.join().unwrap();
+    assert!(
+        max_seen <= MAX_LOADED,
+        "observed {max_seen} loaded models, bound is {MAX_LOADED}"
+    );
+    assert!(reg.loaded_names().len() <= MAX_LOADED);
+}
+
+#[test]
+fn unload_of_in_use_model_drains_admitted_requests() {
+    const IN_FLIGHT: usize = 48;
+    let engine = opts(KernelChoice::Auto, DecodeMode::Eager);
+    let reg = registry(4, engine);
+    reg.register_model("m", model(0x77)).unwrap();
+    reg.load("m").unwrap();
+
+    let input = vec![0.4f32; INPUT_DIM];
+    let oracle = fresh_logits(0x77, engine, &input);
+
+    // Admit a pile of requests, then immediately unload while they are
+    // (mostly) still queued.
+    let rxs: Vec<_> = (0..IN_FLIGHT)
+        .map(|_| reg.submit(Some("m"), input.clone()).expect("admission refused"))
+        .collect();
+    assert!(reg.unload("m").unwrap());
+    assert!(!reg.is_loaded("m"));
+
+    // `unload` tears the stack down through the shutdown drain and joins
+    // the executor — so by the time it returns, every admitted request
+    // already has its (correct) reply. try_recv, not recv: waiting here
+    // would mask a dropped-on-the-floor request as a test hang.
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .try_recv()
+            .unwrap_or_else(|_| panic!("request {i} admitted before unload got no reply"));
+        assert_eq!(reply.unwrap(), oracle, "request {i} answered with wrong logits");
+    }
+
+    // The model stays registered: next use reloads it from source.
+    assert_eq!(reg.infer(Some("m"), input).unwrap(), oracle);
+}

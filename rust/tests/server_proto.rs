@@ -6,13 +6,16 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
 use sqnn_xor::coordinator::{
-    BatchPolicy, Coordinator, DecodeMode, EngineOptions, SqnnEngine,
+    BatchPolicy, Coordinator, DecodeMode, EngineOptions, ModelRegistry, RegistryConfig,
+    SqnnEngine,
 };
+use sqnn_xor::io::sqnn_file::SqnnModel;
 use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
-use sqnn_xor::server::{Client, Server};
+use sqnn_xor::server::{Client, Server, ServerConfig};
 
 const INPUT_DIM: usize = 16;
 const NUM_CLASSES: usize = 3;
@@ -236,5 +239,239 @@ fn sequential_connections_are_reaped_and_served() {
         let logits = c.infer(&[i as f32 * 0.01; INPUT_DIM]).unwrap();
         assert_eq!(logits.len(), NUM_CLASSES, "connection {i}");
     }
+    server.stop();
+}
+
+// ---------------------------------------------------------------------
+// Multi-model registry serving: named infer, hot load/unload, admission
+// control, and cross-connection isolation.
+// ---------------------------------------------------------------------
+
+fn two_layer_model(seed: u64) -> SqnnModel {
+    synthetic_layer_graph(
+        seed,
+        INPUT_DIM,
+        &[
+            SynthEncrypted { out_dim: 10, ..Default::default() },
+            SynthEncrypted { out_dim: 6, nq: 2, ..Default::default() },
+        ],
+        &[],
+        NUM_CLASSES,
+    )
+}
+
+fn test_engine_opts() -> EngineOptions {
+    EngineOptions { decode_threads: 1, ..Default::default() }
+}
+
+fn registry_with(models: &[(&str, u64)], max_loaded: usize) -> Arc<ModelRegistry> {
+    let reg = ModelRegistry::new(RegistryConfig {
+        max_loaded,
+        buckets: vec![1, 4],
+        engine: test_engine_opts(),
+        ..Default::default()
+    });
+    for (name, seed) in models {
+        reg.register_model(name, two_layer_model(*seed)).unwrap();
+    }
+    Arc::new(reg)
+}
+
+/// Reference logits for `input` from a fresh engine built exactly like
+/// the registry builds its stacks — the cross-talk oracle.
+fn reference_logits(seed: u64, input: &[f32]) -> Vec<f32> {
+    let engine =
+        SqnnEngine::load_native(two_layer_model(seed), &[1, 4], test_engine_opts()).unwrap();
+    engine.infer(&[input.to_vec()]).unwrap().remove(0)
+}
+
+/// The new opcodes end to end: `P` (list), `L` (load), `U` (unload), and
+/// named `I` frames — with every reply checked against a fresh-engine
+/// oracle, and request-level errors (unknown model) keeping the
+/// connection alive.
+#[test]
+fn named_infer_and_load_unload_list_opcodes() {
+    let registry = registry_with(&[("alpha", 0xA1), ("beta", 0xB2)], 4);
+    let mut server =
+        Server::start_registry(registry, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Nothing is loaded until asked; alpha (registered first) is default.
+    let json = c.models_json().unwrap();
+    assert!(json.contains("\"name\":\"alpha\""), "{json}");
+    assert!(json.contains("\"loaded\":false"), "{json}");
+
+    // Hot-load beta over the wire.
+    let ack = c.load("beta").unwrap();
+    assert!(ack.contains("loaded 'beta'"), "{ack}");
+    let json = c.models_json().unwrap();
+    assert!(json.contains("\"name\":\"beta\",\"loaded\":true"), "{json}");
+
+    // Bare infer routes to the default model; named infer selects.
+    let input = vec![0.2f32; INPUT_DIM];
+    let bare = c.infer(&input).unwrap();
+    assert_eq!(bare, reference_logits(0xA1, &input), "default must be alpha");
+    assert_eq!(c.infer_named(Some("alpha"), &input).unwrap(), bare);
+    assert_eq!(
+        c.infer_named(Some("beta"), &input).unwrap(),
+        reference_logits(0xB2, &input),
+        "named infer must hit the named model"
+    );
+
+    // Unload is an ack'd no-op when already unloaded, and the model
+    // keeps serving (reloads on demand) afterwards.
+    assert!(c.unload("beta").unwrap().contains("unloaded 'beta'"));
+    assert!(c.unload("beta").unwrap().contains("was not loaded"));
+    assert_eq!(c.infer_named(Some("beta"), &input).unwrap(), reference_logits(0xB2, &input));
+
+    // Unknown models are request-level errors: E reply, connection lives.
+    let err = format!("{:#}", c.infer_named(Some("ghost"), &input).unwrap_err());
+    assert!(err.contains("unknown model"), "{err}");
+    let err = format!("{:#}", c.load("ghost").unwrap_err());
+    assert!(err.contains("unknown model"), "{err}");
+    assert_eq!(c.infer(&input).unwrap(), bare, "connection degraded after E replies");
+    server.stop();
+}
+
+/// N threads × M interleaved requests across two models on their own
+/// connections: every reply must be bit-identical to a fresh-engine
+/// oracle for (model, input) — zero cross-talk between connections or
+/// models — and `Server::stop` must join cleanly while later requests
+/// are still in flight.
+#[test]
+fn concurrent_connections_no_cross_talk_and_clean_stop() {
+    const THREADS: usize = 6;
+    const REQS: usize = 16;
+    let registry = registry_with(&[("a", 0x11), ("b", 0x22)], 2);
+    let mut server = Server::start_registry(
+        registry,
+        "127.0.0.1:0",
+        ServerConfig { acceptors: 2, workers: 2, max_conns: 64 },
+    )
+    .unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+
+    let input_for = |t: usize, i: usize| -> Vec<f32> {
+        vec![0.05 + 0.01 * ((t * 31 + i * 7) % 50) as f32; INPUT_DIM]
+    };
+    let model_for = |t: usize, i: usize| if (t + i) % 2 == 0 { ("a", 0x11) } else { ("b", 0x22) };
+
+    // Oracle table, computed before any server traffic.
+    let mut expected = vec![vec![Vec::new(); REQS]; THREADS];
+    for (t, row) in expected.iter_mut().enumerate() {
+        for (i, slot) in row.iter_mut().enumerate() {
+            let (_, seed) = model_for(t, i);
+            *slot = reference_logits(seed, &input_for(t, i));
+        }
+    }
+    let expected = Arc::new(expected);
+
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        let expected = expected.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for i in 0..REQS {
+                let (name, _) = model_for(t, i);
+                let got = c.infer_named(Some(name), &input_for(t, i)).unwrap();
+                assert_eq!(
+                    got, expected[t][i],
+                    "cross-talk: thread {t} req {i} model {name} got foreign logits"
+                );
+                if i % 5 == 0 {
+                    let stats = c.stats().unwrap();
+                    assert!(stats.starts_with('{'), "mangled M frame under load: {stats}");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("stress thread panicked");
+    }
+
+    // Now stop with requests in flight: firehose threads keep sending
+    // until their connection dies; stop() must still join promptly, and
+    // every reply that does arrive must be correct.
+    let mut firehose = Vec::new();
+    for t in 0..3 {
+        let addr = addr.clone();
+        let expected = expected.clone();
+        firehose.push(std::thread::spawn(move || {
+            let Ok(mut c) = Client::connect(&addr) else { return };
+            for i in 0.. {
+                let (name, _) = model_for(t, i % REQS);
+                match c.infer_named(Some(name), &input_for(t, i % REQS)) {
+                    Ok(got) => assert_eq!(got, expected[t][i % REQS], "wrong in-flight reply"),
+                    Err(_) => return, // server stopping closed the connection
+                }
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    server.stop();
+    for h in firehose {
+        h.join().expect("in-flight thread panicked");
+    }
+}
+
+/// Edge admission control: beyond `max_conns` the server answers a
+/// framed `E busy…` and closes — it must not die (the old
+/// thread-per-connection design panicked at `expect("spawn conn
+/// thread")` when it could not take on more connections). Existing
+/// connections keep serving, and capacity freed by a disconnect is
+/// reusable.
+#[test]
+fn over_limit_connections_shed_busy_instead_of_killing_the_server() {
+    let registry = registry_with(&[("solo", 0x51)], 2);
+    let mut server = Server::start_registry(
+        registry,
+        "127.0.0.1:0",
+        ServerConfig { acceptors: 1, workers: 1, max_conns: 2 },
+    )
+    .unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let input = vec![0.3f32; INPUT_DIM];
+    let want = reference_logits(0x51, &input);
+
+    // Fill the connection budget (round-trips guarantee both are live).
+    let mut c1 = Client::connect(&addr).unwrap();
+    let mut c2 = Client::connect(&addr).unwrap();
+    assert_eq!(c1.infer(&input).unwrap(), want);
+    assert_eq!(c2.infer(&input).unwrap(), want);
+
+    // The third connection is shed with a framed busy error, then closed.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let msg = read_err_response(&mut s);
+    assert!(msg.contains("busy"), "expected busy shed, got: {msg}");
+    assert_closed(&mut s);
+    assert!(server.shed_conns_total() >= 1, "shed must be counted");
+
+    // The saturated server is alive and serving, not dead.
+    assert_eq!(c1.infer(&input).unwrap(), want, "server died under saturation");
+
+    // Dropping a connection frees budget for a new one.
+    drop(c2);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let logits = loop {
+        let mut c3 = match Client::connect(&addr) {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        match c3.infer(&input) {
+            Ok(l) => break l,
+            Err(_) => {
+                // Still shed: the worker has not reaped c2 yet.
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "freed connection slot never became reusable"
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(logits, want);
     server.stop();
 }
