@@ -93,7 +93,7 @@ pub fn compress_bundle_with(
     }
 
     let mask_u8 = mask_arr.as_u8()?;
-    let mask = BitVec::from_fn(rows * cols, |j| mask_u8[j] != 0);
+    let mask = BitVec::from_fn(rows * cols, |j| mask_u8.get(j).is_some_and(|&b| b != 0));
     let bits_u8 = bits_arr.as_u8()?;
     let alphas = alphas_arr.as_f32()?.to_vec();
 
@@ -103,7 +103,8 @@ pub fn compress_bundle_with(
     let planes: Vec<BitPlane> = (0..meta.fc1_nq)
         .map(|q| {
             let base = q * plane_len;
-            let bits = BitVec::from_fn(plane_len, |j| bits_u8[base + j] != 0);
+            let bits =
+                BitVec::from_fn(plane_len, |j| bits_u8.get(base + j).is_some_and(|&b| b != 0));
             BitPlane::new(bits, mask.clone())
         })
         .collect();

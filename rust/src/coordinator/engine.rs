@@ -34,7 +34,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::io::sqnn_file::{Layer, SqnnModel};
-use crate::kernels::{KernelChoice, KernelCtx, KernelRegistry};
+use crate::kernels::{KernelChoice, KernelCtx, KernelRegistry, MatmulKernel};
 use crate::runtime::parallel::{CacheStats, DecodeConfig, ParallelDecoder};
 use crate::runtime::{Runtime, Tensor};
 
@@ -153,7 +153,7 @@ pub fn build_static_inputs(model: &SqnnModel) -> Result<StaticInputs> {
         bail!("HLO lowering requires an encrypted layer at the head of the chain");
     };
     let mut dense = Vec::new();
-    for l in &model.layers[1..] {
+    for l in model.layers.iter().skip(1) {
         match l {
             Layer::Dense(d) => dense.push(d),
             other => bail!(
@@ -163,7 +163,9 @@ pub fn build_static_inputs(model: &SqnnModel) -> Result<StaticInputs> {
         }
     }
 
-    let p0 = &fc1.planes[0];
+    let Some(p0) = fc1.planes.first() else {
+        bail!("encrypted head has no quantization planes");
+    };
     let n_q = fc1.planes.len();
     let n_in = p0.n_in;
     let n_out = p0.n_out;
@@ -182,15 +184,19 @@ pub fn build_static_inputs(model: &SqnnModel) -> Result<StaticInputs> {
     let mut codes = vec![0.0f32; n_q * l * n_in];
     let mut patch = vec![0.0f32; n_q * l * n_out];
     for (q, plane) in fc1.planes.iter().enumerate() {
-        for (s, &code) in plane.codes.iter().enumerate() {
+        for (s, (&code, patches)) in plane.codes.iter().zip(&plane.patches).enumerate() {
+            // lint:allow-block(writes bounded by the buffer construction
+            // above: q < n_q, s < l, j < n_in, and patch indices < n_out
+            // by container validation)
             for j in 0..n_in {
                 if (code >> j) & 1 == 1 {
                     codes[(q * l + s) * n_in + j] = 1.0;
                 }
             }
-            for &p in &plane.patches[s] {
+            for &p in patches {
                 patch[(q * l + s) * n_out + p as usize] = 1.0;
             }
+            // lint:allow-end
         }
     }
     let codes = Tensor::new(vec![n_q, l, n_in], codes);
@@ -247,12 +253,9 @@ impl SqnnEngine {
         #[cfg(feature = "xla")]
         {
             let dir = artifacts_dir.as_ref();
-            let variant = if !batch_sizes.is_empty()
-                && dir.join(GraphVariant::Ref.file(batch_sizes[0])).exists()
-            {
-                GraphVariant::Ref
-            } else {
-                GraphVariant::Pallas
+            let variant = match batch_sizes.first() {
+                Some(&b0) if dir.join(GraphVariant::Ref.file(b0)).exists() => GraphVariant::Ref,
+                _ => GraphVariant::Pallas,
             };
             Self::load_variant(runtime, model, dir, batch_sizes, variant, opts)
         }
@@ -410,7 +413,9 @@ impl SqnnEngine {
                 return b;
             }
         }
-        *self.buckets.last().unwrap()
+        // `sorted_buckets` refuses empty bucket lists at load, so this
+        // fallback is unreachable; 1 keeps the function total.
+        self.buckets.last().copied().unwrap_or(1)
     }
 
     /// Run one batch of inputs (each of length `input_dim`); returns one
@@ -421,6 +426,16 @@ impl SqnnEngine {
             #[cfg(feature = "xla")]
             Backend::Pjrt(pe) => self.infer_pjrt(pe, inputs),
         }
+    }
+
+    /// The kernel serving layer `li`, as an error instead of a panic
+    /// when registry and chain disagree (they are built together, so a
+    /// miss is a bug — but a served bug must answer `E`, not kill a
+    /// multiplexing worker).
+    fn kernel_for<'a>(&self, ne: &'a NativeExec, li: usize) -> Result<&'a dyn MatmulKernel> {
+        ne.registry
+            .kernel(li)
+            .ok_or_else(|| anyhow::anyhow!("no kernel registered for layer {li}"))
     }
 
     /// Native forward over the layer chain, batch-major: each layer's
@@ -442,7 +457,7 @@ impl SqnnEngine {
         // materialize-then-matmul path under `--kernel dense
         // --decode-mode per-batch`) refresh it once here, not per input.
         for (li, layer) in self.model.layers.iter().enumerate() {
-            ne.registry.kernel(li).begin_batch(layer, &ctx)?;
+            self.kernel_for(ne, li)?.begin_batch(layer, &ctx)?;
         }
         let mut h: Vec<Vec<f32>> = Vec::new();
         for (li, layer) in self.model.layers.iter().enumerate() {
@@ -451,7 +466,7 @@ impl SqnnEngine {
             } else {
                 h.iter().map(Vec::as_slice).collect()
             };
-            let mut ys = ne.registry.kernel(li).forward_batch(layer, &ctx, &xs)?;
+            let mut ys = self.kernel_for(ne, li)?.forward_batch(layer, &ctx, &xs)?;
             if ys.len() != xs.len() {
                 bail!("layer {} returned {} rows for {} inputs", layer.name(), ys.len(), xs.len());
             }
@@ -463,7 +478,7 @@ impl SqnnEngine {
         // Release batch-scoped kernel buffers (per-batch materialized
         // weights) so an idle engine holds only the compressed model.
         for (li, layer) in self.model.layers.iter().enumerate() {
-            ne.registry.kernel(li).end_batch(layer, &ctx)?;
+            self.kernel_for(ne, li)?.end_batch(layer, &ctx)?;
         }
         for row in &h {
             if row.len() != n_cls {
@@ -478,10 +493,11 @@ impl SqnnEngine {
         let in_dim = self.model.meta.input_dim;
         let n_cls = self.model.meta.num_classes;
         let mut out = Vec::with_capacity(inputs.len());
-        let max_bucket = *self.buckets.last().unwrap();
+        let max_bucket = self.buckets.last().copied().unwrap_or(1);
         let mut i = 0;
         while i < inputs.len() {
             let take = (inputs.len() - i).min(max_bucket);
+            // lint:allow(chunk bounds: i + take <= inputs.len() by construction)
             let chunk = &inputs[i..i + take];
             let bucket = self.pick_bucket(take);
             let mut x = vec![0.0f32; bucket * in_dim];
@@ -489,6 +505,7 @@ impl SqnnEngine {
                 if row.len() != in_dim {
                     bail!("input {k} has length {} != {in_dim}", row.len());
                 }
+                // lint:allow(x is sized bucket*in_dim and k < take <= bucket)
                 x[k * in_dim..(k + 1) * in_dim].copy_from_slice(row);
             }
             let exe = pe.executables.get(&bucket).ok_or_else(|| anyhow!("no bucket"))?;
@@ -504,6 +521,7 @@ impl SqnnEngine {
                 bail!("unexpected logits size {}", logits.data.len());
             }
             for k in 0..take {
+                // lint:allow(logits length checked as bucket*n_cls just above)
                 out.push(logits.data[k * n_cls..(k + 1) * n_cls].to_vec());
             }
             i += take;
@@ -520,7 +538,9 @@ impl SqnnEngine {
                 logits
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    // NaN logits compare Equal: argmax still returns a
+                    // class instead of panicking mid-batch.
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
                     .map(|(i, _)| i)
                     .unwrap_or(0)
             })

@@ -10,7 +10,7 @@
 //! — computed from monotonic totals, not the sample.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::util::percentile;
@@ -50,11 +50,21 @@ impl Reservoir {
             self.samples.push(v);
         } else {
             let j = self.next_rng() % self.seen;
-            if (j as usize) < self.cap {
-                self.samples[j as usize] = v;
+            if let Ok(j) = usize::try_from(j) {
+                if let Some(slot) = self.samples.get_mut(j) {
+                    *slot = v;
+                }
             }
         }
     }
+}
+
+/// Lock a reservoir with poison recovery: a panicked recorder can at
+/// worst lose its own sample — the reservoir's fields are updated one
+/// at a time, so observers must keep serving percentiles rather than
+/// spread the panic through every metrics call.
+fn lock_reservoir(m: &Mutex<Reservoir>) -> MutexGuard<'_, Reservoir> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Thread-safe metrics sink for the coordinator.
@@ -165,14 +175,14 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
         self.exec_total_ns.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
-        self.exec.lock().unwrap().record(exec.as_secs_f64());
+        lock_reservoir(&self.exec).record(exec.as_secs_f64());
     }
 
     /// Record one request's end-to-end latency.
     pub fn record_latency(&self, latency: Duration) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_total_ns.fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
-        self.latencies.lock().unwrap().record(latency.as_secs_f64());
+        lock_reservoir(&self.latencies).record(latency.as_secs_f64());
     }
 
     /// Count one error.
@@ -197,8 +207,8 @@ impl Metrics {
 
     /// Consistent point-in-time view of every counter and distribution.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies.lock().unwrap();
-        let exec = self.exec.lock().unwrap();
+        let lat = lock_reservoir(&self.latencies);
+        let exec = lock_reservoir(&self.exec);
         let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let mean_ms = |total_ns: u64, n: u64| {

@@ -27,7 +27,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -175,6 +175,24 @@ fn touch_lru(lru: &mut Vec<String>, name: &str) {
 }
 
 impl ModelRegistry {
+    /// Lock the registry state, surfacing a poisoned lock as a
+    /// [`RegistryError`]: a panic while the state was mid-mutation may
+    /// have torn the entries/LRU/loading invariants, so serving paths
+    /// refuse with an explicit error instead of guessing (or worse,
+    /// cascading the panic into every worker that touches the registry).
+    fn lock_inner(&self) -> std::result::Result<MutexGuard<'_, Inner>, RegistryError> {
+        self.inner
+            .lock()
+            .map_err(|_| RegistryError::Other(anyhow!("model registry lock poisoned")))
+    }
+
+    /// Lock the registry state with poison recovery — for observers and
+    /// registration, whose critical sections are single collection
+    /// operations that cannot be torn mid-way.
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// An empty registry.
     pub fn new(cfg: RegistryConfig) -> Self {
         ModelRegistry {
@@ -203,7 +221,7 @@ impl ModelRegistry {
     /// Adopt an externally-owned coordinator as a pinned, always-loaded
     /// model. Becomes the default if none is set.
     pub fn adopt(&self, name: &str, handle: CoordinatorHandle) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock_unpoisoned();
         inner.entries.insert(
             name.to_string(),
             Arc::new(ModelEntry {
@@ -226,7 +244,7 @@ impl ModelRegistry {
         if name.is_empty() || name.len() > 255 {
             anyhow::bail!("model name must be 1..=255 bytes, got {}", name.len());
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock_unpoisoned();
         inner.sources.insert(name.to_string(), source);
         if inner.default_name.is_none() {
             inner.default_name = Some(name.to_string());
@@ -254,7 +272,7 @@ impl ModelRegistry {
 
     /// Route bare (unnamed) requests to `name` from now on.
     pub fn set_default(&self, name: &str) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock_unpoisoned();
         if !inner.sources.contains_key(name) && !inner.entries.contains_key(name) {
             anyhow::bail!("cannot default to unregistered model '{name}'");
         }
@@ -264,7 +282,7 @@ impl ModelRegistry {
 
     /// The current default model name.
     pub fn default_name(&self) -> Option<String> {
-        self.inner.lock().unwrap().default_name.clone()
+        self.lock_unpoisoned().default_name.clone()
     }
 
     /// Load `name` now (idempotent; touches the LRU). `infer`/`submit`
@@ -281,7 +299,7 @@ impl ModelRegistry {
     /// stays registered and reloads on the next use.
     pub fn unload(&self, name: &str) -> std::result::Result<bool, RegistryError> {
         let removed = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.lock_inner()?;
             if let Some(e) = inner.entries.get(name) {
                 if e.pinned {
                     return Err(RegistryError::Other(anyhow!(
@@ -336,7 +354,7 @@ impl ModelRegistry {
         &self,
         name: Option<&str>,
     ) -> std::result::Result<MetricsSnapshot, RegistryError> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock_inner()?;
         let name = resolve_name(&inner, name)?;
         match inner.entries.get(&name) {
             Some(e) => Ok(e.handle.metrics().snapshot()),
@@ -371,7 +389,7 @@ impl ModelRegistry {
 
     /// Status of every registered/adopted model, sorted by name.
     pub fn list(&self) -> Vec<ModelStatus> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock_unpoisoned();
         let mut names: Vec<String> =
             inner.sources.keys().chain(inner.entries.keys()).cloned().collect();
         names.sort();
@@ -393,7 +411,7 @@ impl ModelRegistry {
 
     /// Names of currently loaded models, sorted.
     pub fn loaded_names(&self) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock_unpoisoned();
         let mut names: Vec<String> = inner.entries.keys().cloned().collect();
         names.sort();
         names
@@ -401,7 +419,7 @@ impl ModelRegistry {
 
     /// Whether `name` currently has a loaded stack.
     pub fn is_loaded(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().entries.contains_key(name)
+        self.lock_unpoisoned().entries.contains_key(name)
     }
 
     /// Get (loading if necessary) the entry for `name`, touching the LRU.
@@ -422,7 +440,7 @@ impl ModelRegistry {
         name: Option<&str>,
         evicted: &mut Vec<Arc<ModelEntry>>,
     ) -> std::result::Result<Arc<ModelEntry>, RegistryError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock_inner()?;
         let name = resolve_name(&inner, name)?;
         loop {
             if let Some(e) = inner.entries.get(&name).cloned() {
@@ -434,20 +452,40 @@ impl ModelRegistry {
             }
             if inner.loading.contains(&name) {
                 // Someone else is building this engine; wait for them.
-                inner = self.loaded_cv.wait(inner).unwrap();
+                inner = match self.loaded_cv.wait(inner) {
+                    Ok(g) => g,
+                    Err(_) => {
+                        return Err(RegistryError::Other(anyhow!(
+                            "model registry lock poisoned while waiting for '{name}' to load"
+                        )))
+                    }
+                };
                 continue;
             }
             inner.loading.insert(name.clone());
             break;
         }
-        let source = inner.sources.get(&name).cloned().unwrap();
+        // The source was present when we claimed the loading slot, but
+        // the lock may be reacquired by the time anyone re-checks; fetch
+        // defensively and release the slot on the (unreachable) miss so
+        // waiters are never stranded on the condvar.
+        let Some(source) = inner.sources.get(&name).cloned() else {
+            inner.loading.remove(&name);
+            drop(inner);
+            self.loaded_cv.notify_all();
+            return Err(RegistryError::Unknown(name));
+        };
         drop(inner);
 
         // The engine build happens without the lock — loading one model
         // must not stall serving on every other model.
         let built = self.spawn_stack(&name, source);
 
-        let mut inner = self.inner.lock().unwrap();
+        // Reacquire with unconditional poison recovery: the `loading`
+        // marker MUST come out and the condvar MUST be notified, or every
+        // thread waiting on this name deadlocks. The sections this lock
+        // guards are single collection ops, so recovery is sound.
+        let mut inner = self.lock_unpoisoned();
         inner.loading.remove(&name);
         let out = match built {
             Ok(coordinator) => {

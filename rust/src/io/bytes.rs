@@ -52,7 +52,11 @@ impl ByteWriter {
     }
 
     pub fn put_str(&mut self, s: &str) {
-        self.put_u32(s.len() as u32);
+        // The container format length-prefixes strings with a u32; a
+        // truncating cast here would silently corrupt the container, so
+        // an over-long string (a writer bug, not corrupt input) panics.
+        let len = u32::try_from(s.len()).expect("container string exceeds u32 length prefix");
+        self.put_u32(len);
         self.put_bytes(s.as_bytes());
     }
 }
@@ -102,7 +106,10 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.get_u64()? as usize;
+        let n64 = self.get_u64()?;
+        let Ok(n) = usize::try_from(n64) else {
+            bail!("corrupt f32 array length {n64}");
+        };
         // Validate against the remaining bytes before allocating: a corrupt
         // length prefix must be an error, not a capacity-overflow panic.
         if n.checked_mul(4).is_none_or(|b| b > self.remaining()) {
@@ -116,7 +123,10 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
-        let n = self.get_u64()? as usize;
+        let n64 = self.get_u64()?;
+        let Ok(n) = usize::try_from(n64) else {
+            bail!("corrupt u64 array length {n64}");
+        };
         if n.checked_mul(8).is_none_or(|b| b > self.remaining()) {
             bail!("corrupt u64 array length {n}");
         }
@@ -128,7 +138,9 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_str(&mut self) -> Result<String> {
-        let n = self.get_u32()? as usize;
+        let Ok(n) = usize::try_from(self.get_u32()?) else {
+            bail!("corrupt string length prefix");
+        };
         Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
     }
 }

@@ -58,7 +58,7 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::gf2::BitVec;
 use crate::io::sqnn_file::{EncryptedLayer, Layer};
@@ -108,8 +108,8 @@ fn sign_buckets(x: &[f32]) -> Option<SignBuckets> {
     if !x.iter().all(|&v| v == 0.0 || v == 1.0 || v == -1.0) {
         return None;
     }
-    let pos = BitVec::from_fn(x.len(), |c| x[c] == 1.0);
-    let neg = BitVec::from_fn(x.len(), |c| x[c] == -1.0);
+    let pos = BitVec::from_fn(x.len(), |c| x.get(c).is_some_and(|&v| v == 1.0));
+    let neg = BitVec::from_fn(x.len(), |c| x.get(c).is_some_and(|&v| v == -1.0));
     Some(SignBuckets { pos, neg })
 }
 
@@ -162,16 +162,16 @@ impl BitplaneKernel {
             return Ok(Vec::new());
         }
         let n = e.rows * e.cols;
-        if n == 0 || e.planes.is_empty() {
+        let Some(p0) = e.planes.first().filter(|_| n > 0) else {
             // No weights to decode: the affine collapses to the bias.
             return Ok(xs.iter().map(|_| e.bias.clone()).collect());
-        }
+        };
         // One plan serves every plane: a layer's planes share one design
         // point (enforced by the container parser and model validation).
-        let plan = ctx.decoder.cache().plan_for(e.layer_id, &e.planes[0]);
+        let plan = ctx.decoder.cache().plan_for(e.layer_id, p0);
         let n_out = plan.n_out();
         let threads = ctx.decoder.threads();
-        let num_slices = e.planes[0].num_slices();
+        let num_slices = p0.num_slices();
         let nq = e.planes.len();
         // Bucket each input once per batch; ternary inputs ride the
         // popcount lanes for every tile.
@@ -191,14 +191,22 @@ impl BitplaneKernel {
                 // slice of over-decode at each edge, never a split row.
                 let k0 = (r0 * e.cols) / n_out;
                 let k1 = (r1 * e.cols).div_ceil(n_out).min(num_slices);
-                for (q, p) in e.planes.iter().enumerate() {
-                    decode_slice_range_into(&plan, p, k0, k1, threads, &mut scratch.bits[q]);
+                // The scratch may hold more buffers than this layer has
+                // planes (it is shared across layers); zipping bounds
+                // both sides.
+                for (p, dst) in e.planes.iter().zip(scratch.bits.iter_mut()) {
+                    decode_slice_range_into(&plan, p, k0, k1, threads, dst);
                 }
-                self.peak_scratch_bits
-                    .fetch_max(nq * scratch.bits[0].len(), Ordering::Relaxed);
+                let tile_bits = scratch.bits.first().map_or(0, |b| b.len());
+                self.peak_scratch_bits.fetch_max(nq * tile_bits, Ordering::Relaxed);
                 let base_bit = k0 * n_out;
-                let bits = &scratch.bits[..nq];
-                let tile_acc = &mut acc[r0 * batch..r1 * batch];
+                let bits = scratch.bits.get(..nq).unwrap_or(&scratch.bits);
+                let Some(tile_acc) = acc.get_mut(r0 * batch..r1 * batch) else {
+                    // Unreachable: `acc` holds `rows * batch` floats and
+                    // `r1 <= rows`; bail instead of panicking if that is
+                    // ever broken upstream.
+                    break;
+                };
                 let shard_threads =
                     if batch * (r1 - r0) * e.cols < MIN_PARALLEL_WORK { 1 } else { threads };
                 shard_rows_mut(r1 - r0, shard_threads, batch, tile_acc, |w0, w1, chunk| {
@@ -207,9 +215,11 @@ impl BitplaneKernel {
                 r0 = r1;
             }
         });
-        // Transpose [row][input] accumulators into one logit row per input.
+        // Transpose [row][input] accumulators into one logit row per
+        // input: row r of input k lives at acc[r * batch + k], i.e. the
+        // stride-`batch` walk starting at offset k.
         Ok((0..batch)
-            .map(|k| (0..e.rows).map(|r| acc[r * batch + k]).collect())
+            .map(|k| acc.iter().skip(k).step_by(batch).copied().collect())
             .collect())
     }
 }
@@ -231,10 +241,15 @@ fn accumulate_rows(
 ) {
     let batch = xs.len();
     let nq = bits.len();
+    if batch == 0 {
+        return;
+    }
     let n_words = e.cols.div_ceil(64);
     // Which inputs ride which path (fixed per batch).
-    let popc: Vec<usize> = (0..batch).filter(|&k| buckets[k].is_some()).collect();
-    let gather: Vec<usize> = (0..batch).filter(|&k| buckets[k].is_none()).collect();
+    let popc: Vec<usize> =
+        buckets.iter().enumerate().filter(|(_, b)| b.is_some()).map(|(k, _)| k).collect();
+    let gather: Vec<usize> =
+        buckets.iter().enumerate().filter(|(_, b)| b.is_none()).map(|(k, _)| k).collect();
     // Per-row partial sums, reused across rows. Gather lanes accumulate
     // f32 activation sums; popcount lanes accumulate exact i32 counts.
     let mut smask = vec![0.0f32; batch];
@@ -242,13 +257,18 @@ fn accumulate_rows(
     let mut scnt = vec![0i32; batch];
     let mut pcnt = vec![0i32; nq * batch];
     let mut pwords = vec![0u64; nq];
-    for r in r0..r1 {
+    for (r, arow) in (r0..r1).zip(acc.chunks_mut(batch)) {
         smask.fill(0.0);
         psum.fill(0.0);
         scnt.fill(0);
         pcnt.fill(0);
         let row_bit = r * e.cols; // flat offset into mask / whole plane
         let local_bit = row_bit - base_bit; // offset into the tile scratch
+        // lint:allow-block(hot per-word loop; every index is bounded by
+        // construction — `k < batch` sizes smask/scnt/xs and `q < nq`
+        // sizes pwords/psum/pcnt, `wi < cols.div_ceil(64)` is within
+        // every bucket's word count since buckets span `e.cols` bits,
+        // and `c < e.cols == x.len()` is checked at the top of `run`)
         for wi in 0..n_words {
             let c0 = wi * 64;
             let width = (e.cols - c0).min(64);
@@ -260,12 +280,12 @@ fn accumulate_rows(
             if m == 0 {
                 continue;
             }
-            for (q, plane) in bits.iter().enumerate() {
-                pwords[q] = plane.window_word(local_bit + c0);
+            for (pw, plane) in pwords.iter_mut().zip(bits) {
+                *pw = plane.window_word(local_bit + c0);
             }
             // Popcount lanes: ternary inputs reduce to set-bit counting.
             for &k in &popc {
-                let b = buckets[k].as_ref().expect("popc lane has buckets");
+                let Some(b) = buckets.get(k).and_then(Option::as_ref) else { continue };
                 let xp = b.pos.as_words()[wi];
                 let xn = b.neg.as_words()[wi];
                 scnt[k] += (m & xp).count_ones() as i32 - (m & xn).count_ones() as i32;
@@ -295,21 +315,24 @@ fn accumulate_rows(
                 }
             }
         }
+        // lint:allow-end
         // Combine: y = bias + Σ_q α_q·(2·S⁺_q − S_mask), one α scale per
         // row per plane (the whole point — α never touches per-column
         // arithmetic).
-        let arow = &mut acc[(r - r0) * batch..(r - r0 + 1) * batch];
+        let bias = e.bias.get(r).copied().unwrap_or(0.0);
         for (k, slot) in arow.iter_mut().enumerate() {
-            let mut y = e.bias[r];
-            if buckets[k].is_some() {
-                let s = scnt[k] as f32;
-                for q in 0..nq {
-                    y += e.alphas[q] * (2.0 * pcnt[q * batch + k] as f32 - s);
+            let mut y = bias;
+            if buckets.get(k).is_some_and(Option::is_some) {
+                let s = scnt.get(k).copied().unwrap_or(0) as f32;
+                for (q, &a) in e.alphas.iter().take(nq).enumerate() {
+                    let c = pcnt.get(q * batch + k).copied().unwrap_or(0);
+                    y += a * (2.0 * c as f32 - s);
                 }
             } else {
-                let s = smask[k];
-                for q in 0..nq {
-                    y += e.alphas[q] * (2.0 * psum[q * batch + k] - s);
+                let s = smask.get(k).copied().unwrap_or(0.0);
+                for (q, &a) in e.alphas.iter().take(nq).enumerate() {
+                    let p = psum.get(q * batch + k).copied().unwrap_or(0.0);
+                    y += a * (2.0 * p - s);
                 }
             }
             *slot = y;
@@ -326,7 +349,9 @@ impl MatmulKernel for BitplaneKernel {
         let Layer::Encrypted(e) = layer else {
             bail!("bitplane kernel bound to a non-encrypted layer {}", layer.name());
         };
-        Ok(self.run(e, ctx, &[x])?.pop().expect("one output per input"))
+        self.run(e, ctx, &[x])?
+            .pop()
+            .ok_or_else(|| anyhow!("bitplane kernel returned no rows for one input"))
     }
 
     /// Batch-major streaming: every tile's planes are decoded once per

@@ -2,7 +2,7 @@
 //! matrix — the reference execution path every other kernel is
 //! bit-compared against.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use anyhow::{bail, Result};
 
@@ -18,10 +18,14 @@ pub fn affine(w: &[f32], rows: usize, cols: usize, x: &[f32], b: &[f32]) -> Vec<
     debug_assert_eq!(w.len(), rows * cols);
     debug_assert_eq!(x.len(), cols);
     debug_assert_eq!(b.len(), rows);
-    let mut y = Vec::with_capacity(rows);
-    for r in 0..rows {
-        let wrow = &w[r * cols..(r + 1) * cols];
-        let mut acc = b[r];
+    // `chunks_exact(0)` panics; a zero-width matrix contributes nothing,
+    // so each output is just its bias.
+    if cols == 0 {
+        return b.to_vec();
+    }
+    let mut y = Vec::with_capacity(b.len());
+    for (wrow, &bias) in w.chunks_exact(cols).zip(b) {
+        let mut acc = bias;
         for (wv, xv) in wrow.iter().zip(x) {
             acc += wv * xv;
         }
@@ -47,6 +51,13 @@ enum Source {
 /// own storage, a prepared cache, or a per-batch materialized buffer.
 pub struct DenseKernel {
     src: Source,
+}
+
+/// Lock the per-batch weight slot with poison recovery: the slot holds
+/// one replaceable buffer, and `forward` re-materializes on a size
+/// mismatch anyway, so a panicked peer cannot leave it unusably torn.
+fn lock_slot(slot: &Mutex<Vec<f32>>) -> MutexGuard<'_, Vec<f32>> {
+    slot.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl DenseKernel {
@@ -77,8 +88,7 @@ impl MatmulKernel for DenseKernel {
 
     fn begin_batch(&self, layer: &Layer, ctx: &KernelCtx<'_>) -> Result<()> {
         if let Source::PerBatchMaterialize(slot) = &self.src {
-            *slot.lock().unwrap() =
-                layer.materialize(ctx.decoder.cache(), &ctx.decode_config()).data;
+            *lock_slot(slot) = layer.materialize(ctx.decoder.cache(), &ctx.decode_config()).data;
         }
         Ok(())
     }
@@ -88,7 +98,7 @@ impl MatmulKernel for DenseKernel {
             // Drop the batch's dense weights: between batches this mode
             // must hold only the encrypted form, like the old engine's
             // per-infer `fresh` buffer did.
-            *slot.lock().unwrap() = Vec::new();
+            *lock_slot(slot) = Vec::new();
         }
         Ok(())
     }
@@ -104,7 +114,7 @@ impl MatmulKernel for DenseKernel {
             }
             Source::Cached(w) => Ok(affine(w, rows, cols, x, layer.bias())),
             Source::PerBatchMaterialize(slot) => {
-                let mut w = slot.lock().unwrap();
+                let mut w = lock_slot(slot);
                 if w.len() != rows * cols {
                     // Robustness: a forward without begin_batch (direct
                     // kernel use outside the engine) materializes here.

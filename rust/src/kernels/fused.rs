@@ -33,7 +33,7 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::gf2::BitVec;
 use crate::io::sqnn_file::{EncryptedLayer, Layer};
@@ -121,21 +121,22 @@ impl FusedDecodeKernel {
         }
         let n = e.rows * e.cols;
         let batch = xs.len();
-        if n == 0 || e.planes.is_empty() || xs.is_empty() {
+        let Some(p0) = e.planes.first().filter(|_| n > 0 && !xs.is_empty()) else {
             // No weights to decode (an empty plane set reconstructs to
-            // all-zero weights): the affine collapses to the bias.
+            // all-zero weights) or an empty batch: the affine collapses
+            // to one bias row per input.
             return Ok(xs.iter().map(|_| e.bias.clone()).collect());
-        }
+        };
         // One plan serves every plane: a layer's planes share one design
         // point (enforced by the container parser and model validation).
-        let plan = ctx.decoder.cache().plan_for(e.layer_id, &e.planes[0]);
+        let plan = ctx.decoder.cache().plan_for(e.layer_id, p0);
         let n_out = plan.n_out();
         let threads = ctx.decoder.threads();
-        let num_slices = e.planes[0].num_slices();
+        let num_slices = p0.num_slices();
         // Row-major [row][input] accumulators, bias-initialized.
         let mut acc = vec![0.0f32; e.rows * batch];
-        for (r, &b) in e.bias.iter().enumerate() {
-            acc[r * batch..(r + 1) * batch].fill(b);
+        for (row, &b) in acc.chunks_mut(batch).zip(&e.bias) {
+            row.fill(b);
         }
         SCRATCH.with(|cell| {
             let scratch = &mut *cell.borrow_mut();
@@ -147,15 +148,17 @@ impl FusedDecodeKernel {
                 let b1 = (k1 * n_out).min(n);
                 let tile_bits = b1 - b0;
                 // 1. Decode every plane's slice range (thread-sharded).
-                for (q, p) in e.planes.iter().enumerate() {
-                    decode_slice_range_into(&plan, p, k0, k1, threads, &mut scratch.bits[q]);
+                //    The scratch may hold more buffers than this layer
+                //    has planes (it is shared across layers); zipping
+                //    bounds both sides.
+                for (p, dst) in e.planes.iter().zip(scratch.bits.iter_mut()) {
+                    decode_slice_range_into(&plan, p, k0, k1, threads, dst);
                 }
                 // 2. Reconstruct the tile's f32 weights — plane-major
                 //    ±α accumulation, pruned positions stay 0.0.
                 scratch.vals.clear();
                 scratch.vals.resize(tile_bits, 0.0);
-                for (q, bits) in scratch.bits[..e.planes.len()].iter().enumerate() {
-                    let a = e.alphas[q];
+                for (bits, &a) in scratch.bits.iter().take(e.planes.len()).zip(&e.alphas) {
                     for (j, v) in scratch.vals.iter_mut().enumerate() {
                         if e.mask.get(b0 + j) {
                             *v += if bits.get(j) { a } else { -a };
@@ -170,9 +173,11 @@ impl FusedDecodeKernel {
                 multiply_tile(&scratch.vals, e.cols, xs, b0, b1, threads, &mut acc);
             }
         });
-        // Transpose [row][input] accumulators into one logit row per input.
+        // Transpose [row][input] accumulators into one logit row per
+        // input: row r of input k lives at acc[r * batch + k], i.e. the
+        // stride-`batch` walk starting at offset k.
         Ok((0..batch)
-            .map(|k| (0..e.rows).map(|r| acc[r * batch + k]).collect())
+            .map(|k| acc.iter().skip(k).step_by(batch).copied().collect())
             .collect())
     }
 }
@@ -205,7 +210,13 @@ fn multiply_tile(
     let r_hi = (b1 - 1) / cols; // inclusive (partial edge rows included)
     let rows_span = r_hi + 1 - r_lo;
     let workers = threads.max(1).min(rows_span);
-    let tile_acc = &mut acc[r_lo * batch..(r_hi + 1) * batch];
+    let Some(tile_acc) = acc.get_mut(r_lo * batch..(r_hi + 1) * batch) else {
+        // Unreachable: `acc` holds `rows * batch` floats and the caller
+        // clamps `b1` to `rows * cols`, so `r_hi < rows`. Skipping the
+        // tile (instead of panicking) keeps the serving path alive if
+        // that invariant is ever broken upstream.
+        return;
+    };
     if workers <= 1 || batch * (b1 - b0) < MIN_PARALLEL_MACS {
         multiply_rows(vals, cols, xs, b0, b1, r_lo, r_hi + 1, tile_acc);
         return;
@@ -235,6 +246,11 @@ fn multiply_rows(
     acc: &mut [f32],
 ) {
     let batch = xs.len();
+    // lint:allow-block(hot inner loop; every window is bounded by
+    // construction — `vals.len() == b1 - b0` and `flat0/flat1` are
+    // clamped into `[b0, b1)`, `c0 + row_vals.len() <= cols == x.len()`,
+    // and `slot < (r1 - r0) * batch == acc.len()` by the caller's
+    // `chunks_mut` sharding)
     for r in r0..r1 {
         let flat0 = b0.max(r * cols);
         let flat1 = b1.min((r + 1) * cols);
@@ -252,6 +268,7 @@ fn multiply_rows(
             acc[slot] = a;
         }
     }
+    // lint:allow-end
 }
 
 impl MatmulKernel for FusedDecodeKernel {
@@ -263,7 +280,9 @@ impl MatmulKernel for FusedDecodeKernel {
         let Layer::Encrypted(e) = layer else {
             bail!("fused-decode kernel bound to a non-encrypted layer {}", layer.name());
         };
-        Ok(self.run(e, ctx, &[x])?.pop().expect("one output per input"))
+        self.run(e, ctx, &[x])?
+            .pop()
+            .ok_or_else(|| anyhow!("fused kernel returned no rows for one input"))
     }
 
     /// Batch-major streaming: the whole point of the fused kernel —

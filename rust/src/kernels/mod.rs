@@ -239,9 +239,10 @@ impl KernelRegistry {
         Ok(KernelRegistry { kernels })
     }
 
-    /// The kernel serving layer `li`.
-    pub fn kernel(&self, li: usize) -> &dyn MatmulKernel {
-        self.kernels[li].as_ref()
+    /// The kernel serving layer `li`, or `None` past the chain — the
+    /// engine surfaces that as an error instead of a worker panic.
+    pub fn kernel(&self, li: usize) -> Option<&dyn MatmulKernel> {
+        self.kernels.get(li).map(|k| &**k)
     }
 
     /// Number of layers covered (== the model's layer count).
@@ -364,7 +365,7 @@ mod tests {
                 let reg =
                     KernelRegistry::build(&model, choice, DecodeMode::PerBatch, &decoder)
                         .unwrap();
-                let k = reg.kernel(li);
+                let k = reg.kernel(li).expect("registry covers every layer");
                 k.begin_batch(layer, &ctx).unwrap();
                 let y = k.forward(layer, &ctx, &x).unwrap();
                 assert_eq!(y.len(), layer.out_dim());

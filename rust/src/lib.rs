@@ -34,6 +34,8 @@ pub mod util;
 pub mod io;
 #[warn(missing_docs)]
 pub mod kernels;
+#[warn(missing_docs)]
+pub mod modelcheck;
 pub mod models;
 pub mod prune;
 pub mod simulator;

@@ -1,0 +1,616 @@
+//! Finite-state abstractions of the serving path's concurrency
+//! protocols, checked exhaustively by [`explore`](super::explore).
+//!
+//! Each model is a faithful abstraction of one real protocol: every
+//! transition corresponds to one atomic step of the implementation (one
+//! critical section, one condvar wakeup), and each doc comment names the
+//! code it mirrors. The properties proved here are exactly the ones the
+//! serving path leans on:
+//!
+//! * [`BlockQueueModel`] — `runtime/pool.rs` `BlockQueue`: capacity is
+//!   never exceeded, items are conserved (popped + queued + shed =
+//!   pushed attempts), and close always lets the consumer drain and
+//!   exit.
+//! * [`WorkerShutdownModel`] — `WorkerPool` wind-down over a closed
+//!   queue: every admitted item is processed before the last worker
+//!   exits, and shutdown always terminates.
+//! * [`RegistryLoadModel`] — `coordinator/registry.rs` condvar-deduped
+//!   load: concurrent requests for one model build it at most once at a
+//!   time, and — crucially — a *failed* build clears the `loading`
+//!   marker and notifies, so waiters retry instead of sleeping forever.
+//! * [`BatcherDrainModel`] — `coordinator/batcher.rs` shutdown: the
+//!   engine is only dropped after every admitted request is answered.
+//! * [`BrokenRegistryLoadModel`] — the registry model with the cleanup
+//!   step deliberately removed: the checker must find the waiter
+//!   deadlock. This is the self-test that the checker can actually
+//!   catch the bug class the real code guards against.
+
+use super::Model;
+
+// ---------------------------------------------------------------------
+// BlockQueue: bounded push/pop/shed with close-and-drain.
+// ---------------------------------------------------------------------
+
+/// State of [`BlockQueueModel`]: counts only — items are
+/// indistinguishable, which keeps the space small without weakening the
+/// conservation property.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct QueueState {
+    /// Items currently queued (`BlockQueue::len`).
+    pub queued: u8,
+    /// Successful `try_push` calls so far.
+    pub pushed: u8,
+    /// Pushes refused with `Full` or `Closed` (the shed path).
+    pub shed: u8,
+    /// Successful pops.
+    pub popped: u8,
+    /// `close()` has run.
+    pub closed: bool,
+    /// Pushes each producer still intends to attempt.
+    pub producers: Vec<u8>,
+    /// The consumer observed `closed && empty` and exited its loop.
+    pub consumer_done: bool,
+}
+
+/// `runtime/pool.rs` `BlockQueue` under `p` producers × `per` pushes,
+/// one consumer, an any-time `close()`, and capacity `cap`.
+///
+/// Transition ↔ code map: `push` / `shed-full` are the two exits of
+/// `try_push`'s critical section; `shed-closed` is `PushError::Closed`;
+/// `pop` is `pop_timeout` returning an item (including the post-close
+/// drain); `observe close` is `pop_timeout` returning `None` on
+/// `closed && empty`; `close` is `BlockQueue::close`.
+pub struct BlockQueueModel {
+    /// Queue capacity (`BlockQueue::with_capacity`).
+    pub cap: u8,
+    /// Concurrent producer threads.
+    pub producers: u8,
+    /// `try_push` attempts per producer.
+    pub pushes_each: u8,
+}
+
+impl Model for BlockQueueModel {
+    type State = QueueState;
+
+    fn initial(&self) -> QueueState {
+        QueueState {
+            queued: 0,
+            pushed: 0,
+            shed: 0,
+            popped: 0,
+            closed: false,
+            producers: vec![self.pushes_each; self.producers as usize],
+            consumer_done: false,
+        }
+    }
+
+    fn transitions(&self, s: &QueueState) -> Vec<(String, QueueState)> {
+        let mut out = Vec::new();
+        for (i, &left) in s.producers.iter().enumerate() {
+            if left == 0 {
+                continue;
+            }
+            let mut n = s.clone();
+            if let Some(slot) = n.producers.get_mut(i) {
+                *slot -= 1;
+            }
+            if s.closed {
+                n.shed += 1;
+                out.push((format!("producer {i}: push refused (closed)"), n));
+            } else if s.queued >= self.cap {
+                n.shed += 1;
+                out.push((format!("producer {i}: shed (full)"), n));
+            } else {
+                n.queued += 1;
+                n.pushed += 1;
+                out.push((format!("producer {i}: push"), n));
+            }
+        }
+        if !s.consumer_done {
+            if s.queued > 0 {
+                let mut n = s.clone();
+                n.queued -= 1;
+                n.popped += 1;
+                out.push(("consumer: pop".to_string(), n));
+            } else if s.closed {
+                let mut n = s.clone();
+                n.consumer_done = true;
+                out.push(("consumer: observe close, exit".to_string(), n));
+            }
+            // Empty + not closed: the consumer blocks in `pop_timeout`.
+            // Not a transition — but always some producer or the closer
+            // can still act, so this never deadlocks the whole system.
+        }
+        if !s.closed {
+            let mut n = s.clone();
+            n.closed = true;
+            out.push(("close".to_string(), n));
+        }
+        out
+    }
+
+    fn invariant(&self, s: &QueueState) -> Result<(), String> {
+        if s.queued > self.cap {
+            return Err(format!("queue depth {} exceeds capacity {}", s.queued, self.cap));
+        }
+        if s.popped + s.queued != s.pushed {
+            return Err(format!(
+                "items not conserved: popped {} + queued {} != pushed {}",
+                s.popped, s.queued, s.pushed
+            ));
+        }
+        let attempted: u8 = self.producers * self.pushes_each
+            - s.producers.iter().sum::<u8>();
+        if s.pushed + s.shed != attempted {
+            return Err(format!(
+                "push accounting broken: pushed {} + shed {} != attempted {attempted}",
+                s.pushed, s.shed
+            ));
+        }
+        if s.consumer_done && !s.closed {
+            return Err("consumer exited before close".to_string());
+        }
+        Ok(())
+    }
+
+    fn is_terminal(&self, s: &QueueState) -> bool {
+        // Quiescence: everyone finished and the consumer saw the close.
+        // (`close` is always enabled while open, so `closed` holds in
+        // every stuck state; listed for clarity.)
+        s.closed && s.consumer_done && s.producers.iter().all(|&p| p == 0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// WorkerPool shutdown: drain, then exit.
+// ---------------------------------------------------------------------
+
+/// Per-worker phase in [`WorkerShutdownModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WorkerPhase {
+    /// Blocked in `pop_timeout` (or between pops).
+    Idle,
+    /// Holding one popped item, running the worker body.
+    Busy,
+    /// Returned from the worker function (`WorkerPool::join` target).
+    Exited,
+}
+
+/// State of [`WorkerShutdownModel`].
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PoolState {
+    /// Items sitting in the shared queue.
+    pub queued: u8,
+    /// Submissions the client still intends to attempt.
+    pub submits_left: u8,
+    /// Submissions shed at admission (queue full or closed).
+    pub rejected: u8,
+    /// Items fully processed by some worker.
+    pub completed: u8,
+    /// `close()` has run on the shared queue.
+    pub closed: bool,
+    /// Per-worker phase.
+    pub workers: Vec<WorkerPhase>,
+}
+
+/// `WorkerPool` workers looping `pop_timeout` over one shared
+/// `BlockQueue`, wound down by `close()` — the server's worker/acceptor
+/// shutdown shape (`server/mod.rs`) and the batcher's executor-exit
+/// shape. Proves: shutdown always terminates (no stuck worker), and
+/// every item admitted before close is completed before the last worker
+/// exits — the queue is drained, not dropped.
+pub struct WorkerShutdownModel {
+    /// Pool size (`WorkerPool::spawn` thread count).
+    pub workers: u8,
+    /// Shared queue capacity.
+    pub queue_cap: u8,
+    /// Submission attempts racing the shutdown.
+    pub submits: u8,
+}
+
+impl Model for WorkerShutdownModel {
+    type State = PoolState;
+
+    fn initial(&self) -> PoolState {
+        PoolState {
+            queued: 0,
+            submits_left: self.submits,
+            rejected: 0,
+            completed: 0,
+            closed: false,
+            workers: vec![WorkerPhase::Idle; self.workers as usize],
+        }
+    }
+
+    fn transitions(&self, s: &PoolState) -> Vec<(String, PoolState)> {
+        let mut out = Vec::new();
+        if s.submits_left > 0 {
+            let mut n = s.clone();
+            n.submits_left -= 1;
+            if s.closed || s.queued >= self.queue_cap {
+                n.rejected += 1;
+                out.push(("submitter: shed".to_string(), n));
+            } else {
+                n.queued += 1;
+                out.push(("submitter: enqueue".to_string(), n));
+            }
+        }
+        for (i, &phase) in s.workers.iter().enumerate() {
+            match phase {
+                WorkerPhase::Idle => {
+                    if s.queued > 0 {
+                        let mut n = s.clone();
+                        n.queued -= 1;
+                        if let Some(w) = n.workers.get_mut(i) {
+                            *w = WorkerPhase::Busy;
+                        }
+                        out.push((format!("worker {i}: pop"), n));
+                    } else if s.closed {
+                        // pop_timeout returns None only when closed AND
+                        // drained — a worker can never exit past queued
+                        // work.
+                        let mut n = s.clone();
+                        if let Some(w) = n.workers.get_mut(i) {
+                            *w = WorkerPhase::Exited;
+                        }
+                        out.push((format!("worker {i}: observe close, exit"), n));
+                    }
+                }
+                WorkerPhase::Busy => {
+                    let mut n = s.clone();
+                    n.completed += 1;
+                    if let Some(w) = n.workers.get_mut(i) {
+                        *w = WorkerPhase::Idle;
+                    }
+                    out.push((format!("worker {i}: complete item"), n));
+                }
+                WorkerPhase::Exited => {}
+            }
+        }
+        if !s.closed {
+            let mut n = s.clone();
+            n.closed = true;
+            out.push(("close queue".to_string(), n));
+        }
+        out
+    }
+
+    fn invariant(&self, s: &PoolState) -> Result<(), String> {
+        if s.queued > self.queue_cap {
+            return Err(format!("queue depth {} exceeds cap {}", s.queued, self.queue_cap));
+        }
+        let busy = s.workers.iter().filter(|w| **w == WorkerPhase::Busy).count() as u8;
+        let admitted = self.submits - s.submits_left - s.rejected;
+        if s.completed + busy + s.queued != admitted {
+            return Err(format!(
+                "work lost: completed {} + busy {busy} + queued {} != admitted {admitted}",
+                s.completed, s.queued
+            ));
+        }
+        if s.workers.iter().any(|w| *w == WorkerPhase::Exited) && !s.closed {
+            return Err("a worker exited before the queue closed".to_string());
+        }
+        let all_exited = s.workers.iter().all(|w| *w == WorkerPhase::Exited);
+        if all_exited && s.queued > 0 {
+            return Err(format!("{} items stranded after the last worker exited", s.queued));
+        }
+        Ok(())
+    }
+
+    fn is_terminal(&self, s: &PoolState) -> bool {
+        s.closed
+            && s.submits_left == 0
+            && s.queued == 0
+            && s.workers.iter().all(|w| *w == WorkerPhase::Exited)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry condvar-deduped load.
+// ---------------------------------------------------------------------
+
+/// Per-requester phase in the registry load protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LoadPhase {
+    /// About to take the registry lock for the first time.
+    Start,
+    /// In `loaded_cv.wait` — runnable only once `loaded || !loading`
+    /// (the condvar re-check under the lock).
+    Waiting,
+    /// Holds the `loading` marker and builds outside the lock.
+    Building,
+    /// Returned (with the model, or with the build error).
+    Done,
+}
+
+/// State of [`RegistryLoadModel`] / [`BrokenRegistryLoadModel`].
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LoadState {
+    /// The model is published in the registry map.
+    pub loaded: bool,
+    /// The `loading` marker: some thread owns the build.
+    pub loading: bool,
+    /// Builds started (dedup bounds *concurrent* builders to one; after
+    /// a failed build a retry is legitimate).
+    pub builds: u8,
+    /// Failure budget left (each build may fail while budget remains —
+    /// the checker explores both outcomes).
+    pub failures_left: u8,
+    /// Per-requester phase.
+    pub threads: Vec<LoadPhase>,
+}
+
+/// `coordinator/registry.rs` `entry_impl` for one model name under `t`
+/// concurrent requesters: first thread in sets the `loading` marker and
+/// builds outside the lock; the rest wait on `loaded_cv`; the builder
+/// reacquires the lock, publishes (or fails), **always removes the
+/// marker, and always notifies**. Proves: at most one builder at a time,
+/// everyone terminates even when builds fail (waiters wake and retry) —
+/// the exact property the poison/error-path cleanup in `entry_impl`
+/// exists to protect.
+pub struct RegistryLoadModel {
+    /// Concurrent requesters for the same model name.
+    pub threads: u8,
+    /// How many builds may fail before one succeeds.
+    pub failures: u8,
+}
+
+impl RegistryLoadModel {
+    fn transitions_impl(s: &LoadState, cleanup_on_failure: bool) -> Vec<(String, LoadState)> {
+        let mut out = Vec::new();
+        for (i, &phase) in s.threads.iter().enumerate() {
+            match phase {
+                LoadPhase::Start => {
+                    let mut n = s.clone();
+                    if s.loaded {
+                        if let Some(t) = n.threads.get_mut(i) {
+                            *t = LoadPhase::Done;
+                        }
+                        out.push((format!("thread {i}: hit (already loaded)"), n));
+                    } else if s.loading {
+                        if let Some(t) = n.threads.get_mut(i) {
+                            *t = LoadPhase::Waiting;
+                        }
+                        out.push((format!("thread {i}: wait on loaded_cv"), n));
+                    } else {
+                        n.loading = true;
+                        if let Some(t) = n.threads.get_mut(i) {
+                            *t = LoadPhase::Building;
+                        }
+                        out.push((format!("thread {i}: take loading marker, build"), n));
+                    }
+                }
+                LoadPhase::Waiting => {
+                    // A condvar waiter only runs its re-check once the
+                    // builder published or released the marker (wait
+                    // returns holding the lock; these are the only two
+                    // notify sites). While `loading && !loaded` the
+                    // waiter has no enabled transition — if the builder
+                    // never cleans up, that is the deadlock the checker
+                    // must surface.
+                    if s.loaded {
+                        let mut n = s.clone();
+                        if let Some(t) = n.threads.get_mut(i) {
+                            *t = LoadPhase::Done;
+                        }
+                        out.push((format!("thread {i}: woken, model loaded"), n));
+                    } else if !s.loading {
+                        let mut n = s.clone();
+                        n.loading = true;
+                        if let Some(t) = n.threads.get_mut(i) {
+                            *t = LoadPhase::Building;
+                        }
+                        out.push((format!("thread {i}: woken, retry build"), n));
+                    }
+                }
+                LoadPhase::Building => {
+                    // Success: publish, clear the marker, notify.
+                    let mut ok = s.clone();
+                    ok.loaded = true;
+                    ok.loading = false;
+                    ok.builds += 1;
+                    if let Some(t) = ok.threads.get_mut(i) {
+                        *t = LoadPhase::Done;
+                    }
+                    out.push((format!("thread {i}: build ok, publish + notify"), ok));
+                    // Failure: the error path must still clear the
+                    // marker and notify (the broken variant skips it).
+                    if s.failures_left > 0 {
+                        let mut bad = s.clone();
+                        bad.builds += 1;
+                        bad.failures_left -= 1;
+                        if cleanup_on_failure {
+                            bad.loading = false;
+                        }
+                        if let Some(t) = bad.threads.get_mut(i) {
+                            *t = LoadPhase::Done;
+                        }
+                        let step = if cleanup_on_failure {
+                            format!("thread {i}: build fails, clear marker + notify")
+                        } else {
+                            format!("thread {i}: build fails, FORGETS cleanup")
+                        };
+                        out.push((step, bad));
+                    }
+                }
+                LoadPhase::Done => {}
+            }
+        }
+        out
+    }
+
+    fn invariant_impl(s: &LoadState) -> Result<(), String> {
+        let building = s.threads.iter().filter(|t| **t == LoadPhase::Building).count();
+        if building > 1 {
+            return Err(format!("{building} threads building the same model concurrently"));
+        }
+        if building == 1 && !s.loading {
+            return Err("a thread builds without holding the loading marker".to_string());
+        }
+        Ok(())
+    }
+}
+
+impl Model for RegistryLoadModel {
+    type State = LoadState;
+
+    fn initial(&self) -> LoadState {
+        LoadState {
+            loaded: false,
+            loading: false,
+            builds: 0,
+            failures_left: self.failures,
+            threads: vec![LoadPhase::Start; self.threads as usize],
+        }
+    }
+
+    fn transitions(&self, s: &LoadState) -> Vec<(String, LoadState)> {
+        Self::transitions_impl(s, true)
+    }
+
+    fn invariant(&self, s: &LoadState) -> Result<(), String> {
+        Self::invariant_impl(s)
+    }
+
+    fn is_terminal(&self, s: &LoadState) -> bool {
+        s.threads.iter().all(|t| *t == LoadPhase::Done)
+    }
+}
+
+/// [`RegistryLoadModel`] with the failure-path cleanup deliberately
+/// removed: a failing builder returns without clearing `loading` or
+/// notifying, so waiters sleep forever. [`explore`](super::explore)
+/// must report the deadlock — the negative self-test proving the
+/// checker catches this bug class at all.
+pub struct BrokenRegistryLoadModel {
+    /// Concurrent requesters for the same model name.
+    pub threads: u8,
+}
+
+impl Model for BrokenRegistryLoadModel {
+    type State = LoadState;
+
+    fn initial(&self) -> LoadState {
+        LoadState {
+            loaded: false,
+            loading: false,
+            builds: 0,
+            failures_left: 1,
+            threads: vec![LoadPhase::Start; self.threads as usize],
+        }
+    }
+
+    fn transitions(&self, s: &LoadState) -> Vec<(String, LoadState)> {
+        RegistryLoadModel::transitions_impl(s, false)
+    }
+
+    fn invariant(&self, s: &LoadState) -> Result<(), String> {
+        RegistryLoadModel::invariant_impl(s)
+    }
+
+    fn is_terminal(&self, s: &LoadState) -> bool {
+        s.threads.iter().all(|t| *t == LoadPhase::Done)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batcher: drain before unload.
+// ---------------------------------------------------------------------
+
+/// State of [`BatcherDrainModel`].
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DrainState {
+    /// Requests past admission control, not yet answered.
+    pub in_flight: u8,
+    /// Submissions the clients still intend to attempt.
+    pub submits_left: u8,
+    /// Submissions refused after `shutdown` (`SubmitError::Down`).
+    pub rejected: u8,
+    /// Requests answered by the executor.
+    pub completed: u8,
+    /// `shutdown()` was observed — no further admissions.
+    pub draining: bool,
+    /// The engine (the executor thread's model) is still alive.
+    pub engine_alive: bool,
+}
+
+/// `coordinator/batcher.rs` shutdown: the executor observes `shutdown`,
+/// stops admitting, *drains* every already-admitted request, and only
+/// then exits and drops the engine — so unloading a model never turns
+/// an admitted request into a dropped one. Proves: the engine is never
+/// gone while a request is in flight, and shutdown always terminates
+/// with every submission either completed or cleanly rejected.
+pub struct BatcherDrainModel {
+    /// Submission attempts racing the shutdown.
+    pub submits: u8,
+}
+
+impl Model for BatcherDrainModel {
+    type State = DrainState;
+
+    fn initial(&self) -> DrainState {
+        DrainState {
+            in_flight: 0,
+            submits_left: self.submits,
+            rejected: 0,
+            completed: 0,
+            draining: false,
+            engine_alive: true,
+        }
+    }
+
+    fn transitions(&self, s: &DrainState) -> Vec<(String, DrainState)> {
+        let mut out = Vec::new();
+        if s.submits_left > 0 {
+            let mut n = s.clone();
+            n.submits_left -= 1;
+            if s.draining {
+                n.rejected += 1;
+                out.push(("client: submit rejected (down)".to_string(), n));
+            } else {
+                n.in_flight += 1;
+                out.push(("client: submit admitted".to_string(), n));
+            }
+        }
+        if s.in_flight > 0 && s.engine_alive {
+            let mut n = s.clone();
+            n.in_flight -= 1;
+            n.completed += 1;
+            out.push(("executor: answer one request".to_string(), n));
+        }
+        if !s.draining {
+            let mut n = s.clone();
+            n.draining = true;
+            out.push(("shutdown requested".to_string(), n));
+        }
+        // The drain gate: the executor exits (dropping the engine) only
+        // once draining and fully drained — the guard under proof.
+        if s.engine_alive && s.draining && s.in_flight == 0 {
+            let mut n = s.clone();
+            n.engine_alive = false;
+            out.push(("executor: drained, drop engine".to_string(), n));
+        }
+        out
+    }
+
+    fn invariant(&self, s: &DrainState) -> Result<(), String> {
+        if !s.engine_alive && s.in_flight > 0 {
+            return Err(format!(
+                "engine dropped with {} admitted requests unanswered",
+                s.in_flight
+            ));
+        }
+        let seen = self.submits - s.submits_left;
+        if s.completed + s.rejected + s.in_flight != seen {
+            return Err(format!(
+                "request lost: completed {} + rejected {} + in-flight {} != submitted {seen}",
+                s.completed, s.rejected, s.in_flight
+            ));
+        }
+        Ok(())
+    }
+
+    fn is_terminal(&self, s: &DrainState) -> bool {
+        !s.engine_alive && s.submits_left == 0 && s.in_flight == 0
+    }
+}

@@ -16,8 +16,17 @@
 //!   thread-per-connection `expect("spawn conn thread")` could.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Lock with poison recovery. Every critical section in this module is
+/// a single collection operation, so a panic mid-section cannot leave
+/// the queue in a torn state — and the serving tier must shed or drain
+/// through a poisoned queue, not cascade one worker's panic into every
+/// thread that touches the lock afterwards.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Why a non-blocking push was refused (the item is handed back).
 #[derive(Debug)]
@@ -52,7 +61,7 @@ impl<T> BlockQueue<T> {
 
     /// Push without blocking; a full or closed queue refuses the item.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_recover(&self.inner);
         if q.closed {
             return Err(PushError::Closed(item));
         }
@@ -68,13 +77,13 @@ impl<T> BlockQueue<T> {
     /// Pop without blocking. Items still queued when the queue closes are
     /// drained, not dropped — callers own their cleanup.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().items.pop_front()
+        lock_recover(&self.inner).items.pop_front()
     }
 
     /// Pop, waiting up to `timeout` for an item. Returns `None` on
     /// timeout or when the queue is closed *and* drained.
     pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_recover(&self.inner);
         loop {
             if let Some(item) = q.items.pop_front() {
                 return Some(item);
@@ -82,7 +91,10 @@ impl<T> BlockQueue<T> {
             if q.closed {
                 return None;
             }
-            let (guard, res) = self.not_empty.wait_timeout(q, timeout).unwrap();
+            let (guard, res) = self
+                .not_empty
+                .wait_timeout(q, timeout)
+                .unwrap_or_else(PoisonError::into_inner);
             q = guard;
             if res.timed_out() {
                 return q.items.pop_front();
@@ -92,18 +104,18 @@ impl<T> BlockQueue<T> {
 
     /// Close the queue: further pushes fail, blocked poppers wake.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.not_empty.notify_all();
     }
 
     /// Whether [`BlockQueue::close`] has been called.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock_recover(&self.inner).closed
     }
 
     /// Items currently queued.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock_recover(&self.inner).items.len()
     }
 
     /// Whether the queue is currently empty.

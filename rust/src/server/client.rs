@@ -1,13 +1,18 @@
 //! Minimal blocking client (tests, examples, `sqnn client` / `sqnn
 //! stats` / `sqnn models`). One request in flight per connection, like
-//! the server expects.
+//! the server expects. Every opcode byte comes from
+//! [`super::protocol`], and length/count fields cross `try_from`
+//! instead of truncating `as` casts (lint rules R2/R3).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
 use anyhow::{Context, Result};
 
-use super::conn::NAMED_INFER_FLAG;
+use super::protocol::{
+    le_f32, MAX_INFER_FLOATS, NAMED_INFER_FLAG, OP_ACK, OP_ERR, OP_INFER, OP_LIST, OP_LOAD,
+    OP_LOGITS, OP_QUIT, OP_STATS, OP_STATS_LEGACY, OP_UNLOAD,
+};
 
 /// Blocking framed-protocol client.
 pub struct Client {
@@ -30,19 +35,27 @@ impl Client {
     /// flags the in-band name; bare requests stay wire-identical to the
     /// single-model protocol).
     pub fn infer_named(&mut self, model: Option<&str>, input: &[f32]) -> Result<Vec<f32>> {
+        // The count word only has 31 usable bits (bit 31 is the name
+        // flag) and the server refuses anything past its cap anyway, so
+        // reject locally instead of truncating the length on the wire.
+        let count = u32::try_from(input.len())
+            .ok()
+            .filter(|&n| n & NAMED_INFER_FLAG == 0)
+            .with_context(|| format!("input too large to frame: {} floats", input.len()))?;
         // One buffered write per request: hundreds of tiny write()s
         // would hit Nagle + syscall overhead and dominate latency.
         let mut msg = Vec::with_capacity(8 + input.len() * 4);
-        msg.push(b'I');
+        msg.push(OP_INFER);
         match model {
-            None => msg.extend_from_slice(&(input.len() as u32).to_le_bytes()),
+            None => msg.extend_from_slice(&count.to_le_bytes()),
             Some(name) => {
                 anyhow::ensure!(
                     !name.is_empty() && name.len() <= 255,
                     "model name must be 1..=255 bytes"
                 );
-                msg.extend_from_slice(&(input.len() as u32 | NAMED_INFER_FLAG).to_le_bytes());
-                msg.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                let name_len = u16::try_from(name.len()).context("model name length")?;
+                msg.extend_from_slice(&(count | NAMED_INFER_FLAG).to_le_bytes());
+                msg.extend_from_slice(&name_len.to_le_bytes());
                 msg.extend_from_slice(name.as_bytes());
             }
         }
@@ -50,25 +63,20 @@ impl Client {
             msg.extend_from_slice(&v.to_le_bytes());
         }
         self.stream.write_all(&msg)?;
-        let mut op = [0u8; 1];
-        self.stream.read_exact(&mut op)?;
-        let mut nb = [0u8; 4];
-        self.stream.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
+        let op = self.read_op()?;
+        let n = self.read_len()?;
         // Only `O` (logits: n is a float count) and `E` (error: n is a
         // byte length) are valid replies; anything else means a desynced
         // or incompatible peer, and parsing its payload as f32 logits
         // would silently corrupt results.
-        match op[0] {
-            b'O' => {
+        match op {
+            OP_LOGITS => {
+                anyhow::ensure!(n <= MAX_INFER_FLOATS, "oversized logits reply ({n} floats)");
                 let mut raw = vec![0u8; n * 4];
                 self.stream.read_exact(&mut raw)?;
-                Ok(raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect())
+                Ok(raw.chunks_exact(4).map(le_f32).collect())
             }
-            b'E' => {
+            OP_ERR => {
                 let mut raw = vec![0u8; n];
                 self.stream.read_exact(&mut raw)?;
                 anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw));
@@ -79,12 +87,12 @@ impl Client {
 
     /// Ask the server to load a model now (`L`). Returns the ack text.
     pub fn load(&mut self, name: &str) -> Result<String> {
-        self.control(b'L', name)
+        self.control(OP_LOAD, name)
     }
 
     /// Ask the server to unload a model (`U`). Returns the ack text.
     pub fn unload(&mut self, name: &str) -> Result<String> {
-        self.control(b'U', name)
+        self.control(OP_UNLOAD, name)
     }
 
     fn control(&mut self, op: u8, name: &str) -> Result<String> {
@@ -92,36 +100,35 @@ impl Client {
             !name.is_empty() && name.len() <= 255,
             "model name must be 1..=255 bytes"
         );
+        let name_len = u16::try_from(name.len()).context("model name length")?;
         let mut msg = Vec::with_capacity(3 + name.len());
         msg.push(op);
-        msg.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        msg.extend_from_slice(&name_len.to_le_bytes());
         msg.extend_from_slice(name.as_bytes());
         self.stream.write_all(&msg)?;
         let (rop, raw) = self.read_framed()?;
         match rop {
-            b'K' => Ok(String::from_utf8_lossy(&raw).into_owned()),
-            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            OP_ACK => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            OP_ERR => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
             other => anyhow::bail!("unexpected control reply opcode {other}"),
         }
     }
 
     /// Model list (`P`): JSON array of per-model status + metrics.
     pub fn models_json(&mut self) -> Result<String> {
-        self.stream.write_all(b"P")?;
+        self.stream.write_all(&[OP_LIST])?;
         let (op, raw) = self.read_framed()?;
         match op {
-            b'P' => Ok(String::from_utf8_lossy(&raw).into_owned()),
-            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            OP_LIST => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            OP_ERR => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
             other => anyhow::bail!("unexpected models reply opcode {other}"),
         }
     }
 
     /// Legacy bare-framed stats (`S`: u32 len + JSON, no opcode byte).
     pub fn stats_json(&mut self) -> Result<String> {
-        self.stream.write_all(b"S")?;
-        let mut nb = [0u8; 4];
-        self.stream.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
+        self.stream.write_all(&[OP_STATS_LEGACY])?;
+        let n = self.read_len()?;
         let mut raw = vec![0u8; n];
         self.stream.read_exact(&mut raw)?;
         Ok(String::from_utf8_lossy(&raw).into_owned())
@@ -131,23 +138,44 @@ impl Client {
     /// byte like `O`/`E`, so errors are distinguishable from payloads.
     /// Returns the snapshot JSON line (`sqnn stats` prints it verbatim).
     pub fn stats(&mut self) -> Result<String> {
-        self.stream.write_all(b"M")?;
+        self.stream.write_all(&[OP_STATS])?;
         let (op, raw) = self.read_framed()?;
         match op {
-            b'M' => Ok(String::from_utf8_lossy(&raw).into_owned()),
-            b'E' => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
+            OP_STATS => Ok(String::from_utf8_lossy(&raw).into_owned()),
+            OP_ERR => anyhow::bail!("server error: {}", String::from_utf8_lossy(&raw)),
             other => anyhow::bail!("unexpected stats reply opcode {other}"),
         }
     }
 
-    fn read_framed(&mut self) -> Result<(u8, Vec<u8>)> {
-        let mut op = [0u8; 1];
-        self.stream.read_exact(&mut op)?;
+    /// Tell the server to close this connection (`Q`) after flushing any
+    /// queued replies, then drop the stream. Politer than a bare drop:
+    /// the server frees the multiplexing slot immediately instead of
+    /// discovering the dead peer on its next read.
+    pub fn close(mut self) -> Result<()> {
+        self.stream.write_all(&[OP_QUIT])?;
+        Ok(())
+    }
+
+    fn read_op(&mut self) -> Result<u8> {
+        let mut op = 0u8;
+        self.stream.read_exact(std::slice::from_mut(&mut op))?;
+        Ok(op)
+    }
+
+    /// Read a u32 length word and widen it checked — `as usize` would be
+    /// a silent truncation on 16-bit targets and an unchecked trust of a
+    /// hostile peer everywhere else.
+    fn read_len(&mut self) -> Result<usize> {
         let mut nb = [0u8; 4];
         self.stream.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
+        usize::try_from(u32::from_le_bytes(nb)).context("reply length exceeds address space")
+    }
+
+    fn read_framed(&mut self) -> Result<(u8, Vec<u8>)> {
+        let op = self.read_op()?;
+        let n = self.read_len()?;
         let mut raw = vec![0u8; n];
         self.stream.read_exact(&mut raw)?;
-        Ok((op[0], raw))
+        Ok((op, raw))
     }
 }

@@ -9,6 +9,13 @@
 //! reply ordering is trivially correct and a connection can never
 //! interleave two models' responses.
 //!
+//! Nothing here may panic either (`sqnn-lint` rule R1): a worker thread
+//! multiplexes many peers, so a panic triggered by one hostile byte
+//! stream would tear down every connection sharing the worker. All
+//! frame fields are parsed with the total helpers in
+//! [`super::protocol`], and every length word crosses `try_from` with a
+//! framed `E` fallback instead of an `as` truncation (rule R3).
+//!
 //! Timeouts: a *started* frame (or an unread reply) that makes no
 //! progress for [`FRAME_STALL_TIMEOUT`] closes the connection — that is
 //! an abandoned peer, and it must not pin a multiplexing slot forever.
@@ -24,20 +31,16 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::ReplyReceiver;
 use crate::coordinator::registry::ModelRegistry;
+use crate::server::protocol::{
+    le_f32, le_u16, le_u32, MAX_INFER_FLOATS, NAMED_INFER_FLAG, OP_ACK, OP_ERR, OP_INFER, OP_LIST,
+    OP_LOAD, OP_LOGITS, OP_QUIT, OP_STATS, OP_STATS_LEGACY, OP_UNLOAD,
+};
 
 /// How long a started frame (or an unflushed reply) may sit with no
 /// bytes moving before the connection is dropped. Distinguishes a slow
 /// peer (pauses between chunks are fine) from an abandoned truncated
 /// frame.
 pub(crate) const FRAME_STALL_TIMEOUT: Duration = Duration::from_secs(2);
-
-/// Hard cap on `I` payload size, pre-allocation guard.
-const MAX_INFER_FLOATS: usize = 1 << 20;
-
-/// Bit 31 of the `I` float-count word flags an in-band model name
-/// (u16 length + UTF-8 bytes) between the count and the floats. Safe to
-/// steal: the float count is capped at [`MAX_INFER_FLOATS`] anyway.
-pub(crate) const NAMED_INFER_FLAG: u32 = 1 << 31;
 
 /// RAII live-connection counter: constructed at accept, decremented on
 /// drop wherever the connection dies (worker close, queue drain, shed).
@@ -126,7 +129,7 @@ impl Conn {
     /// (the connection queue refused them).
     pub(crate) fn reject_busy(mut self) {
         let mut out = Vec::new();
-        push_framed(&mut out, b'E', b"busy: connection limit reached");
+        push_framed(&mut out, OP_ERR, b"busy: connection limit reached");
         let _ = self.stream.write_all(&out);
     }
 
@@ -145,13 +148,13 @@ impl Conn {
                     progressed = true;
                 }
                 Ok(Err(e)) => {
-                    push_framed(&mut self.wbuf, b'E', format!("{e:#}").as_bytes());
+                    push_framed(&mut self.wbuf, OP_ERR, format!("{e:#}").as_bytes());
                     self.pending = None;
                     progressed = true;
                 }
                 Err(TryRecvError::Empty) => {}
                 Err(TryRecvError::Disconnected) => {
-                    push_framed(&mut self.wbuf, b'E', b"executor dropped reply");
+                    push_framed(&mut self.wbuf, OP_ERR, b"executor dropped reply");
                     self.pending = None;
                     progressed = true;
                 }
@@ -209,10 +212,10 @@ impl Conn {
             if self.rbuf.len() < self.need {
                 let mut tmp = [0u8; 4096];
                 let want = (self.need - self.rbuf.len()).min(tmp.len());
-                match self.stream.read(&mut tmp[..want]) {
+                match self.stream.read(tmp.get_mut(..want).unwrap_or(&mut [])) {
                     Ok(0) => return (progressed, false), // peer closed
                     Ok(n) => {
-                        self.rbuf.extend_from_slice(&tmp[..n]);
+                        self.rbuf.extend_from_slice(tmp.get(..n).unwrap_or(&[]));
                         self.last_progress = Instant::now();
                         progressed = true;
                     }
@@ -241,57 +244,79 @@ impl Conn {
         let stage = std::mem::replace(&mut self.stage, Stage::Op);
         self.need = 1;
         match stage {
-            Stage::Op => match data[0] {
-                b'I' => self.enter(Stage::IHdr, 4),
-                b'M' => match registry.snapshot(None) {
-                    Ok(s) => push_framed(&mut self.wbuf, b'M', s.to_json().as_bytes()),
-                    Err(e) => push_framed(&mut self.wbuf, b'E', e.to_string().as_bytes()),
-                },
-                b'S' => {
-                    // Legacy bare-framed stats: u32 len + JSON, no opcode
-                    // byte. Errors become a JSON object for old clients.
-                    let json = match registry.snapshot(None) {
-                        Ok(s) => s.to_json(),
-                        Err(e) => format!("{{\"error\":\"{e}\"}}"),
-                    };
-                    self.wbuf.extend_from_slice(&(json.len() as u32).to_le_bytes());
-                    self.wbuf.extend_from_slice(json.as_bytes());
-                }
-                b'P' => push_framed(&mut self.wbuf, b'P', registry.list_json().as_bytes()),
-                b'Q' => self.close_after_flush = true,
-                op @ (b'L' | b'U') => self.enter(Stage::CtlNameLen { op }, 2),
-                other => {
-                    push_framed(
-                        &mut self.wbuf,
-                        b'E',
-                        format!("unknown opcode {other}").as_bytes(),
-                    );
+            Stage::Op => {
+                let Some(&op) = data.first() else {
+                    // Unreachable (need >= 1), but a desynced stage must
+                    // close cleanly, not read past the buffer.
                     self.close_after_flush = true;
+                    return;
+                };
+                match op {
+                    OP_INFER => self.enter(Stage::IHdr, 4),
+                    OP_STATS => match registry.snapshot(None) {
+                        Ok(s) => push_framed(&mut self.wbuf, OP_STATS, s.to_json().as_bytes()),
+                        Err(e) => push_framed(&mut self.wbuf, OP_ERR, e.to_string().as_bytes()),
+                    },
+                    OP_STATS_LEGACY => {
+                        // Legacy bare-framed stats: u32 len + JSON, no opcode
+                        // byte. Errors become a JSON object for old clients.
+                        let json = match registry.snapshot(None) {
+                            Ok(s) => s.to_json(),
+                            Err(e) => format!("{{\"error\":\"{e}\"}}"),
+                        };
+                        match u32::try_from(json.len()) {
+                            Ok(len) => {
+                                self.wbuf.extend_from_slice(&len.to_le_bytes());
+                                self.wbuf.extend_from_slice(json.as_bytes());
+                            }
+                            // The bare frame has no error opcode to signal
+                            // an unframeable reply; close instead of lying.
+                            Err(_) => self.close_after_flush = true,
+                        }
+                    }
+                    OP_LIST => {
+                        push_framed(&mut self.wbuf, OP_LIST, registry.list_json().as_bytes())
+                    }
+                    OP_QUIT => self.close_after_flush = true,
+                    op @ (OP_LOAD | OP_UNLOAD) => self.enter(Stage::CtlNameLen { op }, 2),
+                    other => {
+                        push_framed(
+                            &mut self.wbuf,
+                            OP_ERR,
+                            format!("unknown opcode {other}").as_bytes(),
+                        );
+                        self.close_after_flush = true;
+                    }
                 }
-            },
+            }
             Stage::IHdr => {
-                let raw = u32::from_le_bytes(data[..4].try_into().unwrap());
+                let raw = le_u32(&data);
                 let named = raw & NAMED_INFER_FLAG != 0;
-                let n = (raw & !NAMED_INFER_FLAG) as usize;
-                if n > MAX_INFER_FLOATS {
-                    push_framed(
-                        &mut self.wbuf,
-                        b'E',
-                        format!("oversized request ({n} floats)").as_bytes(),
-                    );
-                    self.close_after_flush = true;
-                } else if named {
-                    self.enter(Stage::INameLen { n }, 2);
-                } else {
-                    self.enter(Stage::IBody { model: None }, n * 4);
+                match usize::try_from(raw & !NAMED_INFER_FLAG) {
+                    Ok(n) if n <= MAX_INFER_FLOATS => {
+                        if named {
+                            self.enter(Stage::INameLen { n }, 2);
+                        } else {
+                            self.enter(Stage::IBody { model: None }, n * 4);
+                        }
+                    }
+                    _ => {
+                        push_framed(
+                            &mut self.wbuf,
+                            OP_ERR,
+                            format!("oversized request ({} floats)", raw & !NAMED_INFER_FLAG)
+                                .as_bytes(),
+                        );
+                        self.close_after_flush = true;
+                    }
                 }
             }
             Stage::INameLen { n } => {
-                let len = u16::from_le_bytes(data[..2].try_into().unwrap()) as usize;
+                let len = usize::from(le_u16(&data));
                 if len == 0 || len > 255 {
                     push_framed(
                         &mut self.wbuf,
-                        b'E',
+                        OP_ERR,
                         format!("invalid model name length {len}").as_bytes(),
                     );
                     self.close_after_flush = true;
@@ -302,28 +327,25 @@ impl Conn {
             Stage::IName { n } => match String::from_utf8(data) {
                 Ok(name) => self.enter(Stage::IBody { model: Some(name) }, n * 4),
                 Err(_) => {
-                    push_framed(&mut self.wbuf, b'E', b"model name is not UTF-8");
+                    push_framed(&mut self.wbuf, OP_ERR, b"model name is not UTF-8");
                     self.close_after_flush = true;
                 }
             },
             Stage::IBody { model } => {
-                let input: Vec<f32> = data
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect();
+                let input: Vec<f32> = data.chunks_exact(4).map(le_f32).collect();
                 match registry.submit(model.as_deref(), input) {
                     Ok(rx) => self.pending = Some(rx),
                     // Busy sheds and unknown-model/engine errors are
                     // request-level: answer `E`, keep the connection.
-                    Err(e) => push_framed(&mut self.wbuf, b'E', e.to_string().as_bytes()),
+                    Err(e) => push_framed(&mut self.wbuf, OP_ERR, e.to_string().as_bytes()),
                 }
             }
             Stage::CtlNameLen { op } => {
-                let len = u16::from_le_bytes(data[..2].try_into().unwrap()) as usize;
+                let len = usize::from(le_u16(&data));
                 if len == 0 || len > 255 {
                     push_framed(
                         &mut self.wbuf,
-                        b'E',
+                        OP_ERR,
                         format!("invalid model name length {len}").as_bytes(),
                     );
                     self.close_after_flush = true;
@@ -333,7 +355,7 @@ impl Conn {
             }
             Stage::CtlName { op } => match String::from_utf8(data) {
                 Ok(name) => {
-                    let res = if op == b'L' {
+                    let res = if op == OP_LOAD {
                         registry.load(&name).map(|()| format!("loaded '{name}'"))
                     } else {
                         registry.unload(&name).map(|was_loaded| {
@@ -345,12 +367,12 @@ impl Conn {
                         })
                     };
                     match res {
-                        Ok(msg) => push_framed(&mut self.wbuf, b'K', msg.as_bytes()),
-                        Err(e) => push_framed(&mut self.wbuf, b'E', e.to_string().as_bytes()),
+                        Ok(msg) => push_framed(&mut self.wbuf, OP_ACK, msg.as_bytes()),
+                        Err(e) => push_framed(&mut self.wbuf, OP_ERR, e.to_string().as_bytes()),
                     }
                 }
                 Err(_) => {
-                    push_framed(&mut self.wbuf, b'E', b"model name is not UTF-8");
+                    push_framed(&mut self.wbuf, OP_ERR, b"model name is not UTF-8");
                     self.close_after_flush = true;
                 }
             },
@@ -366,7 +388,7 @@ impl Conn {
     fn flush(&mut self) -> std::io::Result<bool> {
         let mut progressed = false;
         while self.wpos < self.wbuf.len() {
-            match self.stream.write(&self.wbuf[self.wpos..]) {
+            match self.stream.write(self.wbuf.get(self.wpos..).unwrap_or(&[])) {
                 Ok(0) => {
                     return Err(std::io::Error::new(
                         std::io::ErrorKind::WriteZero,
@@ -391,17 +413,27 @@ impl Conn {
     }
 }
 
-/// Queue an opcode-framed reply: op byte + u32 length + payload.
+/// Queue an opcode-framed reply: op byte + u32 length + payload. A
+/// payload that cannot fit the u32 length word degrades to a framed
+/// error rather than truncating the length (lint rule R3).
 pub(crate) fn push_framed(wbuf: &mut Vec<u8>, op: u8, payload: &[u8]) {
+    let Ok(len) = u32::try_from(payload.len()) else {
+        push_framed(wbuf, OP_ERR, b"reply too large to frame");
+        return;
+    };
     wbuf.push(op);
-    wbuf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    wbuf.extend_from_slice(&len.to_le_bytes());
     wbuf.extend_from_slice(payload);
 }
 
 /// Queue an `O` logits reply: count then little-endian floats.
 fn push_logits(wbuf: &mut Vec<u8>, logits: &[f32]) {
-    wbuf.push(b'O');
-    wbuf.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+    let Ok(len) = u32::try_from(logits.len()) else {
+        push_framed(wbuf, OP_ERR, b"logits reply too large to frame");
+        return;
+    };
+    wbuf.push(OP_LOGITS);
+    wbuf.extend_from_slice(&len.to_le_bytes());
     for v in logits {
         wbuf.extend_from_slice(&v.to_le_bytes());
     }
@@ -411,6 +443,6 @@ fn push_logits(wbuf: &mut Vec<u8>, logits: &[f32]) {
 /// at the connection limit (no [`Conn`] is ever built for it).
 pub(crate) fn refuse_at_limit(mut stream: &TcpStream) {
     let mut out = Vec::new();
-    push_framed(&mut out, b'E', b"busy: connection limit reached");
+    push_framed(&mut out, OP_ERR, b"busy: connection limit reached");
     let _ = stream.write_all(&out);
 }

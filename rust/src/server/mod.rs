@@ -46,6 +46,7 @@
 
 mod client;
 pub(crate) mod conn;
+pub(crate) mod protocol;
 
 pub use client::Client;
 
@@ -151,7 +152,15 @@ impl Server {
 
         let sh = shared.clone();
         let acceptors = WorkerPool::spawn("sqnn-accept", n_acceptors, move |i| {
-            let listener = listeners.lock().unwrap()[i].take().expect("listener slot");
+            // Slot vector is only touched during this startup hand-off;
+            // a poisoned or short slot means a sibling acceptor died
+            // mid-spawn — bow out instead of panicking the pool.
+            let taken = {
+                let mut slots =
+                    listeners.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                slots.get_mut(i).and_then(Option::take)
+            };
+            let Some(listener) = taken else { return };
             acceptor_loop(&listener, &sh, max_conns);
         })
         .context("spawn acceptors")?;

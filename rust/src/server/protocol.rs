@@ -1,0 +1,115 @@
+//! Shared wire-protocol vocabulary: the opcode constants table and
+//! panic-free little-endian field helpers.
+//!
+//! Every opcode byte on the framed protocol is defined **here and only
+//! here**. `sqnn-lint` rule R2 enforces that: bare `b'X'` opcode
+//! literals in `server/conn.rs` or `server/client.rs` are rejected, and
+//! every `OP_*` constant below must be referenced by *both* files — so
+//! the server's dispatcher and the client's encoder can never drift
+//! apart silently (a new opcode wired into one side only fails the
+//! lint, not a production peer).
+//!
+//! The field helpers exist for lint rule R1 (no panics on the serving
+//! path): `u32::from_le_bytes(buf[..4].try_into().unwrap())` carries a
+//! hidden panic on a short slice, while [`le_u32`] zero-pads and cannot
+//! fail. Frame *lengths* are still validated by the state machine; these
+//! helpers only make the byte plumbing total.
+
+/// Infer request: `u32` count word (bit 31 flags an in-band model
+/// name), then the input floats. Replied with [`OP_LOGITS`]/[`OP_ERR`].
+pub(crate) const OP_INFER: u8 = b'I';
+/// Load a registered model now: `u16` name length + name bytes.
+pub(crate) const OP_LOAD: u8 = b'L';
+/// Unload a loaded model: `u16` name length + name bytes.
+pub(crate) const OP_UNLOAD: u8 = b'U';
+/// List models as JSON; the reply reuses the same opcode byte.
+pub(crate) const OP_LIST: u8 = b'P';
+/// Framed metrics snapshot; the reply reuses the same opcode byte.
+pub(crate) const OP_STATS: u8 = b'M';
+/// Legacy stats: the reply is bare `u32` length + JSON, no opcode byte.
+pub(crate) const OP_STATS_LEGACY: u8 = b'S';
+/// Close the connection after flushing queued replies.
+pub(crate) const OP_QUIT: u8 = b'Q';
+/// Logits reply: `u32` float count + little-endian floats.
+pub(crate) const OP_LOGITS: u8 = b'O';
+/// Error reply: `u32` byte length + UTF-8 message.
+pub(crate) const OP_ERR: u8 = b'E';
+/// Load/unload acknowledgement: `u32` byte length + UTF-8 message.
+pub(crate) const OP_ACK: u8 = b'K';
+
+/// Bit 31 of the [`OP_INFER`] float-count word flags an in-band model
+/// name (u16 length + UTF-8 bytes) between the count and the floats.
+/// Safe to steal: the float count is capped at [`MAX_INFER_FLOATS`]
+/// anyway.
+pub(crate) const NAMED_INFER_FLAG: u32 = 1 << 31;
+
+/// Hard cap on [`OP_INFER`] payload size, pre-allocation guard.
+pub(crate) const MAX_INFER_FLOATS: usize = 1 << 20;
+
+/// Little-endian `u32` from the first four bytes of `b`, zero-padding a
+/// short slice — a total function, unlike the `try_into().unwrap()`
+/// idiom it replaces.
+pub(crate) fn le_u32(b: &[u8]) -> u32 {
+    let mut w = [0u8; 4];
+    for (d, s) in w.iter_mut().zip(b) {
+        *d = *s;
+    }
+    u32::from_le_bytes(w)
+}
+
+/// Little-endian `u16` from the first two bytes of `b` (zero-padded).
+pub(crate) fn le_u16(b: &[u8]) -> u16 {
+    let mut w = [0u8; 2];
+    for (d, s) in w.iter_mut().zip(b) {
+        *d = *s;
+    }
+    u16::from_le_bytes(w)
+}
+
+/// Little-endian `f32` from the first four bytes of `b` (zero-padded).
+pub(crate) fn le_f32(b: &[u8]) -> f32 {
+    f32::from_bits(le_u32(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_bytes_are_distinct() {
+        let ops = [
+            OP_INFER,
+            OP_LOAD,
+            OP_UNLOAD,
+            OP_LIST,
+            OP_STATS,
+            OP_STATS_LEGACY,
+            OP_QUIT,
+            OP_LOGITS,
+            OP_ERR,
+            OP_ACK,
+        ];
+        for (i, a) in ops.iter().enumerate() {
+            for b in &ops[i + 1..] {
+                assert_ne!(a, b, "opcode bytes must not collide");
+            }
+        }
+    }
+
+    #[test]
+    fn le_helpers_match_from_le_bytes() {
+        assert_eq!(le_u32(&[0xEF, 0xBE, 0xAD, 0xDE]), 0xDEAD_BEEF);
+        assert_eq!(le_u16(&[0x34, 0x12]), 0x1234);
+        assert_eq!(le_f32(&(-1.25f32).to_le_bytes()), -1.25);
+        // Extra bytes are ignored; the helpers read exactly the field.
+        assert_eq!(le_u16(&[0x34, 0x12, 0xFF]), 0x1234);
+    }
+
+    #[test]
+    fn le_helpers_zero_pad_short_slices() {
+        assert_eq!(le_u32(&[]), 0);
+        assert_eq!(le_u32(&[0x01]), 1);
+        assert_eq!(le_u16(&[0x07]), 7);
+        assert_eq!(le_f32(&[]), 0.0);
+    }
+}

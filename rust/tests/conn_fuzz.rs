@@ -1,0 +1,259 @@
+//! Adversarial fuzzing of the `conn.rs` frame state machine (sqnn-lint
+//! R1's runtime companion): seeded-RNG byte streams — arbitrary bytes,
+//! truncated valid frames, oversized length fields, valid-then-garbage
+//! tails, and interleaved partial frames across connections — thrown at
+//! a live server. The contract under attack:
+//!
+//! * every stream ends in a **valid reply or a clean close** — the
+//!   server never hangs a connection (liveness is enforced with read
+//!   timeouts: a timeout fails the test);
+//! * a worker multiplexing many connections **never dies**: after every
+//!   adversarial stream a fresh, well-formed infer must still round-trip;
+//! * per-connection framing state is **isolated**: garbage on one
+//!   connection cannot corrupt a half-written frame on another.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use sqnn_xor::coordinator::{
+    BatchPolicy, Coordinator, DecodeMode, EngineOptions, SqnnEngine,
+};
+use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
+use sqnn_xor::rng::Rng;
+use sqnn_xor::server::Server;
+
+const INPUT_DIM: usize = 16;
+const NUM_CLASSES: usize = 3;
+/// Any single reply is tiny; runaway output means framing went insane.
+const REPLY_CAP: usize = 1 << 16;
+
+fn start_server() -> (Coordinator, Server) {
+    let coordinator = Coordinator::spawn(BatchPolicy::default(), move || {
+        let model = synthetic_layer_graph(
+            0xF22,
+            INPUT_DIM,
+            &[
+                SynthEncrypted { out_dim: 10, ..Default::default() },
+                SynthEncrypted { out_dim: 6, nq: 2, ..Default::default() },
+            ],
+            &[],
+            NUM_CLASSES,
+        );
+        SqnnEngine::load_native(
+            model,
+            &[1, 4],
+            EngineOptions {
+                decode_threads: 2,
+                decode_mode: DecodeMode::PerBatch,
+                ..Default::default()
+            },
+        )
+    })
+    .expect("spawn coordinator");
+    let server = Server::start(coordinator.handle.clone(), "127.0.0.1:0").expect("start server");
+    (coordinator, server)
+}
+
+fn connect(port: u16) -> TcpStream {
+    let s = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    s.set_write_timeout(Some(Duration::from_secs(10))).expect("write timeout");
+    s
+}
+
+/// A well-formed default-model infer frame for `xs`.
+fn infer_frame(xs: &[f32]) -> Vec<u8> {
+    let mut f = vec![b'I'];
+    f.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        f.extend_from_slice(&x.to_le_bytes());
+    }
+    f
+}
+
+/// The health probe: a fresh well-formed infer must round-trip. If a
+/// fuzz stream killed a worker (panic) this is where it surfaces.
+fn infer_round_trip(port: u16) {
+    let mut s = connect(port);
+    let xs = vec![0.25f32; INPUT_DIM];
+    s.write_all(&infer_frame(&xs)).expect("write infer");
+    let mut op = [0u8; 1];
+    s.read_exact(&mut op).expect("server must still answer a valid infer");
+    assert_eq!(op[0], b'O', "expected logits, got opcode {}", op[0]);
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb).expect("read logits count");
+    let n = u32::from_le_bytes(nb) as usize;
+    assert_eq!(n, NUM_CLASSES, "logit count");
+    let mut raw = vec![0u8; n * 4];
+    s.read_exact(&mut raw).expect("read logits");
+    for c in raw.chunks_exact(4) {
+        let v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        assert!(v.is_finite(), "non-finite logit {v}");
+    }
+}
+
+/// Drain a connection until the server closes it; returns everything it
+/// sent. A read timeout means the server neither replied nor closed —
+/// the exact hang this suite exists to rule out — and fails the test.
+/// A reset counts as a close (the server may RST after an error reply).
+fn drain_to_close(s: &mut TcpStream) -> Vec<u8> {
+    let mut reply = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return reply,
+            Ok(n) => {
+                reply.extend_from_slice(&buf[..n]);
+                assert!(reply.len() < REPLY_CAP, "unbounded reply ({} bytes)", reply.len());
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                        | ErrorKind::BrokenPipe
+                ) =>
+            {
+                return reply;
+            }
+            Err(e) => panic!("server neither replied nor closed: {e}"),
+        }
+    }
+}
+
+/// Well-formed multi-byte frames eligible for truncation.
+fn truncation_pool(rng: &mut Rng) -> Vec<Vec<u8>> {
+    let xs: Vec<f32> = (0..INPUT_DIM).map(|_| rng.next_gaussian() as f32).collect();
+    let name = b"missing-model";
+    // Named infer: n | bit31, then u16 name length + name + payload.
+    let mut named = vec![b'I'];
+    named.extend_from_slice(&((xs.len() as u32) | (1 << 31)).to_le_bytes());
+    named.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    named.extend_from_slice(name);
+    for x in &xs {
+        named.extend_from_slice(&x.to_le_bytes());
+    }
+    let mut load = vec![b'L'];
+    load.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    load.extend_from_slice(name);
+    let mut unload = vec![b'U'];
+    unload.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    unload.extend_from_slice(name);
+    vec![infer_frame(&xs), named, load, unload]
+}
+
+/// Response opcodes a stream that *starts* with a framed request may
+/// legally see first. (Legacy `S` replies are bare length-prefixed JSON,
+/// so streams opening with `S` are excluded from this check.)
+const RESPONSE_OPCODES: [u8; 5] = [b'E', b'O', b'K', b'M', b'P'];
+
+#[test]
+fn seeded_adversarial_streams_get_a_reply_or_a_clean_close() {
+    let (_coordinator, mut server) = start_server();
+    let mut rng = Rng::new(0xFADE_F00D);
+    for round in 0..40u32 {
+        let mut s = connect(server.port);
+        match rng.next_below(4) {
+            // Arbitrary bytes: any reply must still be framed (a known
+            // response opcode first), unless the stream opened with the
+            // legacy bare-framed `S` request.
+            0 => {
+                let len = 1 + rng.next_below(200) as usize;
+                let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                let opened_legacy = bytes.first() == Some(&b'S');
+                let _ = s.write_all(&bytes);
+                let _ = s.shutdown(Shutdown::Write);
+                let reply = drain_to_close(&mut s);
+                if let Some(&op) = reply.first() {
+                    assert!(
+                        opened_legacy || RESPONSE_OPCODES.contains(&op),
+                        "unframed reply byte {op:#x} to garbage stream {bytes:x?}"
+                    );
+                }
+            }
+            // Truncated valid frame: the server is owed nothing and must
+            // close cleanly on EOF mid-frame, replying nothing.
+            1 => {
+                let pool = truncation_pool(&mut rng);
+                let frame = &pool[rng.next_below(pool.len() as u64) as usize];
+                let cut = 1 + rng.next_below(frame.len() as u64 - 1) as usize;
+                let _ = s.write_all(&frame[..cut]);
+                let _ = s.shutdown(Shutdown::Write);
+                let reply = drain_to_close(&mut s);
+                assert!(
+                    reply.is_empty(),
+                    "reply to an incomplete frame (cut {cut}/{}): {reply:x?}",
+                    frame.len()
+                );
+            }
+            // Oversized length field: structured `E` error, then close.
+            2 => {
+                let mut frame = vec![b'I'];
+                frame.extend_from_slice(&u32::MAX.to_le_bytes());
+                let _ = s.write_all(&frame);
+                let reply = drain_to_close(&mut s);
+                assert_eq!(
+                    reply.first(),
+                    Some(&b'E'),
+                    "oversized frame must earn a framed error: {reply:x?}"
+                );
+            }
+            // Valid infer, then a garbage tail on the same connection:
+            // the logits reply must land before the stream dies.
+            _ => {
+                let xs: Vec<f32> =
+                    (0..INPUT_DIM).map(|_| rng.next_gaussian() as f32).collect();
+                let mut bytes = infer_frame(&xs);
+                let tail = 1 + rng.next_below(32) as usize;
+                bytes.extend((0..tail).map(|_| rng.next_u64() as u8));
+                let _ = s.write_all(&bytes);
+                let _ = s.shutdown(Shutdown::Write);
+                let reply = drain_to_close(&mut s);
+                assert_eq!(
+                    reply.first(),
+                    Some(&b'O'),
+                    "valid infer before the garbage tail must be answered: {reply:x?}"
+                );
+            }
+        }
+        if round % 8 == 0 {
+            infer_round_trip(server.port);
+        }
+    }
+    // The decisive assertion: after 40 adversarial streams every worker
+    // is still alive and serving.
+    infer_round_trip(server.port);
+    server.stop();
+}
+
+#[test]
+fn interleaved_partial_frames_keep_per_connection_state_isolated() {
+    let (_coordinator, mut server) = start_server();
+    let mut a = connect(server.port);
+    let mut b = connect(server.port);
+
+    // A parks mid-frame: opcode plus half of the length field.
+    let xs = vec![0.5f32; INPUT_DIM];
+    let frame = infer_frame(&xs);
+    a.write_all(&frame[..3]).expect("write partial frame");
+
+    // B hammers the worker with an unknown opcode and garbage; it must
+    // be answered (framed error) and closed without disturbing A.
+    b.write_all(&[0xFF; 16]).expect("write garbage");
+    let _ = b.shutdown(Shutdown::Write);
+    let reply = drain_to_close(&mut b);
+    assert_eq!(reply.first(), Some(&b'E'), "garbage connection gets a framed error");
+
+    // A completes its frame and must get clean logits: B's stream never
+    // leaked into A's framing state.
+    a.write_all(&frame[3..]).expect("complete frame");
+    let mut op = [0u8; 1];
+    a.read_exact(&mut op).expect("read logits opcode");
+    assert_eq!(op[0], b'O', "interleaving corrupted connection A (opcode {})", op[0]);
+    let mut nb = [0u8; 4];
+    a.read_exact(&mut nb).expect("read logits count");
+    assert_eq!(u32::from_le_bytes(nb) as usize, NUM_CLASSES);
+
+    server.stop();
+}

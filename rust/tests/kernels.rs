@@ -15,7 +15,9 @@
 
 use sqnn_xor::coordinator::{DecodeMode, EngineOptions, KernelChoice, SqnnEngine};
 use sqnn_xor::io::sqnn_file::{Activation, Layer, SqnnModel};
-use sqnn_xor::kernels::{affine, BitplaneKernel, FusedDecodeKernel, KernelCtx, MatmulKernel};
+use sqnn_xor::kernels::{
+    affine, BitplaneKernel, CsrSpmvKernel, DenseKernel, FusedDecodeKernel, KernelCtx, MatmulKernel,
+};
 use sqnn_xor::models::{
     synthetic_encrypted_layer, synthetic_mixed_layer_graph, SynthCsr, SynthEncrypted,
 };
@@ -299,6 +301,71 @@ fn fused_kernel_streams_tiles_without_full_materialization() {
             "threads={threads}: peak scratch {peak} approaches full materialization"
         );
     }
+}
+
+/// Direct-construction leg of the matrix: `DenseKernel` (all three
+/// weight sources) and `CsrSpmvKernel` (native and converted storage)
+/// are exercised by name here, completing the rule that every
+/// `MatmulKernel` impl appears in this file's matrix (sqnn-lint R4) —
+/// all cross-checked against the same reference affine.
+#[test]
+fn dense_and_csr_kernels_direct_construction_matrix() {
+    use sqnn_xor::io::sqnn_file::{CsrLayer, DenseLayer};
+    use sqnn_xor::sparse::CsrMatrix;
+
+    let (rows, cols) = (6usize, 10usize);
+    let mut rng = Rng::new(0xD1CE);
+    let w: Vec<f32> = (0..rows * cols)
+        .map(|_| if rng.next_bool(0.4) { rng.next_gaussian() as f32 } else { 0.0 })
+        .collect();
+    let b: Vec<f32> = (0..rows).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+    let x: Vec<f32> = (0..cols).map(|_| rng.next_gaussian() as f32).collect();
+    let want = affine(&w, rows, cols, &x, &b);
+
+    let decoder = ParallelDecoder::new(DecodeConfig::with_threads(1));
+    let ctx = KernelCtx { decoder: &decoder };
+
+    let dense_layer = Layer::Dense(DenseLayer {
+        name: "d".into(),
+        rows,
+        cols,
+        w: w.clone(),
+        b: b.clone(),
+        activation: Activation::Identity,
+    });
+    // DenseKernel: the layer's own storage and a prepared cache must be
+    // bit-identical (same affine over the same floats).
+    let from_layer = DenseKernel::from_layer();
+    assert_eq!(from_layer.name(), "dense");
+    assert_eq!(from_layer.forward(&dense_layer, &ctx, &x).unwrap(), want);
+    let cached = DenseKernel::with_cached(w.clone());
+    assert_eq!(cached.forward(&dense_layer, &ctx, &x).unwrap(), want);
+    // The per-batch source materializes dense layers to a copy of their
+    // own storage, so it must agree bitwise too — with and without the
+    // begin/end batch bracket.
+    let per_batch = DenseKernel::per_batch();
+    assert_eq!(per_batch.name(), "dense-materialize");
+    per_batch.begin_batch(&dense_layer, &ctx).unwrap();
+    assert_eq!(per_batch.forward(&dense_layer, &ctx, &x).unwrap(), want);
+    per_batch.end_batch(&dense_layer, &ctx).unwrap();
+    assert_eq!(per_batch.forward(&dense_layer, &ctx, &x).unwrap(), want);
+
+    // CsrSpmvKernel: native Layer::Csr storage and a converted kernel
+    // over the same dense weights serve the same affine. CSR keeps only
+    // stored nonzeros, and `affine` sums zeros in ascending column order
+    // with exact float adds (adding 0.0 is exact), so equality is exact.
+    let csr_layer = Layer::Csr(CsrLayer {
+        name: "c".into(),
+        csr: CsrMatrix::from_dense(&w, rows, cols, None),
+        bias: b.clone(),
+        activation: Activation::Identity,
+    });
+    let native = CsrSpmvKernel::for_layer();
+    assert_eq!(native.name(), "csr-spmv");
+    let got_native = native.forward(&csr_layer, &ctx, &x).unwrap();
+    let converted = CsrSpmvKernel::from_dense_weights(&w, rows, cols, None);
+    assert_eq!(converted.forward(&csr_layer, &ctx, &x).unwrap(), got_native);
+    assert_close(&[got_native], &[want], 1e-6, "csr-spmv vs dense affine");
 }
 
 /// `Layer::Csr` serves through real SpMV under every auto-ish choice —

@@ -1,0 +1,945 @@
+//! sqnn-lint — repo-specific static analysis for the sqnn-xor serving
+//! path.
+//!
+//! Four rules, each enforcing an invariant the serving tier depends on
+//! (DESIGN.md decision 12):
+//!
+//! * **R1 — panic-free serving path.** No `.unwrap()`, `.expect()`,
+//!   `panic!`, `unreachable!`, `todo!`, `unimplemented!`, or slice/array
+//!   indexing (`x[i]`, `x[a..b]`) in `rust/src/server/`,
+//!   `rust/src/coordinator/`, `rust/src/kernels/`, or
+//!   `rust/src/runtime/pool.rs`. A connection must answer with a framed
+//!   `E` error or shed — never take down a worker that multiplexes other
+//!   connections. Proven-bounded hot-loop indexing may be waived with
+//!   `// lint:allow(reason)` (covers its own and the next line) or a
+//!   `// lint:allow-block(reason)` … `// lint:allow-end` region.
+//! * **R2 — one opcode table.** Every wire opcode is a named constant in
+//!   `rust/src/server/protocol.rs`, and both `conn.rs` (server side) and
+//!   `client.rs` (client side) reference every constant — no bare
+//!   `b'I'`-style opcode literals, no half-implemented opcodes.
+//! * **R3 — no truncating casts on wire fields.** In `conn.rs`,
+//!   `client.rs`, and `io/bytes.rs`, `as u8`/`as u16`/`as u32`/`as
+//!   usize` (and signed/`isize` kin) are banned: lengths and counts
+//!   cross the wire through `try_from` with an error path.
+//! * **R4 — complete kernel matrix.** Every `impl MatmulKernel for X`
+//!   under `rust/src/kernels/` and every `KernelChoice` variant must
+//!   appear in `rust/tests/kernels.rs`.
+//!
+//! `#[cfg(test)] mod … { … }` blocks are exempt everywhere: tests
+//! *should* unwrap.
+//!
+//! No dependencies (offline images cannot resolve new crates): a
+//! hand-rolled token-level lexer is enough for rules of this shape, and
+//! its known blind spots (macro-generated code, `#[path]` tricks) do
+//! not occur in this repo.
+//!
+//! Usage: `cargo run -p sqnn-lint [-- --root <repo>]`. Exit code 0 when
+//! clean, 1 with findings (one `path:line: message` per line), 2 on
+//! usage/setup errors.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Punct,
+    CharLit,
+    StrLit,
+    Lifetime,
+    Num,
+}
+
+#[derive(Clone, Debug)]
+struct Tok {
+    line: u32,
+    kind: Kind,
+    text: String,
+}
+
+/// Lines waived by `lint:allow` markers: single-line markers cover their
+/// own line and the next; block markers cover an inclusive line range.
+#[derive(Default, Debug)]
+struct Allows {
+    lines: BTreeSet<u32>,
+    ranges: Vec<(u32, u32)>,
+}
+
+impl Allows {
+    fn covers(&self, line: u32) -> bool {
+        self.lines.contains(&line)
+            || self.lines.contains(&line.saturating_sub(1))
+            || self.ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+fn contains(hay: &[u8], needle: &[u8]) -> bool {
+    hay.windows(needle.len()).any(|w| w == needle)
+}
+
+fn find_byte(b: &[u8], from: usize, wanted: u8) -> Option<usize> {
+    b.get(from..)?.iter().position(|&c| c == wanted).map(|p| p + from)
+}
+
+/// Scan a char-like literal body starting at `j` (first byte after the
+/// opening quote); returns the index just past the closing `'`.
+fn scan_char_body(b: &[u8], mut j: usize) -> usize {
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\'' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+fn note_markers(seg: &[u8], line: u32, allows: &mut Allows, block_start: &mut Option<u32>) {
+    if contains(seg, b"lint:allow(") {
+        allows.lines.insert(line);
+    }
+    if contains(seg, b"lint:allow-block(") && block_start.is_none() {
+        *block_start = Some(line);
+    }
+    if contains(seg, b"lint:allow-end") {
+        if let Some(start) = block_start.take() {
+            allows.ranges.push((start, line));
+        }
+    }
+}
+
+/// Tokenize Rust source: comments vanish (minus their lint markers),
+/// string/char literal *contents* vanish (so `"x[i]"` never trips R1),
+/// everything else becomes idents, numbers, and single-byte puncts.
+fn lex(src: &str) -> (Vec<Tok>, Allows) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut allows = Allows::default();
+    let mut block_start: Option<u32> = None;
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if b[i..].starts_with(b"//") {
+            let j = find_byte(b, i, b'\n').unwrap_or(n);
+            note_markers(&b[i..j], line, &mut allows, &mut block_start);
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if b[i..].starts_with(b"/*") {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if b[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            note_markers(&b[i..j.min(n)], start_line, &mut allows, &mut block_start);
+            i = j;
+            continue;
+        }
+        // Raw (byte) string: r"…", r#"…"#, br"…", …
+        let raw = {
+            let mut k = i;
+            if k < n && b[k] == b'b' {
+                k += 1;
+            }
+            if k < n && b[k] == b'r' {
+                k += 1;
+                let hashes_from = k;
+                while k < n && b[k] == b'#' {
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    Some((k + 1, k - hashes_from))
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        };
+        if let Some((content, hashes)) = raw {
+            let mut close = vec![b'"'];
+            close.resize(1 + hashes, b'#');
+            let mut j = content;
+            let end = loop {
+                if j + close.len() > n {
+                    break n;
+                }
+                if b[j..j + close.len()] == close[..] {
+                    break j + close.len();
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            };
+            toks.push(Tok { line, kind: Kind::StrLit, text: String::new() });
+            i = end;
+            continue;
+        }
+        // Plain (byte) string.
+        if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let mut j = if c == b'"' { i + 1 } else { i + 2 };
+            while j < n {
+                match b[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    b'\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            toks.push(Tok { line, kind: Kind::StrLit, text: String::new() });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Byte-char literal b'…'.
+        if c == b'b' && b.get(i + 1) == Some(&b'\'') {
+            let end = scan_char_body(b, i + 2);
+            toks.push(Tok {
+                line,
+                kind: Kind::CharLit,
+                text: String::from_utf8_lossy(&b[i..end]).into_owned(),
+            });
+            i = end;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if b.get(i + 1) == Some(&b'\\') {
+                let end = scan_char_body(b, i + 1);
+                toks.push(Tok {
+                    line,
+                    kind: Kind::CharLit,
+                    text: String::from_utf8_lossy(&b[i..end]).into_owned(),
+                });
+                i = end;
+                continue;
+            }
+            if b.get(i + 2) == Some(&b'\'') && b.get(i + 1) != Some(&b'\'') {
+                toks.push(Tok {
+                    line,
+                    kind: Kind::CharLit,
+                    text: String::from_utf8_lossy(&b[i..i + 3]).into_owned(),
+                });
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                line,
+                kind: Kind::Lifetime,
+                text: String::from_utf8_lossy(&b[i..j]).into_owned(),
+            });
+            i = j.max(i + 1);
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i + 1;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                line,
+                kind: Kind::Ident,
+                text: String::from_utf8_lossy(&b[i..j]).into_owned(),
+            });
+            i = j;
+            continue;
+        }
+        // Number (loose: also swallows `1..` range starts, harmlessly).
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_' || b[j] == b'.') {
+                j += 1;
+            }
+            toks.push(Tok {
+                line,
+                kind: Kind::Num,
+                text: String::from_utf8_lossy(&b[i..j]).into_owned(),
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { line, kind: Kind::Punct, text: (c as char).to_string() });
+        i += 1;
+    }
+    (toks, allows)
+}
+
+/// Drop every token inside a `#[cfg(test)] mod … { … }` block (or any
+/// `#[cfg(test)]`-gated item with a brace body): tests are exempt from
+/// all rules.
+fn strip_tests(toks: Vec<Tok>) -> Vec<Tok> {
+    const ATTR: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_attr = i + ATTR.len() <= toks.len()
+            && ATTR.iter().enumerate().all(|(k, p)| toks[i + k].text == *p);
+        if is_attr {
+            let mut j = i + ATTR.len();
+            while j < toks.len() && toks[j].text != "{" {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < toks.len() {
+                if toks[j].text == "{" {
+                    depth += 1;
+                } else if toks[j].text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Violation {
+    path: String,
+    line: u32,
+    message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.path, self.line, self.message)
+    }
+}
+
+/// Idents that make a following `[` *not* an indexing expression:
+/// `vec![…]`, `&mut [u8]`, `for x in [..]`, `as [T; N]`, etc.
+const NONINDEX_BEFORE_BRACKET: [&str; 12] = [
+    "vec", "mut", "in", "as", "dyn", "ref", "return", "break", "continue", "else", "match", "move",
+];
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Cast targets that can truncate a wire length/count. Widening (`as
+/// u64`/`as i64` from the u8–u32 wire types) stays legal.
+const NARROW_INT_TYPES: [&str; 8] = ["u8", "u16", "u32", "usize", "i8", "i16", "i32", "isize"];
+
+/// R1: no panic paths on the serving path.
+fn r1_panic_free(path: &str, toks: &[Tok], allows: &Allows) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if allows.covers(t.line) {
+            continue;
+        }
+        let prev = k.checked_sub(1).and_then(|p| toks.get(p));
+        match t.kind {
+            Kind::Ident if t.text == "unwrap" || t.text == "expect" => {
+                if prev.is_some_and(|p| p.text == ".") {
+                    v.push(Violation {
+                        path: path.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "R1: `.{}()` on the serving path — return a framed error or \
+                             recover (waive with `// lint:allow(reason)`)",
+                            t.text
+                        ),
+                    });
+                }
+            }
+            Kind::Ident if PANIC_MACROS.contains(&t.text.as_str()) => {
+                if toks.get(k + 1).is_some_and(|nx| nx.text == "!") {
+                    v.push(Violation {
+                        path: path.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "R1: `{}!` on the serving path — a worker multiplexing other \
+                             connections must never die here",
+                            t.text
+                        ),
+                    });
+                }
+            }
+            Kind::Punct if t.text == "[" => {
+                let indexing = prev.is_some_and(|p| {
+                    (p.kind == Kind::Ident && !NONINDEX_BEFORE_BRACKET.contains(&p.text.as_str()))
+                        || p.text == ")"
+                        || p.text == "]"
+                        || p.text == "?"
+                });
+                if indexing {
+                    v.push(Violation {
+                        path: path.to_string(),
+                        line: t.line,
+                        message: "R1: slice/array indexing on the serving path — use \
+                                  `.get()`/`.get_mut()`/iterators, or waive a proven-bounded \
+                                  hot loop with `// lint:allow-block(reason)`"
+                            .to_string(),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    v
+}
+
+/// R3: no truncating integer casts on wire length/count handling files.
+fn r3_no_truncating_casts(path: &str, toks: &[Tok], allows: &Allows) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if allows.covers(t.line) {
+            continue;
+        }
+        if t.kind == Kind::Ident && t.text == "as" {
+            if let Some(nx) = toks.get(k + 1) {
+                if nx.kind == Kind::Ident && NARROW_INT_TYPES.contains(&nx.text.as_str()) {
+                    v.push(Violation {
+                        path: path.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "R3: truncating `as {}` on a wire-handling file — use \
+                             `try_from` with a framed error path",
+                            nx.text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Opcode constants declared in protocol.rs: `const OP_X: u8`.
+fn opcode_consts(proto_src: &str) -> Vec<String> {
+    let (toks, _) = lex(proto_src);
+    let mut names = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Ident && t.text == "const" {
+            let name = toks.get(k + 1);
+            let colon = toks.get(k + 2);
+            let ty = toks.get(k + 3);
+            if let (Some(name), Some(colon), Some(ty)) = (name, colon, ty) {
+                if name.text.starts_with("OP_") && colon.text == ":" && ty.text == "u8" {
+                    names.push(name.text.clone());
+                }
+            }
+        }
+    }
+    names
+}
+
+/// R2: the opcode table is shared and complete on both wire endpoints.
+/// `files` pairs each endpoint's repo-relative path with its source.
+fn r2_shared_opcode_table(proto_src: Option<&str>, files: &[(&str, &str)]) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let Some(proto_src) = proto_src else {
+        return vec![Violation {
+            path: "rust/src/server/protocol.rs".to_string(),
+            line: 0,
+            message: "R2: missing the shared opcode constants table".to_string(),
+        }];
+    };
+    let consts = opcode_consts(proto_src);
+    if consts.is_empty() {
+        v.push(Violation {
+            path: "rust/src/server/protocol.rs".to_string(),
+            line: 0,
+            message: "R2: protocol.rs declares no `const OP_*: u8` opcodes".to_string(),
+        });
+    }
+    for (path, src) in files {
+        let (toks, _) = lex(src);
+        let toks = strip_tests(toks);
+        let idents: BTreeSet<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Ident).map(|t| t.text.as_str()).collect();
+        for t in &toks {
+            // A bare `b'I'`-style literal is an opcode bypassing the table.
+            let bytes = t.text.as_bytes();
+            if t.kind == Kind::CharLit
+                && bytes.len() == 4
+                && bytes.starts_with(b"b'")
+                && bytes.ends_with(b"'")
+                && bytes.get(2).is_some_and(u8::is_ascii_uppercase)
+            {
+                v.push(Violation {
+                    path: path.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "R2: bare opcode literal {} — use the named constant from \
+                         server/protocol.rs",
+                        t.text
+                    ),
+                });
+            }
+        }
+        for c in &consts {
+            if !idents.contains(c.as_str()) {
+                v.push(Violation {
+                    path: path.to_string(),
+                    line: 0,
+                    message: format!(
+                        "R2: opcode {c} is not handled in this endpoint — both wire ends \
+                         must cover the whole table"
+                    ),
+                });
+            }
+        }
+    }
+    v
+}
+
+/// R4: every `impl MatmulKernel for X` and every `KernelChoice` variant
+/// appears in the integration test matrix source.
+fn r4_kernel_matrix(kernel_files: &[(String, String)], tests_src: &str) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let mut impls: Vec<(String, String)> = Vec::new();
+    let mut variants: BTreeSet<String> = BTreeSet::new();
+    for (path, src) in kernel_files {
+        let (toks, _) = lex(src);
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind == Kind::Ident && t.text == "impl" {
+                let tr = toks.get(k + 1);
+                let f = toks.get(k + 2);
+                let name = toks.get(k + 3);
+                if let (Some(tr), Some(f), Some(name)) = (tr, f, name) {
+                    if tr.text == "MatmulKernel" && f.text == "for" && name.kind == Kind::Ident {
+                        impls.push((path.clone(), name.text.clone()));
+                    }
+                }
+            }
+            // `KernelChoice::Variant =>` match arms name the variants.
+            if t.kind == Kind::Ident && t.text == "KernelChoice" {
+                let c1 = toks.get(k + 1);
+                let c2 = toks.get(k + 2);
+                let name = toks.get(k + 3);
+                let eq = toks.get(k + 4);
+                let gt = toks.get(k + 5);
+                if let (Some(c1), Some(c2), Some(name), Some(eq), Some(gt)) =
+                    (c1, c2, name, eq, gt)
+                {
+                    if c1.text == ":"
+                        && c2.text == ":"
+                        && name.kind == Kind::Ident
+                        && eq.text == "="
+                        && gt.text == ">"
+                    {
+                        variants.insert(name.text.clone());
+                    }
+                }
+            }
+        }
+    }
+    for (path, name) in impls {
+        if !tests_src.contains(&name) {
+            v.push(Violation {
+                path,
+                line: 0,
+                message: format!(
+                    "R4: kernel `{name}` implements MatmulKernel but never appears in \
+                     rust/tests/kernels.rs — add it to the equivalence matrix"
+                ),
+            });
+        }
+    }
+    for name in variants {
+        if !tests_src.contains(&format!("KernelChoice::{name}")) {
+            v.push(Violation {
+                path: "rust/src/kernels/mod.rs".to_string(),
+                line: 0,
+                message: format!(
+                    "R4: KernelChoice::{name} is never exercised in rust/tests/kernels.rs"
+                ),
+            });
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------
+
+/// R1 scope: the modules a live connection's request path runs through.
+const R1_DIRS: [&str; 3] = ["rust/src/server", "rust/src/coordinator", "rust/src/kernels"];
+const R1_FILES: [&str; 1] = ["rust/src/runtime/pool.rs"];
+/// R3 scope: the files that move length/count fields across the wire.
+const R3_FILES: [&str; 3] =
+    ["rust/src/server/conn.rs", "rust/src/server/client.rs", "rust/src/io/bytes.rs"];
+
+fn rs_files_under(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            rs_files_under(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+fn run(root: &Path) -> Result<(Vec<Violation>, usize), String> {
+    if !root.join("rust/src").is_dir() {
+        return Err(format!(
+            "{} does not look like the repo root (no rust/src); pass --root",
+            root.display()
+        ));
+    }
+    let read = |p: &Path| -> Result<String, String> {
+        std::fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))
+    };
+    let mut violations = Vec::new();
+    let mut checked = 0usize;
+
+    // R1 over the serving-path modules.
+    let mut r1_paths: Vec<PathBuf> = Vec::new();
+    for d in R1_DIRS {
+        rs_files_under(&root.join(d), &mut r1_paths);
+    }
+    for f in R1_FILES {
+        let p = root.join(f);
+        if p.is_file() {
+            r1_paths.push(p);
+        }
+    }
+    r1_paths.sort();
+    for p in &r1_paths {
+        let src = read(p)?;
+        let (toks, allows) = lex(&src);
+        let toks = strip_tests(toks);
+        violations.extend(r1_panic_free(&rel(root, p), &toks, &allows));
+        checked += 1;
+    }
+
+    // R3 over the wire-handling files.
+    for f in R3_FILES {
+        let p = root.join(f);
+        let src = read(&p)?;
+        let (toks, allows) = lex(&src);
+        let toks = strip_tests(toks);
+        violations.extend(r3_no_truncating_casts(&rel(root, &p), &toks, &allows));
+        checked += 1;
+    }
+
+    // R2 across the protocol table and both wire endpoints.
+    let proto = root.join("rust/src/server/protocol.rs");
+    let proto_src = if proto.is_file() { Some(read(&proto)?) } else { None };
+    let conn_src = read(&root.join("rust/src/server/conn.rs"))?;
+    let client_src = read(&root.join("rust/src/server/client.rs"))?;
+    violations.extend(r2_shared_opcode_table(
+        proto_src.as_deref(),
+        &[
+            ("rust/src/server/conn.rs", conn_src.as_str()),
+            ("rust/src/server/client.rs", client_src.as_str()),
+        ],
+    ));
+
+    // R4 across the kernel impls and the integration matrix.
+    let mut kernel_paths: Vec<PathBuf> = Vec::new();
+    rs_files_under(&root.join("rust/src/kernels"), &mut kernel_paths);
+    kernel_paths.sort();
+    let mut kernel_files = Vec::new();
+    for p in &kernel_paths {
+        kernel_files.push((rel(root, p), read(p)?));
+    }
+    let tests_src = read(&root.join("rust/tests/kernels.rs"))?;
+    violations.extend(r4_kernel_matrix(&kernel_files, &tests_src));
+
+    Ok((violations, checked))
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(p) = args.next() else {
+                    eprintln!("sqnn-lint: --root needs a path");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(p);
+            }
+            "-h" | "--help" => {
+                println!(
+                    "sqnn-lint [--root <repo>]\n\
+                     Enforces the serving-path invariants R1-R4 (see DESIGN.md decision 12).\n\
+                     Exit: 0 clean, 1 violations, 2 setup error."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("sqnn-lint: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match run(&root) {
+        Ok((violations, checked)) => {
+            if violations.is_empty() {
+                println!("sqnn-lint: clean ({checked} serving-path files, rules R1-R4)");
+                ExitCode::SUCCESS
+            } else {
+                for v in &violations {
+                    println!("{v}");
+                }
+                println!("sqnn-lint: {} violation(s)", violations.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("sqnn-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Self-tests: each rule must fire on a seeded bad fixture and stay
+// quiet on the equivalent clean one.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex_stripped(src: &str) -> (Vec<Tok>, Allows) {
+        let (toks, allows) = lex(src);
+        (strip_tests(toks), allows)
+    }
+
+    fn r1_on(src: &str) -> Vec<Violation> {
+        let (toks, allows) = lex_stripped(src);
+        r1_panic_free("f.rs", &toks, &allows)
+    }
+
+    fn r3_on(src: &str) -> Vec<Violation> {
+        let (toks, allows) = lex_stripped(src);
+        r3_no_truncating_casts("f.rs", &toks, &allows)
+    }
+
+    #[test]
+    fn lexer_strings_comments_chars_lifetimes() {
+        let src = r##"
+            // comment with x.unwrap() and arr[0]
+            /* block panic! /* nested */ still comment */
+            let s = "str with .unwrap() and [0]";
+            let r = r#"raw "with" [idx] .expect()"#;
+            let b = b"bytes [1]";
+            let c = 'x';
+            let bc = b'I';
+            let esc = '\n';
+            fn f<'a>(x: &'a str) {}
+        "##;
+        let (toks, _) = lex(src);
+        assert!(!toks.iter().any(|t| t.text == "unwrap" || t.text == "expect" || t.text == "panic"),
+            "literal/comment contents must not tokenize");
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::StrLit).count(), 3);
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::CharLit).count(), 3);
+        assert!(toks.iter().any(|t| t.kind == Kind::Lifetime && t.text == "'a"));
+        assert!(r1_on(src).is_empty(), "nothing real to flag here");
+    }
+
+    #[test]
+    fn strip_tests_removes_cfg_test_blocks() {
+        let src = "
+            fn live() { x.get(0); }
+            #[cfg(test)]
+            mod tests {
+                fn t() { x.unwrap(); y[0]; panic!(\"boom\"); }
+            }
+        ";
+        assert!(r1_on(src).is_empty(), "cfg(test) blocks are exempt");
+        let (toks, _) = lex_stripped(src);
+        assert!(toks.iter().any(|t| t.text == "live"));
+        assert!(!toks.iter().any(|t| t.text == "unwrap"));
+    }
+
+    #[test]
+    fn r1_fires_on_each_panic_shape() {
+        let bad = "
+            fn f(xs: &[u32], m: &M) -> u32 {
+                let a = xs.first().unwrap();
+                let b = m.lock().expect(\"poisoned\");
+                if *a > 3 { panic!(\"no\"); }
+                match b { _ => unreachable!() }
+                xs[0] + xs.foo()[1]
+            }
+        ";
+        let v = r1_on(bad);
+        assert_eq!(v.len(), 6, "unwrap, expect, panic!, unreachable!, 2x indexing: {v:?}");
+        assert!(v.iter().all(|x| x.message.starts_with("R1")));
+    }
+
+    #[test]
+    fn r1_non_indexing_brackets_and_result_combinators_pass() {
+        let clean = "
+            fn f(xs: &mut [u32]) -> Vec<u32> {
+                let v = vec![1, 2, 3];
+                for x in [1, 2] { let _ = x; }
+                let d: &mut [u8] = &mut [];
+                let o = xs.first().copied().unwrap_or(0);
+                let e = xs.get(1).unwrap_or_else(|| &0);
+                let arr: [u8; 4] = [0; 4];
+                let m = s.lock().unwrap_or_else(PoisonError::into_inner);
+                v
+            }
+        ";
+        assert!(r1_on(clean).is_empty(), "{:?}", r1_on(clean));
+    }
+
+    #[test]
+    fn r1_allow_markers_waive_line_and_block() {
+        let src = "
+            fn f(xs: &[f32], i: usize) -> f32 {
+                // lint:allow(bounds proven above)
+                let a = xs[i];
+                // lint:allow-block(hot loop, i < xs.len() by construction)
+                let b = xs[i] + xs[i + 1];
+                let c = xs[0].sqrt();
+                // lint:allow-end
+                let d = xs[i]; // NOT allowed: outside both markers
+                a + b + c + d
+            }
+        ";
+        let v = r1_on(src);
+        assert_eq!(v.len(), 1, "only the post-block index may fire: {v:?}");
+        assert_eq!(v.first().map(|x| x.line), Some(9));
+    }
+
+    #[test]
+    fn r3_fires_on_narrowing_but_not_widening() {
+        let bad = "fn f(n: usize) -> u32 { n as u32 }";
+        assert_eq!(r3_on(bad).len(), 1);
+        let widen = "fn f(n: u32) -> u64 { n as u64 }";
+        assert!(r3_on(widen).is_empty(), "widening casts cannot truncate");
+        let float = "fn f(n: u32) -> f32 { n as f32 }";
+        assert!(r3_on(float).is_empty());
+        let waived = "
+            // lint:allow(length bounded by cap above)
+            fn f(n: usize) -> u32 { n as u32 }
+        ";
+        assert!(r3_on(waived).is_empty());
+    }
+
+    const PROTO_FIXTURE: &str = "
+        pub(crate) const OP_INFER: u8 = b'I';
+        pub(crate) const OP_QUIT: u8 = b'Q';
+    ";
+
+    #[test]
+    fn r2_fires_on_bare_literals_and_unhandled_opcodes() {
+        // conn handles both opcodes; client sneaks a bare literal and
+        // never references OP_QUIT.
+        let conn = "fn f(op: u8) { match op { OP_INFER => {}, OP_QUIT => {}, _ => {} } }";
+        let client = "fn g() { send(b'I'); let _ = OP_INFER; }";
+        let v = r2_shared_opcode_table(
+            Some(PROTO_FIXTURE),
+            &[("conn.rs", conn), ("client.rs", client)],
+        );
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|x| x.message.contains("bare opcode literal b'I'")));
+        assert!(v.iter().any(|x| x.message.contains("OP_QUIT is not handled")));
+    }
+
+    #[test]
+    fn r2_clean_endpoints_pass_and_missing_table_fails() {
+        let conn = "fn f(op: u8) { match op { OP_INFER => {}, OP_QUIT => {}, _ => {} } }";
+        let ok = r2_shared_opcode_table(Some(PROTO_FIXTURE), &[("conn.rs", conn), ("client.rs", conn)]);
+        assert!(ok.is_empty(), "{ok:?}");
+        // Lowercase byte chars (payload framing, not opcodes) don't count.
+        let payload = "fn f() { let _ = (b'x', OP_INFER, OP_QUIT); }";
+        assert!(r2_shared_opcode_table(Some(PROTO_FIXTURE), &[("c.rs", payload)]).is_empty());
+        let missing = r2_shared_opcode_table(None, &[("conn.rs", conn)]);
+        assert_eq!(missing.len(), 1);
+        assert!(missing.first().is_some_and(|x| x.message.contains("missing")));
+    }
+
+    #[test]
+    fn r4_fires_on_untested_kernel_and_variant() {
+        let kernels = vec![
+            ("k/a.rs".to_string(), "impl MatmulKernel for TestedKernel {}".to_string()),
+            ("k/b.rs".to_string(), "impl MatmulKernel for GhostKernel {}".to_string()),
+            (
+                "k/mod.rs".to_string(),
+                "fn pick(c: KernelChoice) { match c { KernelChoice::Fast => {}, \
+                 KernelChoice::Ghost => {} } }"
+                    .to_string(),
+            ),
+        ];
+        let tests_src = "fn t() { TestedKernel::new(); pick(KernelChoice::Fast); }";
+        let v = r4_kernel_matrix(&kernels, tests_src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|x| x.message.contains("`GhostKernel`")));
+        assert!(v.iter().any(|x| x.message.contains("KernelChoice::Ghost")));
+        let all = "fn t() { TestedKernel::new(); GhostKernel::new(); \
+                   pick(KernelChoice::Fast); pick(KernelChoice::Ghost); }";
+        assert!(r4_kernel_matrix(&kernels, all).is_empty());
+    }
+
+    /// End-to-end over this very repository: the serving path must be
+    /// clean. (Skips silently when the test isn't run from within the
+    /// workspace — e.g. a vendored copy of the tool.)
+    #[test]
+    fn repo_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        if !root.join("rust/src").is_dir() {
+            return;
+        }
+        let (violations, checked) = run(&root).expect("lint run failed");
+        assert!(checked > 10, "scope collapsed to {checked} files");
+        assert!(
+            violations.is_empty(),
+            "serving path regressed:\n{}",
+            violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+        );
+    }
+}
