@@ -1,0 +1,91 @@
+//! Entropy-coded container (v3) bench + CI gate: bits/weight of the raw
+//! v2 vs entropy-coded v3 image of the standard synthetic graph
+//! (784→512→256→10 at 90% sparsity), plus encode/decode throughput of
+//! the range-coded container path.
+//!
+//! Two hard gates make this a smoke test, not just a report:
+//! * the v3 image must round-trip bit-identically back to its raw v2
+//!   twin (decode → re-encode as v2 equals the v2 image), and
+//! * the aggregate container bits/weight must improve by ≥ 10% under
+//!   `--entropy on` vs raw v2 — the headline claim of the v3 format.
+
+use sqnn_xor::benchutil::{bench, print_table, write_csv};
+use sqnn_xor::compress::{compress_model, CompressOptions, CompressSpec, LayerSpec};
+use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::models::synthetic_dense_graph;
+
+fn main() {
+    // The standard synthetic compression workload (matches EXPERIMENTS.md).
+    let dense = synthetic_dense_graph(0xE2C0DE, 784, &[512, 256], 10);
+    let spec = CompressSpec {
+        default: LayerSpec { sparsity: 0.9, n_in: 20, n_out: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let (model, report) =
+        compress_model(&dense, &spec, &CompressOptions { encode_threads: 4, verify: true })
+            .expect("compress standard graph");
+
+    let v2 = model.to_bytes();
+    let v3 = model.to_v3_bytes();
+
+    // Gate 1: lossless round-trip — the v3 image decodes to exactly the
+    // model the raw v2 image holds, bit for bit.
+    let back = SqnnModel::from_bytes(&v3).expect("decode v3");
+    assert_eq!(back.to_bytes(), v2, "v3 decode is not bit-identical to raw v2");
+    assert_eq!(back.to_v3_bytes(), v3, "v3 re-encode is not byte-stable");
+
+    // Gate 2: the entropy coder must earn its keep — ≥ 10% aggregate
+    // container bits/weight improvement over raw v2.
+    let v2_bpw = report.v2_bits_per_weight();
+    let v3_bpw = report.v3_bits_per_weight();
+    assert!(
+        v3_bpw <= 0.9 * v2_bpw,
+        "v3 bits/weight {v3_bpw:.3} is not >=10% under v2 {v2_bpw:.3}"
+    );
+
+    let enc = bench("v3 encode", 1, 5, || {
+        std::hint::black_box(model.to_v3_bytes());
+    });
+    let dec3 = bench("v3 decode", 1, 5, || {
+        std::hint::black_box(SqnnModel::from_bytes(&v3).expect("decode v3"));
+    });
+    let dec2 = bench("v2 decode", 1, 5, || {
+        std::hint::black_box(SqnnModel::from_bytes(&v2).expect("decode v2"));
+    });
+
+    // Throughput is per raw (v2-image) byte moved, the apples-to-apples
+    // number across both containers.
+    let raw_mb = v2.len() as f64 / 1e6;
+    let rows = vec![
+        vec![
+            "raw v2".to_string(),
+            format!("{}", v2.len()),
+            format!("{v2_bpw:.3}"),
+            "-".to_string(),
+            format!("{:.1}", raw_mb / dec2.mean_s),
+        ],
+        vec![
+            "entropy v3".to_string(),
+            format!("{}", v3.len()),
+            format!("{v3_bpw:.3}"),
+            format!("{:.1}", raw_mb / enc.mean_s),
+            format!("{:.1}", raw_mb / dec3.mean_s),
+        ],
+    ];
+    print_table(
+        "container formats: 784-512-256-10 @ S=0.9 (bits/weight over encrypted layers)",
+        &["container", "bytes", "bits/weight", "enc MB/s", "dec MB/s"],
+        &rows,
+    );
+    write_csv(
+        "perf_entropy.csv",
+        &["container", "bytes", "bits_per_weight", "enc_mb_s", "dec_mb_s"],
+        &rows,
+    );
+    println!(
+        "entropy v3: {:.1}% smaller than raw v2 ({} -> {} bytes)",
+        100.0 * (1.0 - v3.len() as f64 / v2.len() as f64),
+        v2.len(),
+        v3.len()
+    );
+}

@@ -27,7 +27,9 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::gf2::BitVec;
-use crate::io::sqnn_file::{Activation, EncryptedLayer, Layer, SqnnModel};
+use crate::io::sqnn_file::{
+    layer_v2_bytes, layer_v3_bytes, Activation, EncryptedLayer, Layer, SqnnModel,
+};
 use crate::prune::PruneMethod;
 use crate::quant::QuantMethod;
 use crate::xorenc::{BitPlane, CompressionStats, EncryptConfig, XorEncoder};
@@ -236,6 +238,12 @@ pub struct LayerReport {
     pub quant_mse: Option<f64>,
     /// Wall-clock encrypt+verify time for this layer, seconds.
     pub encode_secs: f64,
+    /// Serialized size of this layer in the raw v2 container, bytes.
+    pub container_v2_bytes: usize,
+    /// Serialized size of this layer in the entropy-coded v3 container,
+    /// bytes (every section independently falls back to raw when coding
+    /// would expand it, so this is never much above `container_v2_bytes`).
+    pub container_v3_bytes: usize,
 }
 
 impl LayerReport {
@@ -266,6 +274,17 @@ impl LayerReport {
     /// wall clock).
     pub fn encode_bits_per_sec(&self) -> f64 {
         (self.weights() * self.n_q) as f64 / self.encode_secs.max(1e-12)
+    }
+
+    /// Whole-container bits per weight in the raw v2 format (everything
+    /// on the wire — headers, mask, alphas, bias — not just Eq. 2 payload).
+    pub fn v2_bits_per_weight(&self) -> f64 {
+        (self.container_v2_bytes * 8) as f64 / self.weights().max(1) as f64
+    }
+
+    /// Whole-container bits per weight in the entropy-coded v3 format.
+    pub fn v3_bits_per_weight(&self) -> f64 {
+        (self.container_v3_bytes * 8) as f64 / self.weights().max(1) as f64
     }
 }
 
@@ -319,23 +338,55 @@ impl CompressionReport {
         self.layers.iter().map(|r| r.encode_secs).sum()
     }
 
+    /// Raw v2 container bytes summed over compressed layers.
+    pub fn total_v2_bytes(&self) -> usize {
+        self.layers.iter().map(|r| r.container_v2_bytes).sum()
+    }
+
+    /// Entropy-coded v3 container bytes summed over compressed layers.
+    pub fn total_v3_bytes(&self) -> usize {
+        self.layers.iter().map(|r| r.container_v3_bytes).sum()
+    }
+
+    /// Aggregate whole-container bits per weight, raw v2.
+    pub fn v2_bits_per_weight(&self) -> f64 {
+        (self.total_v2_bytes() * 8) as f64 / self.total_weights().max(1) as f64
+    }
+
+    /// Aggregate whole-container bits per weight, entropy-coded v3.
+    pub fn v3_bits_per_weight(&self) -> f64 {
+        (self.total_v3_bytes() * 8) as f64 / self.total_weights().max(1) as f64
+    }
+
     /// Render the per-layer + aggregate table (the `sqnn compress` CLI
     /// report).
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<12} {:>11} {:>6} {:>4} {:>9} {:>12} {:>9} {:>9} {:>10}\n",
-            "layer", "shape", "S", "n_q", "n_in/out", "bits/weight", "patch%", "mem.red.", "Mbit/s enc"
+            "{:<12} {:>11} {:>6} {:>4} {:>9} {:>12} {:>8} {:>8} {:>9} {:>9} {:>10}\n",
+            "layer",
+            "shape",
+            "S",
+            "n_q",
+            "n_in/out",
+            "bits/weight",
+            "v2 b/w",
+            "v3 b/w",
+            "patch%",
+            "mem.red.",
+            "Mbit/s enc"
         ));
         for r in &self.layers {
             out.push_str(&format!(
-                "{:<12} {:>11} {:>6.3} {:>4} {:>9} {:>12.3} {:>8.1}% {:>9.3} {:>10.2}\n",
+                "{:<12} {:>11} {:>6.3} {:>4} {:>9} {:>12.3} {:>8.3} {:>8.3} {:>8.1}% {:>9.3} {:>10.2}\n",
                 r.name,
                 format!("{}x{}", r.rows, r.cols),
                 r.sparsity,
                 r.n_q,
                 format!("{}/{}", r.n_in, r.n_out),
                 r.quant_bits_per_weight(),
+                r.v2_bits_per_weight(),
+                r.v3_bits_per_weight(),
                 100.0 * r.patch_overhead(),
                 r.memory_reduction(),
                 r.encode_bits_per_sec() / 1e6,
@@ -345,13 +396,15 @@ impl CompressionReport {
         let weights = self.total_weights().max(1);
         let secs = self.total_encode_secs();
         out.push_str(&format!(
-            "{:<12} {:>11} {:>6} {:>4} {:>9} {:>12.3} {:>8.1}% {:>9.3} {:>10.2}\n",
+            "{:<12} {:>11} {:>6} {:>4} {:>9} {:>12.3} {:>8.3} {:>8.3} {:>8.1}% {:>9.3} {:>10.2}\n",
             "TOTAL",
             format!("{weights}w"),
             "-",
             "-",
             "-",
             agg.total_bits as f64 / weights as f64,
+            self.v2_bits_per_weight(),
+            self.v3_bits_per_weight(),
             100.0 * (agg.npatch_bits + agg.dpatch_bits) as f64 / agg.total_bits.max(1) as f64,
             agg.memory_reduction(),
             agg.original_bits as f64 / secs.max(1e-12) / 1e6,
@@ -472,7 +525,10 @@ impl LayerCompressor {
             eplanes.push(ep);
         }
         let encode_secs = t0.elapsed().as_secs_f64();
-        let layer = EncryptedLayer {
+        // Wrap for the container-size accounting (the serializers take a
+        // graph-level `Layer`), then unwrap to hand the caller the
+        // encrypted layer it asked for.
+        let wrapped = Layer::Encrypted(EncryptedLayer {
             layer_id,
             name: name.to_string(),
             rows,
@@ -482,6 +538,11 @@ impl LayerCompressor {
             mask,
             bias,
             activation,
+        });
+        let container_v2_bytes = layer_v2_bytes(&wrapped);
+        let container_v3_bytes = layer_v3_bytes(&wrapped);
+        let Layer::Encrypted(layer) = wrapped else {
+            bail!("layer {name}: internal error: encrypted layer changed kind");
         };
         let report = LayerReport {
             name: name.to_string(),
@@ -495,6 +556,8 @@ impl LayerCompressor {
             stats: layer.quant_stats(),
             quant_mse,
             encode_secs,
+            container_v2_bytes,
+            container_v3_bytes,
         };
         Ok((layer, report))
     }

@@ -36,7 +36,7 @@ use super::batcher::{
 };
 use super::engine::{EngineOptions, SqnnEngine};
 use super::metrics::MetricsSnapshot;
-use crate::io::sqnn_file::SqnnModel;
+use crate::io::sqnn_file::{container_version, SqnnModel};
 
 /// Registry construction knobs (`sqnn serve --models … --max-loaded …
 /// --queue-cap …`). One config applies to every model the registry
@@ -131,8 +131,40 @@ pub struct ModelStatus {
     /// Pinned entries (adopted externally-owned coordinators) are never
     /// LRU-evicted and refuse `unload`.
     pub pinned: bool,
+    /// Container format version of the on-disk source file (path sources
+    /// only; `None` for in-memory models, factories, and unreadable files).
+    pub container_version: Option<u32>,
+    /// Size of the on-disk source file in bytes (same availability as
+    /// [`ModelStatus::container_version`]).
+    pub bytes_on_disk: Option<u64>,
     /// Metrics snapshot, for loaded models.
     pub snapshot: Option<MetricsSnapshot>,
+}
+
+/// On-disk facts about a registered source, sniffed once at registration
+/// so `P` / `sqnn models` report them without touching the filesystem
+/// under the registry lock.
+#[derive(Clone, Copy, Debug, Default)]
+struct SourceInfo {
+    container_version: Option<u32>,
+    bytes_on_disk: Option<u64>,
+}
+
+/// Sniff a source's on-disk facts. Best-effort by design: a missing or
+/// unreadable file registers fine (the load path reports the real error
+/// with context) and simply shows `null` fields in the status JSON.
+fn sniff_source_info(source: &ModelSource) -> SourceInfo {
+    let ModelSource::Path(p) = source else {
+        return SourceInfo::default();
+    };
+    let bytes_on_disk = std::fs::metadata(p).ok().map(|m| m.len());
+    let version = std::fs::File::open(p).ok().and_then(|mut f| {
+        use std::io::Read as _;
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic).ok()?;
+        container_version(&magic)
+    });
+    SourceInfo { container_version: version, bytes_on_disk }
 }
 
 /// A loaded model: its name, the handle work is submitted through, and
@@ -148,7 +180,7 @@ struct ModelEntry {
 }
 
 struct Inner {
-    sources: HashMap<String, ModelSource>,
+    sources: HashMap<String, (ModelSource, SourceInfo)>,
     entries: HashMap<String, Arc<ModelEntry>>,
     /// Non-pinned loaded names, least-recently-used first.
     lru: Vec<String>,
@@ -244,8 +276,11 @@ impl ModelRegistry {
         if name.is_empty() || name.len() > 255 {
             anyhow::bail!("model name must be 1..=255 bytes, got {}", name.len());
         }
+        // Sniff before taking the lock: registration is rare, but the
+        // lock is on every serving path.
+        let info = sniff_source_info(&source);
         let mut inner = self.lock_unpoisoned();
-        inner.sources.insert(name.to_string(), source);
+        inner.sources.insert(name.to_string(), (source, info));
         if inner.default_name.is_none() {
             inner.default_name = Some(name.to_string());
         }
@@ -368,18 +403,27 @@ impl ModelRegistry {
     /// [`ModelRegistry::list`] as a JSON array — the `P` opcode body and
     /// the `sqnn models` output. Loaded models embed their full metrics
     /// snapshot under `"metrics"`; unloaded ones carry `"metrics":null`.
+    /// Path-registered models report the on-disk `"container_version"`
+    /// and `"bytes_on_disk"` sniffed at registration; other sources (and
+    /// unreadable files) report `null` for both.
     pub fn list_json(&self) -> String {
+        fn opt_num(v: Option<impl std::fmt::Display>) -> String {
+            v.map(|n| n.to_string()).unwrap_or_else(|| "null".to_string())
+        }
         let mut out = String::from("[");
         for (i, st) in self.list().iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
             out.push_str(&format!(
-                "{{\"name\":\"{}\",\"loaded\":{},\"default\":{},\"pinned\":{},\"metrics\":{}}}",
+                "{{\"name\":\"{}\",\"loaded\":{},\"default\":{},\"pinned\":{},\
+                 \"container_version\":{},\"bytes_on_disk\":{},\"metrics\":{}}}",
                 json_escape(&st.name),
                 st.loaded,
                 st.default,
                 st.pinned,
+                opt_num(st.container_version),
+                opt_num(st.bytes_on_disk),
                 st.snapshot.as_ref().map(|s| s.to_json()).unwrap_or_else(|| "null".to_string()),
             ));
         }
@@ -398,10 +442,14 @@ impl ModelRegistry {
             .into_iter()
             .map(|name| {
                 let entry = inner.entries.get(&name);
+                let info =
+                    inner.sources.get(&name).map(|(_, i)| *i).unwrap_or_default();
                 ModelStatus {
                     loaded: entry.is_some(),
                     default: inner.default_name.as_deref() == Some(name.as_str()),
                     pinned: entry.map(|e| e.pinned).unwrap_or(false),
+                    container_version: info.container_version,
+                    bytes_on_disk: info.bytes_on_disk,
                     snapshot: entry.map(|e| e.handle.metrics().snapshot()),
                     name,
                 }
@@ -469,7 +517,7 @@ impl ModelRegistry {
         // the lock may be reacquired by the time anyone re-checks; fetch
         // defensively and release the slot on the (unreachable) miss so
         // waiters are never stranded on the condvar.
-        let Some(source) = inner.sources.get(&name).cloned() else {
+        let Some((source, _)) = inner.sources.get(&name).cloned() else {
             inner.loading.remove(&name);
             drop(inner);
             self.loaded_cv.notify_all();
@@ -661,6 +709,30 @@ mod tests {
         assert!(json.contains("\"loaded\":true"), "{json}");
         assert!(json.contains("\"metrics\":null"), "{json}");
         assert!(json.contains("\"requests\":1"), "{json}");
+    }
+
+    #[test]
+    fn list_json_reports_container_version_and_size_for_path_sources() {
+        use crate::io::sqnn_file::EntropyMode;
+        let path = std::env::temp_dir()
+            .join(format!("sqnn-registry-info-{}.sqnn", std::process::id()));
+        toy(5).save_with(&path, EntropyMode::On).unwrap();
+        let bytes = std::fs::metadata(&path).unwrap().len();
+        let reg = small_registry(4);
+        reg.register_path("disk", &path).unwrap();
+        reg.register_model("mem", toy(6)).unwrap();
+        let json = reg.list_json();
+        assert!(
+            json.contains(&format!("\"container_version\":3,\"bytes_on_disk\":{bytes}")),
+            "{json}"
+        );
+        let st = reg.list();
+        let mem = st.iter().find(|s| s.name == "mem").unwrap();
+        assert!(mem.container_version.is_none() && mem.bytes_on_disk.is_none());
+        let disk = st.iter().find(|s| s.name == "disk").unwrap();
+        assert_eq!(disk.container_version, Some(3));
+        assert_eq!(disk.bytes_on_disk, Some(bytes));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

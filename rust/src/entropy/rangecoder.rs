@@ -1,0 +1,211 @@
+//! Carry-less binary range coder with 12-bit adaptive probabilities.
+//!
+//! Adapted from the lpaq/fpaq family of context-model arithmetic coders
+//! (SNIPPETS.md snippet 1): the encoder keeps a 32-bit interval
+//! `[low, high]`, splits it at `mid` in proportion to the modelled
+//! probability that the next bit is 1, narrows onto the half containing
+//! the bit, and emits a byte whenever the top bytes of `low` and `high`
+//! agree. The decoder mirrors the arithmetic exactly, steering by the
+//! coded value instead of the input bit, so no symbol table or length
+//! prefix is needed. Probabilities adapt toward each observed bit with a
+//! shift update and stay inside `[1, 4095]`, so the split point always
+//! lands strictly inside the interval and no state ever collapses.
+
+/// Probability precision: `p / 4096` is the modelled P(bit = 1).
+pub const PROB_BITS: u32 = 12;
+/// One in fixed point (`4096`); live probabilities stay in `[1, 4095]`.
+pub const PROB_ONE: u16 = 1 << PROB_BITS;
+/// Fresh-model probability: P(1) = 1/2.
+pub const PROB_INIT: u16 = PROB_ONE / 2;
+/// Adaptation shift: each observed bit moves `p` by `1/16` of the gap
+/// toward that bit. Fast enough that a fresh per-block model reaches a
+/// skewed distribution within a few dozen bits.
+const ADAPT: u32 = 4;
+
+/// Top byte of a 32-bit register (the shift leaves at most 8 live bits,
+/// so the conversion cannot fail; `unwrap_or` keeps this panic-free).
+fn top_byte(x: u32) -> u8 {
+    u8::try_from(x >> 24).unwrap_or(u8::MAX)
+}
+
+/// Moves `p` toward the observed bit, staying inside `[1, 4095]`.
+fn adapt(p: &mut u16, bit: bool) {
+    if bit {
+        *p += (PROB_ONE - *p) >> ADAPT;
+    } else {
+        *p -= *p >> ADAPT;
+    }
+}
+
+/// Splits `[low, high]` at the point putting `p/4096` of the interval in
+/// the bit-is-1 half. `p <= 4095` keeps `mid < high`, and the two-part
+/// product never overflows `u32`.
+fn split(low: u32, high: u32, p: u16) -> u32 {
+    let range = high - low;
+    let p = u32::from(p);
+    low + (range >> PROB_BITS) * p + (((range & (u32::from(PROB_ONE) - 1)) * p) >> PROB_BITS)
+}
+
+/// Streaming encoder: feed bits with their model slots, then `finish`.
+pub struct RangeEncoder {
+    low: u32,
+    high: u32,
+    out: Vec<u8>,
+}
+
+impl Default for RangeEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RangeEncoder {
+    pub fn new() -> Self {
+        RangeEncoder { low: 0, high: u32::MAX, out: Vec::new() }
+    }
+
+    /// Encode one bit under the adaptive probability `p`, updating `p`.
+    pub fn encode_bit(&mut self, p: &mut u16, bit: bool) {
+        let mid = split(self.low, self.high, *p);
+        if bit {
+            self.high = mid;
+        } else {
+            self.low = mid + 1;
+        }
+        adapt(p, bit);
+        // Emit settled top bytes. When a 1-bit collapses the interval to
+        // a point the `| 0xFF` re-inflates `high` within at most four
+        // shifts, so this loop always terminates.
+        while (self.low ^ self.high) & 0xFF00_0000 == 0 {
+            self.out.push(top_byte(self.high));
+            self.high = (self.high << 8) | 0xFF;
+            self.low <<= 8;
+        }
+    }
+
+    /// Flush the final interval and return the coded bytes. Emitting all
+    /// four bytes of `high` writes a value inside `[low, high]`, which is
+    /// exactly what the decoder needs to replay every decision.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..4 {
+            self.out.push(top_byte(self.high));
+            self.high <<= 8;
+        }
+        self.out
+    }
+}
+
+/// Streaming decoder over a coded byte slice. Reads past the end of the
+/// input yield zero bytes, which is consistent with the encoder's flush;
+/// corruption is caught by the section checksum, not here.
+pub struct RangeDecoder<'a> {
+    low: u32,
+    high: u32,
+    value: u32,
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    pub fn new(input: &'a [u8]) -> Self {
+        let mut d = RangeDecoder { low: 0, high: u32::MAX, value: 0, input, pos: 0 };
+        for _ in 0..4 {
+            d.value = (d.value << 8) | d.next_byte();
+        }
+        d
+    }
+
+    fn next_byte(&mut self) -> u32 {
+        let b = self.input.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        u32::from(b)
+    }
+
+    /// Decode one bit under the adaptive probability `p`, updating `p`
+    /// exactly as the encoder did.
+    pub fn decode_bit(&mut self, p: &mut u16) -> bool {
+        let mid = split(self.low, self.high, *p);
+        let bit = self.value <= mid;
+        if bit {
+            self.high = mid;
+        } else {
+            self.low = mid + 1;
+        }
+        adapt(p, bit);
+        while (self.low ^ self.high) & 0xFF00_0000 == 0 {
+            self.high = (self.high << 8) | 0xFF;
+            self.low <<= 8;
+            self.value = (self.value << 8) | self.next_byte();
+        }
+        bit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn roundtrip(bits: &[bool]) {
+        let mut enc = RangeEncoder::new();
+        let mut p = PROB_INIT;
+        for &b in bits {
+            enc.encode_bit(&mut p, b);
+        }
+        let coded = enc.finish();
+        let mut dec = RangeDecoder::new(&coded);
+        let mut p = PROB_INIT;
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(dec.decode_bit(&mut p), b, "bit {i} of {}", bits.len());
+        }
+    }
+
+    #[test]
+    fn roundtrips_random_and_skewed_streams() {
+        let mut rng = Rng::new(0xC0DE);
+        for &p1 in &[0.5f64, 0.9, 0.99, 0.01] {
+            let bits: Vec<bool> = (0..4096).map(|_| rng.next_f64() < p1).collect();
+            roundtrip(&bits);
+        }
+    }
+
+    #[test]
+    fn roundtrips_degenerate_streams() {
+        roundtrip(&[]);
+        roundtrip(&[true]);
+        roundtrip(&[false]);
+        roundtrip(&vec![true; 1000]);
+        roundtrip(&vec![false; 1000]);
+    }
+
+    #[test]
+    fn skewed_streams_compress() {
+        let mut rng = Rng::new(7);
+        let bits: Vec<bool> = (0..8192).map(|_| rng.next_f64() < 0.02).collect();
+        let mut enc = RangeEncoder::new();
+        let mut p = PROB_INIT;
+        for &b in &bits {
+            enc.encode_bit(&mut p, b);
+        }
+        let coded = enc.finish();
+        // 2%-ones bits have ~0.14 bits of entropy each; the adaptive
+        // coder should land well under 1/4 of the raw size.
+        assert!(coded.len() * 8 < bits.len() / 4, "coded {} bytes", coded.len());
+    }
+
+    #[test]
+    fn probability_stays_in_range_under_adversarial_updates() {
+        for start in [1u16, PROB_INIT, PROB_ONE - 1] {
+            let mut p = start;
+            for _ in 0..10_000 {
+                adapt(&mut p, true);
+                assert!((1..PROB_ONE).contains(&p));
+            }
+            let mut p = start;
+            for _ in 0..10_000 {
+                adapt(&mut p, false);
+                assert!((1..PROB_ONE).contains(&p));
+            }
+        }
+    }
+}

@@ -55,6 +55,7 @@ impl ByteWriter {
         // The container format length-prefixes strings with a u32; a
         // truncating cast here would silently corrupt the container, so
         // an over-long string (a writer bug, not corrupt input) panics.
+        // lint:allow(writer-side invariant: an over-long string is a code bug, and the deliberate panic beats silent container corruption)
         let len = u32::try_from(s.len()).expect("container string exceeds u32 length prefix");
         self.put_u32(len);
         self.put_bytes(s.as_bytes());
@@ -77,12 +78,21 @@ impl<'a> ByteReader<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.remaining() < n {
+        let Some(s) = self.pos.checked_add(n).and_then(|end| self.buf.get(self.pos..end))
+        else {
             bail!("truncated container: need {n} bytes, have {}", self.remaining());
-        }
-        let s = &self.buf[self.pos..self.pos + n];
+        };
         self.pos += n;
         Ok(s)
+    }
+
+    /// `take(N)` as a fixed array; the length always matches, but the
+    /// conversion is surfaced as a framed error rather than a panic site.
+    fn take_array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        match <[u8; N]>::try_from(self.take(N)?) {
+            Ok(a) => Ok(a),
+            Err(_) => bail!("internal reader error: take({N}) length mismatch"),
+        }
     }
 
     pub fn get_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
@@ -90,19 +100,40 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.take_array::<1>()?;
+        Ok(b)
     }
 
     pub fn get_u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_array::<4>()?))
     }
 
     pub fn get_u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_array::<8>()?))
     }
 
     pub fn get_f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_array::<4>()?))
+    }
+
+    /// A `u64` count/length wire field as `usize`, erroring (never
+    /// truncating) when the value does not fit the address width.
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        match usize::try_from(v) {
+            Ok(n) => Ok(n),
+            Err(_) => bail!("count field {v} exceeds the address width"),
+        }
+    }
+
+    /// A `u32` count/length wire field as `usize`, same contract as
+    /// [`Self::get_usize`].
+    pub fn get_u32_usize(&mut self) -> Result<usize> {
+        let v = self.get_u32()?;
+        match usize::try_from(v) {
+            Ok(n) => Ok(n),
+            Err(_) => bail!("count field {v} exceeds the address width"),
+        }
     }
 
     pub fn get_f32s(&mut self) -> Result<Vec<f32>> {

@@ -25,6 +25,8 @@ pub mod benchutil;
 pub mod compress;
 pub mod coordinator;
 #[warn(missing_docs)]
+pub mod entropy;
+#[warn(missing_docs)]
 pub mod gf2;
 pub mod rng;
 #[warn(missing_docs)]

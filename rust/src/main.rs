@@ -24,7 +24,7 @@ use sqnn_xor::coordinator::{
     DecodeMode, EngineOptions, KernelChoice, ModelRegistry, RegistryConfig, SqnnEngine,
 };
 use sqnn_xor::io::npy::read_npy;
-use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
+use sqnn_xor::io::sqnn_file::{container_version, EntropyMode, Layer, SqnnModel};
 use sqnn_xor::models::synthetic_dense_graph;
 use sqnn_xor::prune::PruneMethod;
 use sqnn_xor::quant::QuantMethod;
@@ -119,6 +119,8 @@ fn print_help() {
                        --layers a,b,c | all             which dense layers to encrypt\n\
                      --encode-threads N                 encode workers (0 = auto; also\n\
                                                         settable via SQNN_ENCODE_THREADS)\n\
+                     --entropy on|off|auto (auto)       container format: on = entropy-coded\n\
+                                                        v3, off = raw v2, auto = smaller\n\
            verify    --artifacts DIR --model M.sqnn     lossless + served-accuracy check\n\
            info      --model M.sqnn                     container statistics\n\
            serve     TCP inference server, two modes:\n\
@@ -187,6 +189,7 @@ fn compress_spec(flags: &HashMap<String, String>) -> Result<CompressSpec> {
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
     let out = flag(flags, "out", "model.sqnn");
+    let entropy: EntropyMode = flag(flags, "entropy", "auto").parse()?;
     let requested: usize =
         flag(flags, "encode-threads", "0").parse().context("bad --encode-threads")?;
     let opts =
@@ -235,7 +238,8 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
         }
         compress_bundle_with(flag(flags, "artifacts", "artifacts"), &opts)?
     };
-    model.save(out)?;
+    model.save_with(out, entropy)?;
+    let on_disk = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
     println!(
         "wrote {out}: {} layers ({} encrypted) in {:.2}s",
         model.layers.len(),
@@ -243,6 +247,15 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     print!("{}", report.render());
+    println!(
+        "container: raw v2 {} B ({:.3} b/w) vs entropy v3 {} B ({:.3} b/w) over encrypted \
+         layers; --entropy {} wrote {on_disk} B",
+        report.total_v2_bytes(),
+        report.v2_bits_per_weight(),
+        report.total_v3_bytes(),
+        report.v3_bits_per_weight(),
+        flag(flags, "entropy", "auto"),
+    );
     let st = model.quant_stats();
     println!(
         "quant payload: {:.3} bits/weight (codes {:.3} + npatch {:.3} + dpatch {:.3}); ratio {:.2}x",
@@ -256,8 +269,15 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
-    let model = SqnnModel::load(flag(flags, "model", "model.sqnn"))?;
+    let path = flag(flags, "model", "model.sqnn");
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {path}"))?;
+    let model = SqnnModel::from_bytes(&bytes)?;
     println!("meta: {:?}", model.meta);
+    match container_version(&bytes) {
+        Some(v) => println!("container: v{v}, {} bytes on disk", bytes.len()),
+        None => println!("container: unknown magic, {} bytes on disk", bytes.len()),
+    }
     println!("layer chain ({} layers):", model.layers.len());
     for layer in &model.layers {
         match layer {

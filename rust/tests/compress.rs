@@ -9,7 +9,8 @@ use sqnn_xor::compress::{
     compress_model, CompressOptions, CompressSpec, LayerSelect, LayerSpec,
 };
 use sqnn_xor::coordinator::{DecodeMode, EngineOptions, SqnnEngine};
-use sqnn_xor::io::sqnn_file::{Layer, SqnnModel};
+use sqnn_xor::io::sqnn_file::{EntropyMode, Layer, SqnnModel};
+use sqnn_xor::kernels::KernelChoice;
 use sqnn_xor::models::synthetic_dense_graph;
 use sqnn_xor::quant::QuantMethod;
 use sqnn_xor::rng::Rng;
@@ -197,4 +198,71 @@ fn compressed_container_roundtrips_and_reports_consistently() {
     assert!(report.total_encode_secs() >= 0.0);
     let rendered = report.render();
     assert!(rendered.contains("fc1") && rendered.contains("TOTAL"), "{rendered}");
+}
+
+#[test]
+fn entropy_v3_container_is_byte_stable_lossless_and_auto_never_larger() {
+    let dense = synthetic_dense_graph(0xE3, 48, &[40, 24], 6);
+    let spec = CompressSpec {
+        default: LayerSpec { sparsity: 0.9, n_in: 12, n_out: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let (compressed, report) =
+        compress_model(&dense, &spec, &CompressOptions { encode_threads: 2, verify: true })
+            .unwrap();
+
+    let v2 = compressed.to_bytes_with(EntropyMode::Off);
+    let v3 = compressed.to_bytes_with(EntropyMode::On);
+    assert_eq!(v2, compressed.to_bytes(), "Off must be the raw v2 image");
+
+    // v3 round-trip is byte-stable: decode → re-encode reproduces the
+    // image bit for bit (every section parse is exact-size, every coded
+    // block re-codes identically under the deterministic context models).
+    let back = SqnnModel::from_bytes(&v3).unwrap();
+    back.validate().unwrap();
+    assert_eq!(back.to_v3_bytes(), v3, "v3 re-encode is not byte-stable");
+    // v2 → v3 re-encode is lossless: the v3 image decodes to exactly the
+    // model the raw v2 image holds.
+    assert_eq!(back.to_bytes(), v2, "v3 decode lost information vs raw v2");
+
+    // Auto picks the smaller image, so it is never larger than raw v2.
+    let auto = compressed.to_bytes_with(EntropyMode::Auto);
+    assert!(auto.len() <= v2.len(), "auto ({}) larger than v2 ({})", auto.len(), v2.len());
+    assert_eq!(auto, if v3.len() < v2.len() { v3.clone() } else { v2.clone() });
+
+    // The report's container columns account for the same images the
+    // writer emits (per-layer sums over the encrypted chain).
+    assert!(report.total_v2_bytes() > 0);
+    assert!(report.total_v3_bytes() > 0);
+    assert!(report.v3_bits_per_weight() <= report.v2_bits_per_weight());
+
+    // The v3-decoded model serves bit-identically to its raw-v2 twin
+    // across all five kernels × both decode modes × thread counts.
+    let raw_twin = SqnnModel::from_bytes(&v2).unwrap();
+    let xs = inputs(6, 48, 33);
+    for kernel in [
+        KernelChoice::Auto,
+        KernelChoice::Dense,
+        KernelChoice::Csr,
+        KernelChoice::Fused,
+        KernelChoice::Bitplane,
+    ] {
+        for mode in [DecodeMode::Eager, DecodeMode::PerBatch] {
+            for threads in [1usize, 2, 4, 8] {
+                let opts = EngineOptions { decode_threads: threads, decode_mode: mode, kernel };
+                let reference = SqnnEngine::load_native(raw_twin.clone(), &[8], opts)
+                    .unwrap()
+                    .infer(&xs)
+                    .unwrap();
+                let got = SqnnEngine::load_native(back.clone(), &[8], opts)
+                    .unwrap()
+                    .infer(&xs)
+                    .unwrap();
+                assert_eq!(
+                    got, reference,
+                    "v3 twin diverged: kernel={kernel:?} mode={mode:?} threads={threads}"
+                );
+            }
+        }
+    }
 }

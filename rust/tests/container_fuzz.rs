@@ -1,0 +1,134 @@
+//! Corruption fuzz for the v3 entropy-coded container reader.
+//!
+//! The v3 reader runs inside the serving tier (`sqnn serve` loads models
+//! from disk on operator request), so a corrupt or hostile container must
+//! fail closed: every malformed input returns a framed `anyhow` error —
+//! never a panic, never an allocation sized from an unvalidated wire
+//! field. These tests drive the reader with seeded-RNG corruption:
+//! truncations at every byte boundary, random bit flips, forged 64-bit
+//! length/count fields, and garbage bodies behind a valid magic.
+
+use sqnn_xor::io::sqnn_file::{container_version, SqnnModel};
+use sqnn_xor::models::synth::{synthetic_mixed_layer_graph, SynthCsr, SynthEncrypted};
+use sqnn_xor::rng::Rng;
+
+/// An all-storage-kinds model (two encrypted layers, a CSR layer, a dense
+/// tail), small enough that the exhaustive truncation sweep stays fast.
+fn fuzz_model() -> SqnnModel {
+    synthetic_mixed_layer_graph(
+        0xF022,
+        24,
+        &[
+            SynthEncrypted { out_dim: 16, nq: 2, sparsity: 0.9, n_in: 8, n_out: 16 },
+            SynthEncrypted { out_dim: 12, nq: 1, sparsity: 0.8, n_in: 8, n_out: 16 },
+        ],
+        &[SynthCsr { out_dim: 10, density: 0.2 }],
+        &[8],
+        5,
+    )
+}
+
+#[test]
+fn every_truncation_of_a_v3_container_is_a_framed_error() {
+    let m = fuzz_model();
+    let bytes = m.to_v3_bytes();
+    assert_eq!(container_version(&bytes), Some(3));
+    // Sanity: the untruncated container parses.
+    SqnnModel::from_bytes(&bytes).unwrap();
+    // The writer emits exactly the bytes the reader needs, so removing
+    // any suffix must surface as an error (with a message, not a panic).
+    for cut in 0..bytes.len() {
+        match SqnnModel::from_bytes(&bytes[..cut]) {
+            Ok(_) => panic!("truncation at {cut}/{} parsed successfully", bytes.len()),
+            Err(e) => assert!(!e.to_string().is_empty(), "empty error at cut {cut}"),
+        }
+    }
+}
+
+#[test]
+fn random_bit_flips_never_panic_and_are_mostly_rejected() {
+    let m = fuzz_model();
+    let baseline = m.to_v3_bytes();
+    let mut rng = Rng::new(0xB17F_11B5);
+    let trials = 400usize;
+    let mut rejected = 0usize;
+    for trial in 0..trials {
+        let mut mutated = baseline.clone();
+        let flips = 1 + rng.next_below(8) as usize;
+        for _ in 0..flips {
+            let bit = rng.next_below((mutated.len() * 8) as u64) as usize;
+            mutated[bit / 8] ^= 1u8 << (bit % 8);
+        }
+        match SqnnModel::from_bytes(&mutated) {
+            // Flips can land in bytes the format does not checksum (layer
+            // names, raw dense weights/biases) and still parse; the result
+            // must at least be self-consistent enough to re-serialize.
+            Ok(back) => {
+                let _ = back.to_bytes();
+            }
+            Err(e) => {
+                assert!(!e.to_string().is_empty(), "empty error in trial {trial}");
+                rejected += 1;
+            }
+        }
+    }
+    // Entropy-coded sections are checksummed and framing fields are
+    // structurally validated, so the vast majority of flips must be
+    // caught. A low rejection rate means validation quietly regressed.
+    assert!(rejected > trials / 2, "only {rejected}/{trials} corruptions rejected");
+}
+
+#[test]
+fn forged_64bit_fields_fail_closed_without_unbounded_allocation() {
+    let m = fuzz_model();
+    let baseline = m.to_v3_bytes();
+    let mut rng = Rng::new(0x0F0F_CAFE);
+    // Stamp u64::MAX over every aligned offset plus random unaligned
+    // ones. Wherever that lands on a count or block length, the reader
+    // must reject it via the structural caps *before* allocating — a
+    // buffer sized from the forged field would abort the process and
+    // fail this test at the harness level.
+    let last = baseline.len().saturating_sub(8);
+    let mut offsets: Vec<usize> = (0..last).step_by(8).collect();
+    for _ in 0..64 {
+        offsets.push(rng.next_below(last as u64) as usize);
+    }
+    for off in offsets {
+        let mut forged = baseline.clone();
+        forged[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        match SqnnModel::from_bytes(&forged) {
+            // All-ones bytes can land entirely inside raw float payloads
+            // and decode as (garbage) numbers; that is corruption the
+            // format genuinely cannot see, and it still must not panic.
+            Ok(back) => {
+                let _ = back.to_bytes();
+            }
+            Err(e) => assert!(!e.to_string().is_empty(), "empty error at offset {off}"),
+        }
+    }
+}
+
+#[test]
+fn forged_headers_and_garbage_bodies_with_v3_magic_are_errors() {
+    // A header that declares u64::MAX layers must bail on the layer-count
+    // guard, not pre-allocate a Vec for them.
+    let mut forged = Vec::new();
+    forged.extend_from_slice(b"SQNN3\0");
+    forged.extend_from_slice(&8u64.to_le_bytes());
+    forged.extend_from_slice(&4u64.to_le_bytes());
+    forged.extend_from_slice(&u64::MAX.to_le_bytes());
+    assert!(SqnnModel::from_bytes(&forged).is_err());
+
+    // Random garbage behind a valid magic: always an error, never a panic.
+    let mut rng = Rng::new(0x6A5B_0BAD);
+    for len in [0usize, 1, 7, 25, 64, 512, 4096] {
+        for _ in 0..16 {
+            let mut bytes = b"SQNN3\0".to_vec();
+            bytes.extend((0..len).map(|_| rng.next_below(256) as u8));
+            assert!(
+                SqnnModel::from_bytes(&bytes).is_err(),
+                "garbage body of {len} bytes parsed"
+            );
+        }
+    }
+}

@@ -13,7 +13,7 @@ use sqnn_xor::coordinator::{
     BatchPolicy, Coordinator, DecodeMode, EngineOptions, ModelRegistry, RegistryConfig,
     SqnnEngine,
 };
-use sqnn_xor::io::sqnn_file::SqnnModel;
+use sqnn_xor::io::sqnn_file::{EntropyMode, SqnnModel};
 use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
 use sqnn_xor::server::{Client, Server, ServerConfig};
 
@@ -474,4 +474,49 @@ fn over_limit_connections_shed_busy_instead_of_killing_the_server() {
     };
     assert_eq!(logits, want);
     server.stop();
+}
+
+/// `P` replies carry per-model provenance: a path-registered model
+/// reports its on-disk container version and byte size; an in-memory
+/// model reports `null` for both.
+#[test]
+fn models_json_reports_container_version_and_bytes_on_disk() {
+    let path = std::env::temp_dir()
+        .join(format!("sqnn-proto-info-{}.sqnn", std::process::id()));
+    let model = two_layer_model(0xD15C);
+    model.save_with(&path, EntropyMode::On).unwrap();
+    let bytes_on_disk = std::fs::metadata(&path).unwrap().len();
+
+    let registry = registry_with(&[("mem", 0xA1)], 4);
+    registry.register_path("disk", &path).unwrap();
+    let mut server =
+        Server::start_registry(registry, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let mut c = Client::connect(&addr).unwrap();
+
+    let json = c.models_json().unwrap();
+    assert!(
+        json.contains(&format!(
+            "\"name\":\"disk\",\"loaded\":false,\"default\":false,\"pinned\":false,\
+             \"container_version\":3,\"bytes_on_disk\":{bytes_on_disk}"
+        )),
+        "{json}"
+    );
+    // In-memory registrations have no on-disk provenance.
+    assert!(
+        json.contains("\"name\":\"mem\",\"loaded\":false,\"default\":true,\"pinned\":false,\"container_version\":null,\"bytes_on_disk\":null"),
+        "{json}"
+    );
+
+    // The v3 file actually serves over the wire like its in-memory twin.
+    let input = vec![0.1f32; INPUT_DIM];
+    let want = {
+        let engine =
+            SqnnEngine::load_native(model, &[1, 4], test_engine_opts()).unwrap();
+        engine.infer(&[input.clone()]).unwrap().remove(0)
+    };
+    assert_eq!(c.infer_named(Some("disk"), &input).unwrap(), want);
+
+    server.stop();
+    let _ = std::fs::remove_file(&path);
 }

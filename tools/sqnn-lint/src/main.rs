@@ -7,20 +7,24 @@
 //! * **R1 — panic-free serving path.** No `.unwrap()`, `.expect()`,
 //!   `panic!`, `unreachable!`, `todo!`, `unimplemented!`, or slice/array
 //!   indexing (`x[i]`, `x[a..b]`) in `rust/src/server/`,
-//!   `rust/src/coordinator/`, `rust/src/kernels/`, or
-//!   `rust/src/runtime/pool.rs`. A connection must answer with a framed
-//!   `E` error or shed — never take down a worker that multiplexes other
-//!   connections. Proven-bounded hot-loop indexing may be waived with
-//!   `// lint:allow(reason)` (covers its own and the next line) or a
-//!   `// lint:allow-block(reason)` … `// lint:allow-end` region.
+//!   `rust/src/coordinator/`, `rust/src/kernels/`, `rust/src/entropy/`,
+//!   `rust/src/runtime/pool.rs`, or the container load path
+//!   (`rust/src/io/sqnn_file.rs`, `rust/src/io/bytes.rs`) — model load
+//!   runs inside the serving tier, so a corrupt container must answer
+//!   with a framed `E` error or shed, never take down a worker that
+//!   multiplexes other connections. Proven-bounded hot-loop indexing may
+//!   be waived with `// lint:allow(reason)` (covers its own and the next
+//!   line) or a `// lint:allow-block(reason)` … `// lint:allow-end`
+//!   region.
 //! * **R2 — one opcode table.** Every wire opcode is a named constant in
 //!   `rust/src/server/protocol.rs`, and both `conn.rs` (server side) and
 //!   `client.rs` (client side) reference every constant — no bare
 //!   `b'I'`-style opcode literals, no half-implemented opcodes.
 //! * **R3 — no truncating casts on wire fields.** In `conn.rs`,
-//!   `client.rs`, and `io/bytes.rs`, `as u8`/`as u16`/`as u32`/`as
-//!   usize` (and signed/`isize` kin) are banned: lengths and counts
-//!   cross the wire through `try_from` with an error path.
+//!   `client.rs`, `io/bytes.rs`, `io/sqnn_file.rs`, and the `entropy/`
+//!   coder files, `as u8`/`as u16`/`as u32`/`as usize` (and
+//!   signed/`isize` kin) are banned: lengths and counts cross the wire
+//!   through `try_from` with an error path.
 //! * **R4 — complete kernel matrix.** Every `impl MatmulKernel for X`
 //!   under `rust/src/kernels/` and every `KernelChoice` variant must
 //!   appear in `rust/tests/kernels.rs`.
@@ -601,12 +605,23 @@ fn r4_kernel_matrix(kernel_files: &[(String, String)], tests_src: &str) -> Vec<V
 // Driver
 // ---------------------------------------------------------------------
 
-/// R1 scope: the modules a live connection's request path runs through.
-const R1_DIRS: [&str; 3] = ["rust/src/server", "rust/src/coordinator", "rust/src/kernels"];
-const R1_FILES: [&str; 1] = ["rust/src/runtime/pool.rs"];
-/// R3 scope: the files that move length/count fields across the wire.
-const R3_FILES: [&str; 3] =
-    ["rust/src/server/conn.rs", "rust/src/server/client.rs", "rust/src/io/bytes.rs"];
+/// R1 scope: the modules a live connection's request path runs through —
+/// including the container load path (`io/`) and the entropy coder,
+/// which the registry's hot load/unload runs on behalf of connections.
+const R1_DIRS: [&str; 4] =
+    ["rust/src/server", "rust/src/coordinator", "rust/src/kernels", "rust/src/entropy"];
+const R1_FILES: [&str; 3] =
+    ["rust/src/runtime/pool.rs", "rust/src/io/sqnn_file.rs", "rust/src/io/bytes.rs"];
+/// R3 scope: the files that move length/count fields across the wire or
+/// through the container format.
+const R3_FILES: [&str; 6] = [
+    "rust/src/server/conn.rs",
+    "rust/src/server/client.rs",
+    "rust/src/io/bytes.rs",
+    "rust/src/io/sqnn_file.rs",
+    "rust/src/entropy/mod.rs",
+    "rust/src/entropy/rangecoder.rs",
+];
 
 fn rs_files_under(dir: &Path, out: &mut Vec<PathBuf>) {
     let Ok(entries) = std::fs::read_dir(dir) else {
