@@ -1,50 +1,71 @@
-//! §Perf serving-tier concurrency bench: hundreds of concurrent framed
-//! connections (mixed named-infer / stats / load-unload traffic)
-//! against an in-process multi-model server, reporting sustained
-//! request throughput and p50/p99 round-trip latency per worker-thread
-//! count.
+//! §Perf serving-tier concurrency bench: 2000 concurrent framed
+//! connections driving bimodal open-loop traffic (synchronized bursts
+//! that flood every connection at once, plus a steady trickle between
+//! them) against an in-process multi-model server — once under the
+//! static default batching policy and once under the adaptive
+//! p99-targeted controller, reporting sustained throughput and p50/p99
+//! round-trip latency for each.
 //!
 //! This is also CI's serving-regression gate (bench-smoke):
 //!
-//! * it opens ≥500 concurrent framed connections against ≥2 loaded
-//!   models and fails if the server ever sheds or drops one;
+//! * it holds ≥2000 concurrent framed connections open against ≥2
+//!   loaded models and fails if the server ever sheds or drops one;
 //! * every infer reply is checked bit-exact against a fresh-engine
 //!   oracle for the (model, input) it asked for — one wrong payload
 //!   (cross-talk between multiplexed connections) fails the run;
+//! * the adaptive controller must *beat* the static default on p99 at
+//!   equal-or-better throughput under the same workload (bursts want
+//!   big batches to amortize the per-batch XOR decode, the trickle
+//!   wants tiny waits — a fixed policy cannot have both), and its
+//!   published stats must show the controller actually moved;
 //! * a sanity floor on req/s catches order-of-magnitude serving-tier
 //!   regressions without flaking on slow CI hosts.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use sqnn_xor::coordinator::{
-    EngineOptions, ModelRegistry, RegistryConfig, SqnnEngine,
+    AdaptiveConfig, BatchPolicy, DecodeMode, EngineOptions, ModelRegistry, RegistryConfig,
+    SqnnEngine,
 };
 use sqnn_xor::io::sqnn_file::SqnnModel;
 use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
 use sqnn_xor::server::{Client, Server, ServerConfig};
 use sqnn_xor::util::percentile;
 
-const INPUT_DIM: usize = 16;
+const INPUT_DIM: usize = 32;
 const NUM_CLASSES: usize = 4;
 /// Concurrent framed connections held open through the timed phase.
-const CONNS: usize = 500;
+const CONNS: usize = 2000;
 /// Driver threads; each owns CONNS / DRIVERS connections.
-const DRIVERS: usize = 10;
-/// Timed requests per connection.
-const ROUNDS: usize = 4;
+const DRIVERS: usize = 20;
+/// Timed burst rounds (each round floods every connection once).
+const ROUNDS: usize = 3;
+/// Trickle round-trips per driver per round, between bursts.
+const TRICKLE: usize = 4;
 /// Distinct probe inputs (oracle table size per model).
 const VARIANTS: usize = 4;
+/// Bucket ladder: the adaptive controller's reachable operating points.
+const BUCKETS: [usize; 5] = [1, 8, 32, 128, 512];
+/// Minimum untimed warm-up, so the adaptive controller has several
+/// window steps to converge before the clock starts (the static run
+/// warms the same amount — identical workloads, fair comparison).
+const WARMUP: Duration = Duration::from_millis(800);
 /// Sanity floor: an order-of-magnitude guard, not a perf target —
 /// single-core CI runners must pass it with slack.
 const FLOOR_REQ_PER_S: f64 = 200.0;
 
 fn model(seed: u64) -> SqnnModel {
+    // A beefier encrypted layer than the unit tests use: per-batch XOR
+    // decode must be a visible cost, because amortizing it is exactly
+    // what the controller's bigger batches buy during bursts.
     synthetic_layer_graph(
         seed,
         INPUT_DIM,
-        &[SynthEncrypted { out_dim: 12, ..Default::default() }],
+        &[SynthEncrypted { out_dim: 48, nq: 2, ..Default::default() }],
         &[],
         NUM_CLASSES,
     )
@@ -54,8 +75,61 @@ fn probe(v: usize) -> Vec<f32> {
     vec![0.1 + 0.05 * v as f32; INPUT_DIM]
 }
 
+/// Raw named-infer frame (`I`, count word with the name flag in bit 31,
+/// u16 name length + name, floats). The bench writes frames directly so
+/// a driver can flood all of its connections *before* reading any reply
+/// — `Client` is strictly one-in-flight and cannot produce a burst.
+fn infer_frame(name: &str, input: &[f32]) -> Vec<u8> {
+    let mut msg = Vec::with_capacity(7 + name.len() + input.len() * 4);
+    msg.push(b'I');
+    let count = input.len() as u32 | (1u32 << 31);
+    msg.extend_from_slice(&count.to_le_bytes());
+    msg.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    msg.extend_from_slice(name.as_bytes());
+    for v in input {
+        msg.extend_from_slice(&v.to_le_bytes());
+    }
+    msg
+}
+
+/// Read one `O` logits reply off a raw stream.
+fn read_logits(s: &mut TcpStream) -> Vec<f32> {
+    let mut op = [0u8; 1];
+    s.read_exact(&mut op).expect("read reply opcode");
+    assert_eq!(op[0], b'O', "expected an O reply, got opcode {}", op[0]);
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb).expect("read reply length");
+    let n = u32::from_le_bytes(nb) as usize;
+    let mut raw = vec![0u8; n * 4];
+    s.read_exact(&mut raw).expect("read logits");
+    raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Pull a numeric field out of the flat stats JSON without a JSON
+/// dependency (the snapshot format is a single unnested object).
+fn json_number(json: &str, key: &str) -> f64 {
+    let needle = format!("\"{key}\":");
+    let at = json.find(&needle).unwrap_or_else(|| panic!("no {key} in {json}"));
+    let rest = &json[at + needle.len()..];
+    let end = rest.find(|c| c == ',' || c == '}').unwrap_or(rest.len());
+    rest[..end].trim().parse().unwrap_or_else(|e| panic!("bad {key} ({e}) in {json}"))
+}
+
+struct ConfigResult {
+    rate: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
 fn main() {
-    let opts = EngineOptions { decode_threads: 1, ..Default::default() };
+    let opts = EngineOptions {
+        decode_threads: 1,
+        // Per-batch decode: every batch pays the full XOR decode, so the
+        // batch size is a real latency/throughput lever, as in serving
+        // deployments that cannot hold eager dense caches per model.
+        decode_mode: DecodeMode::PerBatch,
+        ..Default::default()
+    };
 
     // Oracle table: expected logits per (model, input variant), from
     // fresh engines outside any server.
@@ -63,7 +137,7 @@ fn main() {
     let names = ["m0", "m1"];
     let mut oracle = vec![vec![Vec::new(); VARIANTS]; names.len()];
     for (m, seed) in seeds.iter().enumerate() {
-        let engine = SqnnEngine::load_native(model(*seed), &[1, 8], opts).unwrap();
+        let engine = SqnnEngine::load_native(model(*seed), &BUCKETS, opts).unwrap();
         for v in 0..VARIANTS {
             oracle[m][v] = engine.infer(&[probe(v)]).unwrap().remove(0);
         }
@@ -72,29 +146,73 @@ fn main() {
 
     println!(
         "perf_serve: {CONNS} concurrent connections, {DRIVERS} drivers, \
-         {ROUNDS} reqs/conn, 2 models + load/unload churn"
+         {ROUNDS} burst rounds + trickle, 2 models + load/unload churn"
     );
     println!(
         "{:<10} {:>10} {:>12} {:>10} {:>10} {:>10}",
-        "workers", "reqs", "elapsed_s", "req/s", "p50_ms", "p99_ms"
+        "policy", "reqs", "elapsed_s", "req/s", "p50_ms", "p99_ms"
     );
-    for workers in [2usize, 4] {
-        run_config(workers, opts, &names, &oracle);
-    }
-    println!("perf_serve OK: zero wrong payloads, floor {FLOOR_REQ_PER_S} req/s held");
+
+    // The static baseline is the historical default the adaptive
+    // controller replaces: a fixed mid-ladder batch cap and a fixed
+    // assembly wait.
+    let static_policy = BatchPolicy::Static {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+    };
+    // The adaptive policy only gets a target; the controller must find
+    // the operating point itself. A short window so convergence fits in
+    // the warm-up, and a target the 2000-connection bursts breach on any
+    // host (the p99 request of a synchronized burst waits out most of
+    // the queue drain) — so the controller is always in the regime where
+    // it must climb the ladder to amortize the per-batch decode.
+    let adaptive_policy = BatchPolicy::Adaptive(AdaptiveConfig {
+        window: Duration::from_millis(100),
+        ..AdaptiveConfig::for_target(Duration::from_millis(10))
+    });
+
+    let st = run_config("static", static_policy, opts, &names, &oracle);
+    let ad = run_config("adaptive", adaptive_policy, opts, &names, &oracle);
+
+    // The headline gate: under identical bimodal load the controller
+    // must beat the fixed policy on tail latency without giving up
+    // throughput (small tolerance for run-to-run jitter on shared CI
+    // hosts; the p99 comparison itself is strict).
+    assert!(
+        ad.p99_ms <= st.p99_ms,
+        "adaptive batching lost on p99: {:.3} ms vs static {:.3} ms",
+        ad.p99_ms,
+        st.p99_ms
+    );
+    assert!(
+        ad.rate >= st.rate * 0.95,
+        "adaptive batching gave up throughput: {:.0} req/s vs static {:.0}",
+        ad.rate,
+        st.rate
+    );
+    println!(
+        "perf_serve OK: zero wrong payloads, zero sheds, adaptive p99 {:.3} ms <= \
+         static {:.3} ms at {:.0} vs {:.0} req/s (p50 {:.3} vs {:.3} ms), \
+         floor {FLOOR_REQ_PER_S} req/s held",
+        ad.p99_ms, st.p99_ms, ad.rate, st.rate, ad.p50_ms, st.p50_ms
+    );
 }
 
 fn run_config(
-    workers: usize,
+    label: &'static str,
+    policy: BatchPolicy,
     opts: EngineOptions,
     names: &[&'static str; 2],
     oracle: &Arc<Vec<Vec<Vec<f32>>>>,
-) {
+) -> ConfigResult {
     let registry = ModelRegistry::new(RegistryConfig {
         max_loaded: 3,
-        buckets: vec![1, 8],
+        // Deep enough that a full 2000-connection burst is admitted
+        // without shedding: admission control is not under test here.
+        queue_cap: 4096,
+        policy,
+        buckets: BUCKETS.to_vec(),
         engine: opts,
-        ..Default::default()
     });
     registry.register_model("m0", model(0xD0)).unwrap();
     registry.register_model("m1", model(0xD1)).unwrap();
@@ -104,7 +222,7 @@ fn run_config(
     let mut server = Server::start_registry(
         registry,
         "127.0.0.1:0",
-        ServerConfig { acceptors: 2, workers, max_conns: CONNS + 64 },
+        ServerConfig { acceptors: 2, workers: 4, max_conns: CONNS + 64 },
     )
     .unwrap();
     let addr = format!("127.0.0.1:{}", server.port);
@@ -124,12 +242,15 @@ fn run_config(
                 c.models_json().unwrap();
                 c.unload("churn").unwrap();
                 cycles += 1;
-                std::thread::sleep(Duration::from_millis(10));
+                std::thread::sleep(Duration::from_millis(20));
             }
             cycles
         })
     };
 
+    // Three barriers: fleet fully open → warm-up done (clock starts) →
+    // timed phase done (clock stops).
+    let open_gate = Arc::new(Barrier::new(DRIVERS + 1));
     let start_gate = Arc::new(Barrier::new(DRIVERS + 1));
     let end_gate = Arc::new(Barrier::new(DRIVERS + 1));
     let wrong = Arc::new(AtomicU64::new(0));
@@ -140,6 +261,7 @@ fn run_config(
         let addr = addr.clone();
         let oracle = oracle.clone();
         let names = *names;
+        let open_gate = open_gate.clone();
         let start_gate = start_gate.clone();
         let end_gate = end_gate.clone();
         let wrong = wrong.clone();
@@ -147,38 +269,70 @@ fn run_config(
         drivers.push(std::thread::spawn(move || {
             // Open this driver's share of the connection fleet, with a
             // warm round-trip each so every connection is registered
-            // with a worker before the clock starts.
+            // with a worker before anything is measured.
             let mut conns = Vec::new();
             for k in 0..CONNS / DRIVERS {
-                let mut c = Client::connect(&addr).unwrap();
+                let mut s = TcpStream::connect(&addr).expect("connect fleet");
+                s.set_nodelay(true).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
                 let m = (d + k) % names.len();
-                let got = c.infer_named(Some(names[m]), &probe(0)).unwrap();
-                if got != oracle[m][0] {
+                s.write_all(&infer_frame(names[m], &probe(0))).unwrap();
+                if read_logits(&mut s) != oracle[m][0] {
                     wrong.fetch_add(1, Ordering::SeqCst);
                 }
-                conns.push(c);
+                conns.push(s);
             }
-            start_gate.wait();
-            let mut local = Vec::with_capacity(conns.len() * ROUNDS);
-            for r in 0..ROUNDS {
-                for (k, c) in conns.iter_mut().enumerate() {
-                    let m = (d + k + r) % names.len();
-                    let v = (k + r) % VARIANTS;
-                    let t0 = Instant::now();
-                    if (k + r) % 16 == 15 {
-                        // Mixed traffic: a framed stats round-trip.
-                        let stats = c.stats().unwrap();
-                        if !stats.starts_with('{') {
-                            wrong.fetch_add(1, Ordering::SeqCst);
-                        }
-                    } else {
-                        let got = c.infer_named(Some(names[m]), &probe(v)).unwrap();
-                        if got != oracle[m][v] {
-                            wrong.fetch_add(1, Ordering::SeqCst);
-                        }
-                    }
-                    local.push(t0.elapsed().as_secs_f64() * 1e3);
+            open_gate.wait();
+
+            // One bimodal round: flood every connection (open-loop burst
+            // — all requests are on the wire before any reply is read),
+            // then a short serial trickle that a big fixed assembly wait
+            // would penalize. Latency is wire-to-reply per request.
+            let mut round = |record: &mut Vec<f64>| {
+                let mut sent = Vec::with_capacity(conns.len());
+                for (k, s) in conns.iter_mut().enumerate() {
+                    let m = (d + k) % names.len();
+                    let v = k % VARIANTS;
+                    s.write_all(&infer_frame(names[m], &probe(v))).unwrap();
+                    sent.push((Instant::now(), m, v));
                 }
+                for (k, s) in conns.iter_mut().enumerate() {
+                    let (t0, m, v) = sent[k];
+                    if read_logits(s) != oracle[m][v] {
+                        wrong.fetch_add(1, Ordering::SeqCst);
+                    }
+                    record.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                for t in 0..TRICKLE {
+                    let s = &mut conns[t % conns.len()];
+                    let m = (d + t) % names.len();
+                    let v = t % VARIANTS;
+                    let t0 = Instant::now();
+                    s.write_all(&infer_frame(names[m], &probe(v))).unwrap();
+                    if read_logits(s) != oracle[m][v] {
+                        wrong.fetch_add(1, Ordering::SeqCst);
+                    }
+                    record.push(t0.elapsed().as_secs_f64() * 1e3);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            };
+
+            // Untimed warm-up: identical traffic shape, long enough for
+            // several controller window steps. Discarded for both
+            // configs so the comparison stays fair.
+            let warm_start = Instant::now();
+            let mut discard = Vec::new();
+            let mut warm_rounds = 0;
+            while warm_rounds < 2 || warm_start.elapsed() < WARMUP {
+                discard.clear();
+                round(&mut discard);
+                warm_rounds += 1;
+            }
+
+            start_gate.wait();
+            let mut local = Vec::with_capacity(conns.len() * ROUNDS + TRICKLE * ROUNDS);
+            for _ in 0..ROUNDS {
+                round(&mut local);
             }
             latencies.lock().unwrap().extend(local);
             end_gate.wait();
@@ -187,14 +341,33 @@ fn run_config(
         }));
     }
 
-    start_gate.wait();
-    let t0 = Instant::now();
+    open_gate.wait();
     // Every driver did a warm round-trip on every connection, so the
     // whole fleet is live and concurrently held open right now.
     let live = server.live_conns();
     assert!(live >= CONNS, "expected >={CONNS} live connections, saw {live}");
+
+    start_gate.wait();
+    let t0 = Instant::now();
     end_gate.wait();
     let elapsed = t0.elapsed().as_secs_f64();
+
+    // Controller observability, read before teardown: the published
+    // operating point must reflect the policy this config ran.
+    let mut probe_client = Client::connect(&addr).unwrap();
+    let stats = probe_client.stats_named("m0").unwrap();
+    if matches!(policy, BatchPolicy::Adaptive(_)) {
+        assert!(stats.contains("\"policy\":\"adaptive\""), "bad policy in stats: {stats}");
+        let batch_limit = json_number(&stats, "batch_limit");
+        let adjustments = json_number(&stats, "adjustments");
+        assert!(
+            batch_limit > 32.0 && adjustments >= 1.0,
+            "controller never moved off the initial point under sustained bursts: {stats}"
+        );
+    } else {
+        assert!(stats.contains("\"policy\":\"static\""), "bad policy in stats: {stats}");
+    }
+    assert!(stats.contains("\"window_p99_ms\""), "windowed telemetry missing: {stats}");
 
     stop_churn.store(true, Ordering::SeqCst);
     let churn_cycles = churn.join().unwrap();
@@ -205,18 +378,18 @@ fn run_config(
     let lat = latencies.lock().unwrap();
     let reqs = lat.len();
     let rate = reqs as f64 / elapsed;
+    let p50_ms = percentile(&lat, 0.50);
+    let p99_ms = percentile(&lat, 0.99);
     println!(
         "{:<10} {:>10} {:>12.2} {:>10.0} {:>10.3} {:>10.3}   (churn cycles: {})",
-        workers,
-        reqs,
-        elapsed,
-        rate,
-        percentile(&lat, 0.50),
-        percentile(&lat, 0.99),
-        churn_cycles
+        label, reqs, elapsed, rate, p50_ms, p99_ms, churn_cycles
     );
 
-    assert_eq!(reqs, CONNS * ROUNDS, "driver lost requests");
+    assert_eq!(
+        reqs,
+        (CONNS + DRIVERS * TRICKLE) * ROUNDS,
+        "driver lost requests"
+    );
     assert_eq!(
         wrong.load(Ordering::SeqCst),
         0,
@@ -228,4 +401,5 @@ fn run_config(
         "serving tier regressed: {rate:.0} req/s under the {FLOOR_REQ_PER_S} floor"
     );
     server.stop();
+    ConfigResult { rate, p50_ms, p99_ms }
 }

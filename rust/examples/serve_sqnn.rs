@@ -92,7 +92,8 @@ fn main() -> anyhow::Result<()> {
 
     let batch_sizes = meta.batch_sizes.clone();
     let art2 = artifacts.clone();
-    let policy = BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(1) };
+    let policy =
+        BatchPolicy::Static { max_batch: 32, max_wait: std::time::Duration::from_millis(1) };
     let coordinator = Coordinator::spawn(policy, move || {
         let runtime = Runtime::cpu()?;
         let model = compress_bundle(&art2)?;

@@ -1,0 +1,459 @@
+//! Adaptive p99-targeted batching controller.
+//!
+//! The paper's deployment story is a *fixed decoding rate with full
+//! memory-bandwidth usage*: the XOR-decode kernels make per-batch cost
+//! predictable, so the one latency knob left is how the batcher drives
+//! them. A static size-or-deadline policy ([`BatchPolicy::Static`])
+//! makes tail latency whatever the load makes it; this module closes the
+//! loop — a per-model AIMD feedback controller tunes the effective
+//! `max_batch`/`max_wait` online toward a configured windowed-p99 target.
+//!
+//! **Control law** (one step per telemetry window, DESIGN.md decision
+//! 14): read the sliding-window p99 from the model's
+//! [`Metrics`](super::metrics::Metrics) interval ring and classify it
+//! into an [`Observation`]; then
+//!
+//! * **Over target** — multiplicative response: the batch cap climbs one
+//!   step up the engine's bucket ladder (more drain throughput per
+//!   fixed per-batch cost) and the assembly wait halves (less added
+//!   latency). Deep queues are the p99 killer; both knobs push the same
+//!   direction.
+//! * **Under the headroom band** (p99 < `headroom · target`) — additive
+//!   probe: the wait grows by a quarter (better batch amortization at
+//!   no observed latency cost), and the batch cap steps one bucket down
+//!   *only if* the window's mean batch size shows the current cap is
+//!   mostly unfilled — so the controller converges from above instead
+//!   of pinning the ceiling forever.
+//! * **In the dead band** — hold. A band (not a set-point) is what
+//!   prevents limit-cycle oscillation around the target.
+//! * **Frozen window** (fewer than `min_window_samples` samples) — fall
+//!   back to the configured initial (static-equivalent) policy: a
+//!   trickle of traffic must not be steered by a stale or empty
+//!   percentile.
+//!
+//! Every step lands in [`apply`], a *pure* function over
+//! ([`AdaptiveConfig`], bucket ladder, [`CtrlState`], [`Observation`]),
+//! and every output is clamped to the ladder and the configured
+//! floor/ceiling bounds — a misbehaving window can shift the operating
+//! point but can never starve the assembly loop (`max_batch ≥ 1`) or
+//! stall it (`max_wait ≤` ceiling). `modelcheck::models::
+//! AdaptiveControllerModel` explores this exact function under every
+//! observation sequence and proves the clamp invariant holds in every
+//! reachable state.
+
+use std::time::{Duration, Instant};
+
+use super::metrics::{Metrics, WindowStats};
+
+/// Minimum wait growth step (µs) so the additive probe cannot get stuck
+/// at a zero-increment fixed point below the clamp ceiling.
+const WAIT_STEP_US: u64 = 50;
+
+/// Configuration of the adaptive feedback loop (the
+/// [`BatchPolicy::Adaptive`](super::batcher::BatchPolicy) payload).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Windowed-p99 latency target the loop steers toward.
+    pub p99_target: Duration,
+    /// Floor clamp on the batch cap (≥ 1; the loop can never starve
+    /// assembly below it).
+    pub min_batch: usize,
+    /// Ceiling clamp on the batch cap (further clamped to the engine's
+    /// largest bucket at runtime).
+    pub max_batch: usize,
+    /// Floor clamp on the assembly wait.
+    pub min_wait: Duration,
+    /// Ceiling clamp on the assembly wait (the loop can never stall
+    /// assembly beyond it).
+    pub max_wait: Duration,
+    /// Starting batch cap, and the frozen-window fallback value.
+    pub initial_batch: usize,
+    /// Starting wait, and the frozen-window fallback value.
+    pub initial_wait: Duration,
+    /// Telemetry interval width; also the control-step cadence (the
+    /// controller adjusts at most once per interval).
+    pub window: Duration,
+    /// Closed intervals kept in the sliding window ring.
+    pub window_intervals: usize,
+    /// Below this many window samples the window is *frozen*: the
+    /// controller falls back to the initial policy instead of steering
+    /// by a percentile made of noise.
+    pub min_window_samples: u64,
+    /// Fraction of the target below which the controller probes for
+    /// throughput (the dead band is `[headroom · target, target]`).
+    pub headroom: f64,
+}
+
+impl AdaptiveConfig {
+    /// A reasonable loop for `p99_target`: full bucket-ladder batch
+    /// range, 100 µs – 16 ms wait clamps around the classic 2 ms
+    /// starting point, 250 ms control windows.
+    pub fn for_target(p99_target: Duration) -> Self {
+        AdaptiveConfig {
+            p99_target,
+            min_batch: 1,
+            max_batch: usize::MAX,
+            min_wait: Duration::from_micros(100),
+            max_wait: Duration::from_millis(16),
+            initial_batch: 32,
+            initial_wait: Duration::from_millis(2),
+            window: Duration::from_millis(250),
+            window_intervals: 8,
+            min_window_samples: 16,
+            headroom: 0.7,
+        }
+    }
+
+    /// Builder-style override of the initial (and frozen-fallback)
+    /// operating point — the CLI routes `--max-wait-ms` through this so
+    /// adaptive serving starts where static serving would have run.
+    pub fn with_initial(mut self, batch: usize, wait: Duration) -> Self {
+        self.initial_batch = batch;
+        self.initial_wait = wait;
+        if self.max_wait < wait {
+            self.max_wait = wait;
+        }
+        if self.min_wait > wait {
+            self.min_wait = wait;
+        }
+        self
+    }
+}
+
+/// The controller's operating point: the *effective* policy the batch
+/// assembly loop runs with right now. Wait is kept in integer
+/// microseconds so the control arithmetic is exact, clamp-stable, and
+/// finite-state (the modelcheck model uses this same representation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CtrlState {
+    /// Current batch cap (always a bucket-ladder value within clamps).
+    pub max_batch: usize,
+    /// Current assembly wait, µs (always within the wait clamps).
+    pub max_wait_us: u64,
+}
+
+impl CtrlState {
+    /// The wait as a [`Duration`] for the assembly loop.
+    pub fn max_wait(&self) -> Duration {
+        Duration::from_micros(self.max_wait_us)
+    }
+}
+
+/// One window's classification, the controller's entire input alphabet.
+/// The modelcheck model proves clamp safety by exploring *every*
+/// sequence over this alphabet — whatever the telemetry does, the
+/// controller's reachable states stay inside the clamps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Observation {
+    /// Window p99 breached the target.
+    Over,
+    /// Window p99 is under the headroom band; `underfilled` is whether
+    /// the window's mean batch size shows the current cap mostly unmet.
+    Under {
+        /// Mean window batch < half the current cap.
+        underfilled: bool,
+    },
+    /// Window p99 sits inside the dead band — hold.
+    InBand,
+    /// Too few samples to trust the window — fall back to the initial
+    /// policy.
+    Frozen,
+}
+
+/// Total µs of a `Duration`, saturating instead of truncating.
+fn micros_u64(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+/// The wait clamp bounds as µs, with the floor forced sane (≥ 1 µs,
+/// ceiling ≥ floor) so a degenerate config cannot stall or spin.
+fn wait_bounds(cfg: &AdaptiveConfig) -> (u64, u64) {
+    let lo = micros_u64(cfg.min_wait).max(1);
+    let hi = micros_u64(cfg.max_wait).max(lo);
+    (lo, hi)
+}
+
+/// Snap `want` to the largest ladder value ≤ `want` (the smallest
+/// ladder value when nothing fits), then clamp into the configured
+/// batch bounds — also ladder-snapped so the result is always a real
+/// bucket.
+fn snap_batch(cfg: &AdaptiveConfig, ladder: &[usize], want: usize) -> usize {
+    let floor_of = |want: usize| -> usize {
+        ladder
+            .iter()
+            .copied()
+            .filter(|&b| b <= want)
+            .max()
+            .or_else(|| ladder.iter().copied().min())
+            .unwrap_or(1)
+            .max(1)
+    };
+    let lo = floor_of(cfg.min_batch.max(1));
+    let hi = floor_of(cfg.max_batch.max(1)).max(lo);
+    floor_of(want).clamp(lo, hi)
+}
+
+/// The clamped initial operating point for a config × ladder.
+pub fn initial_state(cfg: &AdaptiveConfig, ladder: &[usize]) -> CtrlState {
+    let (wlo, whi) = wait_bounds(cfg);
+    CtrlState {
+        max_batch: snap_batch(cfg, ladder, cfg.initial_batch),
+        max_wait_us: micros_u64(cfg.initial_wait).clamp(wlo, whi),
+    }
+}
+
+/// One pure control step: `state × observation → state`, always inside
+/// the clamps. This is the function the runtime controller, the unit
+/// tests, and the modelcheck exploration all share — there is exactly
+/// one control law in the codebase.
+pub fn apply(
+    cfg: &AdaptiveConfig,
+    ladder: &[usize],
+    state: CtrlState,
+    obs: Observation,
+) -> CtrlState {
+    let (wlo, whi) = wait_bounds(cfg);
+    let next = match obs {
+        Observation::Over => CtrlState {
+            // Next bucket up: the smallest ladder value above the
+            // current cap (snap_batch clamps it back into bounds).
+            max_batch: ladder
+                .iter()
+                .copied()
+                .filter(|&b| b > state.max_batch)
+                .min()
+                .unwrap_or(state.max_batch),
+            max_wait_us: state.max_wait_us / 2,
+        },
+        Observation::Under { underfilled } => CtrlState {
+            max_batch: if underfilled {
+                // Next bucket down, so an over-grown cap decays once
+                // the load that justified it is gone.
+                ladder
+                    .iter()
+                    .copied()
+                    .filter(|&b| b < state.max_batch)
+                    .max()
+                    .unwrap_or(state.max_batch)
+            } else {
+                state.max_batch
+            },
+            max_wait_us: state
+                .max_wait_us
+                .saturating_add((state.max_wait_us / 4).max(WAIT_STEP_US)),
+        },
+        Observation::InBand => state,
+        Observation::Frozen => return initial_state(cfg, ladder),
+    };
+    CtrlState {
+        max_batch: snap_batch(cfg, ladder, next.max_batch),
+        max_wait_us: next.max_wait_us.clamp(wlo, whi),
+    }
+}
+
+/// Classify one window's statistics against the config (given the
+/// current operating point, for the underfill signal).
+pub fn classify(cfg: &AdaptiveConfig, state: CtrlState, win: &WindowStats) -> Observation {
+    if win.requests < cfg.min_window_samples {
+        return Observation::Frozen;
+    }
+    let target_ms = cfg.p99_target.as_secs_f64() * 1e3;
+    if win.p99_ms > target_ms {
+        Observation::Over
+    } else if win.p99_ms < target_ms * cfg.headroom.clamp(0.0, 1.0) {
+        Observation::Under {
+            underfilled: win.mean_batch * 2.0 < state.max_batch as f64,
+        }
+    } else {
+        Observation::InBand
+    }
+}
+
+/// The runtime feedback loop: owns the operating point, steps it at
+/// most once per window against the model's metrics, and publishes the
+/// state (current batch/wait + adjustment count) back into the metrics
+/// so `sqnn stats` / `sqnn models` can observe the controller live.
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    ladder: Vec<usize>,
+    state: CtrlState,
+    last_step: Instant,
+}
+
+impl AdaptiveController {
+    /// A controller clamped to `ladder` (the engine's bucket sizes),
+    /// starting at the configured initial point. Publishes the initial
+    /// state into `metrics` immediately so stats never show a stale
+    /// static policy for an adaptive model.
+    pub fn new(cfg: AdaptiveConfig, ladder: &[usize], metrics: &Metrics) -> Self {
+        let mut ladder: Vec<usize> = ladder.iter().copied().filter(|&b| b > 0).collect();
+        if ladder.is_empty() {
+            ladder.push(1);
+        }
+        ladder.sort_unstable();
+        ladder.dedup();
+        let state = initial_state(&cfg, &ladder);
+        metrics.set_policy_state(true, state.max_batch, state.max_wait());
+        AdaptiveController { cfg, ladder, state, last_step: Instant::now() }
+    }
+
+    /// The effective `(max_batch, max_wait)` the assembly loop should
+    /// use right now.
+    pub fn current(&self) -> (usize, Duration) {
+        (self.state.max_batch, self.state.max_wait())
+    }
+
+    /// Step the loop if a full window has elapsed since the last step.
+    /// Returns whether the operating point changed.
+    pub fn maybe_step(&mut self, metrics: &Metrics) -> bool {
+        if self.last_step.elapsed() < self.cfg.window {
+            return false;
+        }
+        self.last_step = Instant::now();
+        let win = metrics.window_stats();
+        let obs = classify(&self.cfg, self.state, &win);
+        let next = apply(&self.cfg, &self.ladder, self.state, obs);
+        let changed = next != self.state;
+        self.state = next;
+        if changed {
+            metrics.record_adjustment();
+            metrics.set_policy_state(true, next.max_batch, next.max_wait());
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LADDER: [usize; 4] = [1, 8, 32, 128];
+
+    fn cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            min_wait: Duration::from_micros(100),
+            max_wait: Duration::from_millis(8),
+            ..AdaptiveConfig::for_target(Duration::from_millis(10))
+        }
+    }
+
+    fn win(requests: u64, p99_ms: f64, mean_batch: f64) -> WindowStats {
+        WindowStats { requests, batches: requests, p50_ms: p99_ms / 2.0, p99_ms, mean_batch }
+    }
+
+    #[test]
+    fn converges_upward_under_sustained_breach() {
+        let c = cfg();
+        let mut s = initial_state(&c, &LADDER);
+        assert_eq!(s.max_batch, 32);
+        // Every window breached: climb the ladder to the top, wait to
+        // the floor, then hold at the clamps forever (no oscillation).
+        for _ in 0..16 {
+            let obs = classify(&c, s, &win(100, 50.0, 30.0));
+            assert_eq!(obs, Observation::Over);
+            s = apply(&c, &LADDER, s, obs);
+            assert!(s.max_batch >= 1 && s.max_batch <= 128, "clamp broken: {s:?}");
+        }
+        assert_eq!(s.max_batch, 128, "sustained breach must reach the ladder top");
+        assert_eq!(s.max_wait_us, 100, "sustained breach must reach the wait floor");
+        let held = apply(&c, &LADDER, s, Observation::Over);
+        assert_eq!(held, s, "at the clamps a further breach must hold, not wrap");
+    }
+
+    #[test]
+    fn converges_downward_with_headroom_and_underfill() {
+        let c = cfg();
+        let mut s = CtrlState { max_batch: 128, max_wait_us: 200 };
+        // Idle-ish traffic: plenty of headroom, batches nowhere near the
+        // cap — the cap decays down the ladder, the wait grows to its
+        // ceiling, and both stop at the clamps.
+        for _ in 0..24 {
+            let obs = classify(&c, s, &win(100, 1.0, 2.0));
+            assert!(matches!(obs, Observation::Under { underfilled: true }), "{obs:?}");
+            s = apply(&c, &LADDER, s, obs);
+        }
+        assert_eq!(s.max_batch, 1, "sustained underfill must decay to the floor");
+        assert_eq!(s.max_wait_us, 8_000, "headroom must grow the wait to its ceiling");
+        // Well-filled headroom keeps the cap: only the wait probes up.
+        let full = CtrlState { max_batch: 32, max_wait_us: 1_000 };
+        let obs = classify(&c, full, &win(100, 1.0, 31.0));
+        assert_eq!(obs, Observation::Under { underfilled: false });
+        assert_eq!(apply(&c, &LADDER, full, obs).max_batch, 32);
+    }
+
+    #[test]
+    fn dead_band_holds_the_operating_point() {
+        let c = cfg();
+        let s = CtrlState { max_batch: 32, max_wait_us: 1_000 };
+        // p99 between headroom·target (7ms) and target (10ms): hold.
+        let obs = classify(&c, s, &win(100, 8.5, 16.0));
+        assert_eq!(obs, Observation::InBand);
+        assert_eq!(apply(&c, &LADDER, s, obs), s);
+    }
+
+    #[test]
+    fn frozen_window_falls_back_to_the_initial_policy() {
+        let c = cfg();
+        let drifted = CtrlState { max_batch: 128, max_wait_us: 100 };
+        let obs = classify(&c, drifted, &win(3, 999.0, 1.0));
+        assert_eq!(obs, Observation::Frozen, "below min_window_samples");
+        assert_eq!(
+            apply(&c, &LADDER, drifted, obs),
+            initial_state(&c, &LADDER),
+            "a frozen window must reset to the configured static-equivalent point"
+        );
+    }
+
+    #[test]
+    fn clamps_survive_degenerate_configs_and_ladders() {
+        // Empty-ish ladder, inverted waits, zero batches: the state must
+        // still be a sane, dispatchable policy.
+        let c = AdaptiveConfig {
+            min_batch: 0,
+            max_batch: 0,
+            min_wait: Duration::from_millis(5),
+            max_wait: Duration::from_millis(1),
+            ..AdaptiveConfig::for_target(Duration::from_millis(1))
+        };
+        let s = initial_state(&c, &[]);
+        assert!(s.max_batch >= 1);
+        assert!(s.max_wait_us >= 1);
+        for obs in [
+            Observation::Over,
+            Observation::Under { underfilled: true },
+            Observation::Under { underfilled: false },
+            Observation::InBand,
+            Observation::Frozen,
+        ] {
+            let n = apply(&c, &[], s, obs);
+            assert!(n.max_batch >= 1, "{obs:?} starved the assembly loop");
+            assert!(n.max_wait_us >= 1, "{obs:?} produced a spin wait");
+        }
+    }
+
+    #[test]
+    fn controller_steps_at_window_cadence_and_publishes_state() {
+        let c = AdaptiveConfig {
+            window: Duration::from_millis(10),
+            min_window_samples: 1,
+            ..cfg()
+        };
+        let metrics = Metrics::with_config(64, c.window, c.window_intervals);
+        let mut ctrl = AdaptiveController::new(c, &LADDER, &metrics);
+        let snap = metrics.snapshot();
+        assert!(snap.policy_adaptive, "adaptive flag must publish at construction");
+        assert_eq!(snap.batch_limit, 32);
+        // Immediately after construction the window hasn't elapsed.
+        assert!(!ctrl.maybe_step(&metrics));
+        // Feed breaching latencies, let a window pass, and step.
+        for _ in 0..32 {
+            metrics.record_latency(Duration::from_millis(50));
+        }
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(ctrl.maybe_step(&metrics), "breached window must adjust");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.batch_limit, 128, "cap must have climbed the ladder");
+        assert_eq!(snap.adjustments, 1);
+        assert!(snap.wait_limit_ms < 2.0, "wait must have halved");
+    }
+}

@@ -22,21 +22,65 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::adaptive::{AdaptiveConfig, AdaptiveController};
 use super::engine::SqnnEngine;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, DEFAULT_WINDOW, DEFAULT_WINDOW_INTERVALS};
 
-/// Batching policy.
+/// Reservoir capacity for lifetime latency/exec samples (mirrors the
+/// metrics default; spelled here so policy-driven metrics construction
+/// doesn't need a second source of truth).
+const LIFETIME_RESERVOIR: usize = 100_000;
+
+/// Batching policy: either the classic fixed size-or-deadline pair, or
+/// the adaptive p99-targeted feedback loop from
+/// [`coordinator::adaptive`](super::adaptive).
 #[derive(Clone, Copy, Debug)]
-pub struct BatchPolicy {
-    /// Max requests per batch (clamped to the engine's largest bucket).
-    pub max_batch: usize,
-    /// How long the first request in a batch may wait for company.
-    pub max_wait: Duration,
+pub enum BatchPolicy {
+    /// Fixed policy: dispatch at `max_batch` requests or `max_wait`
+    /// after the first request, whichever comes first.
+    Static {
+        /// Max requests per batch (clamped to the engine's largest
+        /// bucket).
+        max_batch: usize,
+        /// How long the first request in a batch may wait for company.
+        max_wait: Duration,
+    },
+    /// Feedback-controlled policy: the executor re-samples the
+    /// effective `(max_batch, max_wait)` from an [`AdaptiveController`]
+    /// on every batch-assembly pass.
+    Adaptive(AdaptiveConfig),
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatchPolicy::Static { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl BatchPolicy {
+    /// An adaptive policy steering toward `p99_target` with library
+    /// defaults for everything else.
+    pub fn adaptive(p99_target: Duration) -> Self {
+        BatchPolicy::Adaptive(AdaptiveConfig::for_target(p99_target))
+    }
+
+    /// Whether this policy runs the feedback loop.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, BatchPolicy::Adaptive(_))
+    }
+
+    /// Build the metrics sink matching this policy: adaptive policies
+    /// size the telemetry window to the control cadence so the
+    /// controller always reads a window it fully owns.
+    fn build_metrics(&self) -> Metrics {
+        match self {
+            BatchPolicy::Static { .. } => {
+                Metrics::with_config(LIFETIME_RESERVOIR, DEFAULT_WINDOW, DEFAULT_WINDOW_INTERVALS)
+            }
+            BatchPolicy::Adaptive(cfg) => {
+                Metrics::with_config(LIFETIME_RESERVOIR, cfg.window, cfg.window_intervals)
+            }
+        }
     }
 }
 
@@ -153,7 +197,7 @@ impl Coordinator {
         F: FnOnce() -> Result<SqnnEngine> + Send + 'static,
     {
         let (tx, rx) = sync_channel::<Request>(queue_cap.max(1));
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(policy.build_metrics());
         let running = Arc::new(AtomicBool::new(true));
         let handle =
             CoordinatorHandle { tx, metrics: metrics.clone(), running: running.clone() };
@@ -220,6 +264,13 @@ fn run_batch(engine: &SqnnEngine, batch: Vec<Request>, metrics: &Metrics) {
     }
 }
 
+/// The executor's resolved policy: static pairs are clamped once; the
+/// adaptive variant re-samples its controller every assembly pass.
+enum RunPolicy {
+    Static { max_batch: usize, max_wait: Duration },
+    Adaptive(AdaptiveController),
+}
+
 fn executor_loop(
     engine: SqnnEngine,
     rx: Receiver<Request>,
@@ -227,12 +278,39 @@ fn executor_loop(
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
-    let max_batch = policy.max_batch.min(engine.buckets().last().copied().unwrap_or(1)).max(1);
+    let bucket_top = engine.buckets().last().copied().unwrap_or(1).max(1);
+    let mut run_policy = match policy {
+        BatchPolicy::Static { max_batch, max_wait } => {
+            let max_batch = max_batch.min(bucket_top).max(1);
+            metrics.set_policy_state(false, max_batch, max_wait);
+            RunPolicy::Static { max_batch, max_wait }
+        }
+        BatchPolicy::Adaptive(cfg) => {
+            RunPolicy::Adaptive(AdaptiveController::new(cfg, engine.buckets(), &metrics))
+        }
+    };
     while running.load(Ordering::SeqCst) {
+        // Sample the effective policy for this assembly pass (the
+        // controller only moves between batches, never mid-assembly).
+        let (max_batch, max_wait) = match &run_policy {
+            RunPolicy::Static { max_batch, max_wait } => (*max_batch, *max_wait),
+            RunPolicy::Adaptive(ctrl) => {
+                let (b, w) = ctrl.current();
+                (b.min(bucket_top).max(1), w)
+            }
+        };
         // Block (briefly) for the first request.
         let first = match rx.recv_timeout(Duration::from_millis(20)) {
             Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Timeout) => {
+                // Idle passes still step the controller: a window with
+                // no traffic is a Frozen observation and must be able to
+                // reset the operating point before load returns.
+                if let RunPolicy::Adaptive(ctrl) = &mut run_policy {
+                    ctrl.maybe_step(&metrics);
+                }
+                continue;
+            }
             Err(RecvTimeoutError::Disconnected) => break,
         };
         let mut batch = vec![first];
@@ -244,14 +322,19 @@ fn executor_loop(
                 Err(_) => break,
             }
         }
-        // Then wait (from *now*, not from enqueue) briefly for stragglers.
-        let deadline = Instant::now() + policy.max_wait;
+        // Then wait (from *now*, not from enqueue) briefly for
+        // stragglers. The deadline is fixed once, before the wait loop,
+        // and each pass derives its timeout from a single clock read —
+        // `saturating_duration_since` of that same read — so a laggy
+        // clock read can shorten the straggler wait but can never
+        // extend the deadline past `max_wait`.
+        let deadline = Instant::now() + max_wait;
         while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(remaining) {
                 Ok(r) => batch.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -259,13 +342,17 @@ fn executor_loop(
         }
         metrics.queue_dequeued(batch.len());
         run_batch(&engine, batch, &metrics);
+        if let RunPolicy::Adaptive(ctrl) = &mut run_policy {
+            ctrl.maybe_step(&metrics);
+        }
     }
     // Shutdown drain: every request that made it past admission control
     // still gets an answer — unloading a model must never turn admitted
-    // requests into dropped-channel errors.
+    // requests into dropped-channel errors. Drain at the engine's full
+    // bucket width regardless of policy — latency shaping is moot here.
     loop {
         let mut batch = Vec::new();
-        while batch.len() < max_batch {
+        while batch.len() < bucket_top {
             match rx.try_recv() {
                 Ok(r) => batch.push(r),
                 Err(_) => break,
@@ -360,6 +447,104 @@ mod tests {
         }
         // All replies delivered ⇒ everything was dequeued.
         assert_eq!(c.handle.metrics().snapshot().queue_depth, 0);
+    }
+
+    #[test]
+    fn straggler_deadline_holds_under_a_slow_drip() {
+        // Regression: the straggler wait must be bounded by max_wait
+        // from the *first* request, even when a slow producer keeps
+        // landing one request per recv_timeout pass. A loop that
+        // re-derives its deadline (or lets clock reads push it out)
+        // would keep the batch open as long as the drip continues.
+        let max_wait = Duration::from_millis(80);
+        let c = Coordinator::spawn_with(
+            BatchPolicy::Static { max_batch: 4, max_wait },
+            DEFAULT_QUEUE_CAP,
+            || {
+                let model = synthetic_layer_graph(
+                    0xBA7C,
+                    8,
+                    &[SynthEncrypted { out_dim: 6, ..Default::default() }],
+                    &[],
+                    3,
+                );
+                SqnnEngine::load_native(model, &[4], EngineOptions::default())
+            },
+        )
+        .unwrap();
+        // Drip requests every 30ms from a feeder thread — slower than
+        // batch fill, faster than the 80ms deadline, for ~0.5s.
+        let handle = c.handle.clone();
+        let feeder = std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            for _ in 0..16 {
+                if let Ok(rx) = handle.try_submit(vec![0.1; 8]) {
+                    rxs.push(rx);
+                }
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            rxs
+        });
+        let start = Instant::now();
+        let first = c.handle.infer(vec![0.1; 8]);
+        let waited = start.elapsed();
+        assert!(first.is_ok());
+        // Generous bound: deadline (80ms) + drip period + one batch +
+        // scheduler slack. A deadline that slides with arrivals would
+        // hold the batch open for the full ~500ms drip.
+        assert!(
+            waited < Duration::from_millis(400),
+            "first reply took {waited:?}; straggler deadline did not hold"
+        );
+        for rx in feeder.join().unwrap() {
+            rx.recv().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_serves_and_publishes_controller_state() {
+        // End-to-end smoke: an adaptive coordinator serves correctly and
+        // its snapshot exposes the controller's live operating point.
+        let cfg = AdaptiveConfig {
+            window: Duration::from_millis(40),
+            min_window_samples: 4,
+            ..AdaptiveConfig::for_target(Duration::from_millis(5))
+        };
+        let c = Coordinator::spawn_with(BatchPolicy::Adaptive(cfg), DEFAULT_QUEUE_CAP, || {
+            let model = synthetic_layer_graph(
+                0xBA7C,
+                8,
+                &[SynthEncrypted { out_dim: 6, ..Default::default() }],
+                &[],
+                3,
+            );
+            SqnnEngine::load_native(model, &[1, 2, 4], EngineOptions::default())
+        })
+        .unwrap();
+        for _ in 0..48 {
+            assert_eq!(c.handle.infer(vec![0.25; 8]).unwrap().len(), 3);
+        }
+        let snap = c.handle.metrics().snapshot();
+        assert!(snap.policy_adaptive, "adaptive policy must publish through the snapshot");
+        assert!(snap.batch_limit >= 1 && snap.batch_limit <= 4, "{snap:?}");
+        assert!(snap.window_requests > 0, "windowed telemetry must be live: {snap:?}");
+        let json = snap.to_json();
+        assert!(json.contains("\"policy\":\"adaptive\""), "{json}");
+        c.handle.shutdown();
+    }
+
+    #[test]
+    fn static_policy_publishes_effective_limits() {
+        let c = spawn_toy();
+        // One round-trip guarantees the executor loop (which publishes
+        // the clamped policy) has started before we snapshot.
+        c.handle.infer(vec![0.1; 8]).unwrap();
+        let snap = c.handle.metrics().snapshot();
+        assert!(!snap.policy_adaptive);
+        // Default max_batch 32 clamped to the toy engine's top bucket 4.
+        assert_eq!(snap.batch_limit, 4);
+        assert!((snap.wait_limit_ms - 2.0).abs() < 1e-9);
+        c.handle.shutdown();
     }
 
     #[test]

@@ -1,22 +1,46 @@
 //! Serving metrics: counters, latency sampling, and per-batch execution
 //! time.
 //!
-//! Latency and exec-time distributions are kept in bounded *replacement*
-//! reservoirs (Vitter's algorithm R): once full, each new sample replaces
-//! a uniformly random slot with probability `cap/seen`, so the reservoir
-//! stays a uniform sample of the whole stream. (The previous
-//! implementation stopped sampling at 100k requests, silently freezing
-//! every percentile on the first few minutes of traffic.) Means are exact
-//! — computed from monotonic totals, not the sample.
+//! Two distributions coexist on purpose, with different memories:
+//!
+//! * **Lifetime quantiles** (`latency_p50_ms`/`latency_p99_ms`/
+//!   `exec_p99_ms`): bounded *replacement* reservoirs (Vitter's
+//!   algorithm R) over the whole stream — once full, each new sample
+//!   replaces a uniformly random slot with probability `cap/seen`, so
+//!   the reservoir stays a uniform sample of everything ever served.
+//!   (The previous implementation stopped sampling at 100k requests,
+//!   silently freezing every percentile on the first few minutes of
+//!   traffic.) These answer "how has this deployment behaved", and
+//!   they *never forget* — which is exactly why they cannot drive a
+//!   feedback controller.
+//! * **Windowed quantiles** (`window_p50_ms`/`window_p99_ms`): a ring
+//!   of recent fixed-width interval histograms ([`WindowRing`]) that
+//!   ages out completely every `intervals × interval` seconds. These
+//!   answer "how is it behaving *right now*", and they are what the
+//!   adaptive batching controller
+//!   ([`coordinator::adaptive`](super::adaptive)) steers on.
+//!
+//! Means are exact — computed from monotonic totals, not the sample.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::percentile;
 
-/// Reservoir capacity for latency/exec samples.
+/// Reservoir capacity for lifetime latency/exec samples.
 const RESERVOIR: usize = 100_000;
+
+/// Reservoir capacity per window interval — sized so a full ring is a
+/// few tens of KB per model, not a second copy of the lifetime sample.
+const WINDOW_RESERVOIR: usize = 2_048;
+
+/// Default window interval width (also the adaptive control cadence).
+pub const DEFAULT_WINDOW: Duration = Duration::from_millis(250);
+
+/// Default number of closed intervals retained in the ring.
+pub const DEFAULT_WINDOW_INTERVALS: usize = 8;
 
 /// Bounded uniform sampler over an unbounded stream (algorithm R).
 #[derive(Debug)]
@@ -67,6 +91,123 @@ fn lock_reservoir(m: &Mutex<Reservoir>) -> MutexGuard<'_, Reservoir> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Same poison-recovery stance for the window ring.
+fn lock_window(m: &Mutex<WindowRing>) -> MutexGuard<'_, WindowRing> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One fixed-width telemetry interval.
+#[derive(Debug)]
+struct Interval {
+    lat: Reservoir,
+    requests: u64,
+    batches: u64,
+    batch_items: u64,
+}
+
+impl Interval {
+    fn new() -> Self {
+        Interval { lat: Reservoir::new(WINDOW_RESERVOIR), requests: 0, batches: 0, batch_items: 0 }
+    }
+}
+
+/// Sliding-window statistics over the interval ring — the adaptive
+/// controller's entire view of the world.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowStats {
+    /// Requests completed inside the window.
+    pub requests: u64,
+    /// Batches executed inside the window.
+    pub batches: u64,
+    /// Median end-to-end latency over the window sample, ms.
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency over the window sample, ms.
+    pub p99_ms: f64,
+    /// Mean requests per executed batch inside the window.
+    pub mean_batch: f64,
+}
+
+/// Ring of recent interval histograms: a `current` open interval plus
+/// up to `capacity` closed ones. Time advances lazily — every record or
+/// read first rolls the ring forward to `now`, so an idle model's
+/// window genuinely drains to empty instead of freezing its last busy
+/// interval in place.
+#[derive(Debug)]
+struct WindowRing {
+    interval: Duration,
+    capacity: usize,
+    closed: VecDeque<Interval>,
+    current: Interval,
+    started: Instant,
+}
+
+impl WindowRing {
+    fn new(interval: Duration, capacity: usize) -> Self {
+        WindowRing {
+            interval: if interval.is_zero() { DEFAULT_WINDOW } else { interval },
+            capacity: capacity.max(1),
+            closed: VecDeque::new(),
+            current: Interval::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Close out elapsed intervals so `current` covers `now`. A gap
+    /// longer than the whole window skips the per-interval stepping and
+    /// resets outright — rolling is O(capacity), never O(idle time).
+    fn roll(&mut self, now: Instant) {
+        let span = now.saturating_duration_since(self.started);
+        let full = self.interval.saturating_mul(u32::try_from(self.capacity).unwrap_or(u32::MAX));
+        if span > full.saturating_add(self.interval) {
+            self.closed.clear();
+            self.current = Interval::new();
+            self.started = now;
+            return;
+        }
+        while now.saturating_duration_since(self.started) >= self.interval {
+            let done = std::mem::replace(&mut self.current, Interval::new());
+            self.closed.push_back(done);
+            while self.closed.len() > self.capacity {
+                self.closed.pop_front();
+            }
+            self.started += self.interval;
+        }
+    }
+
+    fn record_latency(&mut self, now: Instant, secs: f64) {
+        self.roll(now);
+        self.current.requests += 1;
+        self.current.lat.record(secs);
+    }
+
+    fn record_batch(&mut self, now: Instant, size: u64) {
+        self.roll(now);
+        self.current.batches += 1;
+        self.current.batch_items += size;
+    }
+
+    fn stats(&mut self, now: Instant) -> WindowStats {
+        self.roll(now);
+        let mut samples: Vec<f64> = Vec::new();
+        let mut requests = 0u64;
+        let mut batches = 0u64;
+        let mut items = 0u64;
+        for iv in self.closed.iter().chain(std::iter::once(&self.current)) {
+            samples.extend_from_slice(&iv.lat.samples);
+            requests += iv.requests;
+            batches += iv.batches;
+            items += iv.batch_items;
+        }
+        WindowStats {
+            requests,
+            batches,
+            p50_ms: percentile(&samples, 0.5) * 1e3,
+            p99_ms: percentile(&samples, 0.99) * 1e3,
+            mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+        }
+    }
+}
+
 /// Thread-safe metrics sink for the coordinator.
 #[derive(Debug)]
 pub struct Metrics {
@@ -87,6 +228,16 @@ pub struct Metrics {
     latencies: Mutex<Reservoir>,
     /// Per-batch engine execution times, seconds.
     exec: Mutex<Reservoir>,
+    /// Sliding window of recent-interval latency histograms.
+    window: Mutex<WindowRing>,
+    /// 1 when an adaptive controller is publishing into this sink.
+    ctrl_adaptive: AtomicU64,
+    /// The effective batch cap the assembly loop is running with.
+    ctrl_max_batch: AtomicU64,
+    /// The effective assembly wait, µs.
+    ctrl_max_wait_us: AtomicU64,
+    /// Controller adjustments applied since startup.
+    ctrl_adjustments: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -113,25 +264,52 @@ pub struct MetricsSnapshot {
     pub mean_batch_size: f64,
     /// Exact mean end-to-end request latency.
     pub latency_mean_ms: f64,
-    /// Median latency over the reservoir sample.
+    /// Median latency over the **lifetime** reservoir sample — a uniform
+    /// sample of every request ever served, not of recent traffic.
     pub latency_p50_ms: f64,
-    /// 99th-percentile latency over the reservoir sample.
+    /// 99th-percentile latency over the **lifetime** reservoir sample.
+    /// Use [`window_p99_ms`](Self::window_p99_ms) for current behavior.
     pub latency_p99_ms: f64,
     /// Exact mean per-batch engine execution time.
     pub exec_mean_ms: f64,
-    /// 99th-percentile per-batch execution time over the reservoir.
+    /// 99th-percentile per-batch execution time over the **lifetime**
+    /// reservoir.
     pub exec_p99_ms: f64,
+    /// Requests completed inside the sliding telemetry window.
+    pub window_requests: u64,
+    /// Median latency over the sliding window only, ms.
+    pub window_p50_ms: f64,
+    /// 99th-percentile latency over the sliding window only, ms — the
+    /// signal the adaptive controller steers on.
+    pub window_p99_ms: f64,
+    /// Whether an adaptive controller is driving this model's policy.
+    pub policy_adaptive: bool,
+    /// The effective batch cap the assembly loop is running with right
+    /// now (static: the configured cap; adaptive: the controller state).
+    pub batch_limit: u64,
+    /// The effective assembly wait right now, ms.
+    pub wait_limit_ms: f64,
+    /// Adaptive controller adjustments applied since startup.
+    pub adjustments: u64,
 }
 
 impl MetricsSnapshot {
     /// Single-line JSON rendering — the wire form of the server's `S`
     /// and framed `M` stats opcodes (hand-rolled; no serde offline).
+    ///
+    /// `p50_ms`/`p99_ms`/`exec_p99_ms` are **lifetime** quantiles; the
+    /// `window_*` keys carry the sliding-window view. The pre-window
+    /// keys keep their exact names and order so existing consumers stay
+    /// byte-compatible — new keys are appended, never inserted.
     pub fn to_json(&self) -> String {
         format!(
             "{{\"requests\":{},\"batches\":{},\"errors\":{},\"shed_total\":{},\
              \"queue_depth\":{},\"mean_batch\":{:.3},\
              \"latency_mean_ms\":{:.3},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
-             \"exec_mean_ms\":{:.3},\"exec_p99_ms\":{:.3}}}",
+             \"exec_mean_ms\":{:.3},\"exec_p99_ms\":{:.3},\
+             \"window_requests\":{},\"window_p50_ms\":{:.3},\"window_p99_ms\":{:.3},\
+             \"policy\":\"{}\",\"batch_limit\":{},\"wait_limit_ms\":{:.3},\
+             \"adjustments\":{}}}",
             self.requests,
             self.batches,
             self.errors,
@@ -142,7 +320,14 @@ impl MetricsSnapshot {
             self.latency_p50_ms,
             self.latency_p99_ms,
             self.exec_mean_ms,
-            self.exec_p99_ms
+            self.exec_p99_ms,
+            self.window_requests,
+            self.window_p50_ms,
+            self.window_p99_ms,
+            if self.policy_adaptive { "adaptive" } else { "static" },
+            self.batch_limit,
+            self.wait_limit_ms,
+            self.adjustments
         )
     }
 }
@@ -154,8 +339,16 @@ impl Metrics {
     }
 
     /// Metrics with an explicit reservoir capacity (tests exercise
-    /// saturation without 100k samples).
+    /// saturation without 100k samples) and the default window shape.
     pub fn with_reservoir_cap(cap: usize) -> Self {
+        Metrics::with_config(cap, DEFAULT_WINDOW, DEFAULT_WINDOW_INTERVALS)
+    }
+
+    /// Metrics with explicit reservoir capacity and telemetry-window
+    /// shape (`intervals` closed intervals of `window` each). The
+    /// adaptive controller builds its model's sink through this so the
+    /// window width matches the control cadence.
+    pub fn with_config(cap: usize, window: Duration, intervals: usize) -> Self {
         Metrics {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -167,6 +360,11 @@ impl Metrics {
             exec_total_ns: AtomicU64::new(0),
             latencies: Mutex::new(Reservoir::new(cap)),
             exec: Mutex::new(Reservoir::new(cap)),
+            window: Mutex::new(WindowRing::new(window, intervals)),
+            ctrl_adaptive: AtomicU64::new(0),
+            ctrl_max_batch: AtomicU64::new(0),
+            ctrl_max_wait_us: AtomicU64::new(0),
+            ctrl_adjustments: AtomicU64::new(0),
         }
     }
 
@@ -176,6 +374,7 @@ impl Metrics {
         self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
         self.exec_total_ns.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
         lock_reservoir(&self.exec).record(exec.as_secs_f64());
+        lock_window(&self.window).record_batch(Instant::now(), size as u64);
     }
 
     /// Record one request's end-to-end latency.
@@ -183,6 +382,26 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_total_ns.fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
         lock_reservoir(&self.latencies).record(latency.as_secs_f64());
+        lock_window(&self.window).record_latency(Instant::now(), latency.as_secs_f64());
+    }
+
+    /// Publish the effective policy state (static config or live
+    /// adaptive operating point) for snapshots and the stats opcodes.
+    pub fn set_policy_state(&self, adaptive: bool, max_batch: usize, max_wait: Duration) {
+        self.ctrl_adaptive.store(u64::from(adaptive), Ordering::Relaxed);
+        self.ctrl_max_batch.store(max_batch as u64, Ordering::Relaxed);
+        self.ctrl_max_wait_us
+            .store(u64::try_from(max_wait.as_micros()).unwrap_or(u64::MAX), Ordering::Relaxed);
+    }
+
+    /// Count one adaptive-controller adjustment.
+    pub fn record_adjustment(&self) {
+        self.ctrl_adjustments.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sliding-window statistics (rolls the ring to now first).
+    pub fn window_stats(&self) -> WindowStats {
+        lock_window(&self.window).stats(Instant::now())
     }
 
     /// Count one error.
@@ -207,6 +426,7 @@ impl Metrics {
 
     /// Consistent point-in-time view of every counter and distribution.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let win = self.window_stats();
         let lat = lock_reservoir(&self.latencies);
         let exec = lock_reservoir(&self.exec);
         let requests = self.requests.load(Ordering::Relaxed);
@@ -234,6 +454,13 @@ impl Metrics {
             latency_p99_ms: percentile(&lat.samples, 0.99) * 1e3,
             exec_mean_ms: mean_ms(self.exec_total_ns.load(Ordering::Relaxed), batches),
             exec_p99_ms: percentile(&exec.samples, 0.99) * 1e3,
+            window_requests: win.requests,
+            window_p50_ms: win.p50_ms,
+            window_p99_ms: win.p99_ms,
+            policy_adaptive: self.ctrl_adaptive.load(Ordering::Relaxed) != 0,
+            batch_limit: self.ctrl_max_batch.load(Ordering::Relaxed),
+            wait_limit_ms: self.ctrl_max_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
+            adjustments: self.ctrl_adjustments.load(Ordering::Relaxed),
         }
     }
 }
@@ -306,10 +533,84 @@ mod tests {
             "\"p99_ms\"",
             "\"exec_mean_ms\"",
             "\"exec_p99_ms\"",
+            "\"window_requests\"",
+            "\"window_p50_ms\"",
+            "\"window_p99_ms\"",
+            "\"policy\"",
+            "\"batch_limit\"",
+            "\"wait_limit_ms\"",
+            "\"adjustments\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
         assert!(json.starts_with('{') && json.ends_with('}'));
+        // The legacy key prefix is byte-stable: window keys append after
+        // exec_p99_ms, never in the middle of the old layout.
+        let legacy_end = json.find("\"window_requests\"").unwrap();
+        let prefix = &json[..legacy_end];
+        for (earlier, later) in [
+            ("\"requests\"", "\"batches\""),
+            ("\"p50_ms\"", "\"p99_ms\""),
+            ("\"p99_ms\"", "\"exec_mean_ms\""),
+        ] {
+            assert!(prefix.find(earlier).unwrap() < prefix.find(later).unwrap());
+        }
+    }
+
+    #[test]
+    fn window_quantiles_forget_but_lifetime_quantiles_do_not() {
+        // 40ms intervals × 4 ⇒ the whole window ages out in ~200ms.
+        let m = Metrics::with_config(1024, Duration::from_millis(40), 4);
+        for _ in 0..64 {
+            m.record_latency(Duration::from_millis(50));
+        }
+        let s = m.snapshot();
+        assert!(s.window_p99_ms > 40.0, "fresh samples must be in the window: {s:?}");
+        assert_eq!(s.window_requests, 64);
+        // Sleep past the full window plus slack: the windowed view must
+        // drain to empty while the lifetime reservoir keeps its history.
+        std::thread::sleep(Duration::from_millis(300));
+        let s = m.snapshot();
+        assert_eq!(s.window_requests, 0, "window must forget: {s:?}");
+        assert_eq!(s.window_p99_ms, 0.0);
+        assert!(s.latency_p99_ms > 40.0, "lifetime must not forget: {s:?}");
+        assert_eq!(s.requests, 64);
+    }
+
+    #[test]
+    fn window_rolls_per_interval_and_bounds_memory() {
+        let m = Metrics::with_config(1024, Duration::from_millis(30), 3);
+        // Three generations of samples, one interval apart: the oldest
+        // falls off the ring once capacity+current intervals pass it.
+        for gen in 0..3u64 {
+            for _ in 0..8 {
+                m.record_latency(Duration::from_millis(5 + gen * 10));
+            }
+            std::thread::sleep(Duration::from_millis(35));
+        }
+        let w = m.window_stats();
+        assert!(w.requests >= 16 && w.requests <= 24, "ring should hold recent generations: {w:?}");
+        let ring = lock_window(&m.window);
+        assert!(ring.closed.len() <= 3, "ring capacity exceeded: {}", ring.closed.len());
+    }
+
+    #[test]
+    fn policy_state_publishes_through_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert!(!s.policy_adaptive);
+        assert_eq!(s.batch_limit, 0);
+        m.set_policy_state(true, 128, Duration::from_micros(750));
+        m.record_adjustment();
+        m.record_adjustment();
+        let s = m.snapshot();
+        assert!(s.policy_adaptive);
+        assert_eq!(s.batch_limit, 128);
+        assert!((s.wait_limit_ms - 0.75).abs() < 1e-9);
+        assert_eq!(s.adjustments, 2);
+        let json = s.to_json();
+        assert!(json.contains("\"policy\":\"adaptive\""), "{json}");
+        assert!(json.contains("\"batch_limit\":128"), "{json}");
     }
 
     #[test]

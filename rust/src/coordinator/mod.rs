@@ -5,17 +5,21 @@
 //! * [`engine`] — compressed model + AOT executables, batch execution;
 //! * [`batcher`] — dynamic batching over a dedicated executor thread,
 //!   with a bounded pending queue (admission control);
+//! * [`adaptive`] — per-model AIMD feedback loop steering the batcher's
+//!   effective `max_batch`/`max_wait` toward a windowed-p99 target;
 //! * [`registry`] — named models, hot load/unload, LRU bound over
 //!   loaded engines;
-//! * [`metrics`] — counters, shed/queue-depth gauges, latency
-//!   percentiles.
+//! * [`metrics`] — counters, shed/queue-depth gauges, lifetime latency
+//!   percentiles plus a sliding window of recent-interval histograms.
 
+pub mod adaptive;
 pub mod batcher;
 pub mod compressor;
 pub mod engine;
 pub mod metrics;
 pub mod registry;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveController};
 pub use batcher::{
     BatchPolicy, Coordinator, CoordinatorHandle, ReplyReceiver, SubmitError, DEFAULT_QUEUE_CAP,
 };
@@ -24,7 +28,7 @@ pub use compressor::{compress_bundle, compress_bundle_with, read_bundle_meta, Bu
 pub use engine::{
     build_static_inputs, DecodeMode, EngineOptions, GraphVariant, SqnnEngine, StaticInputs,
 };
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, WindowStats};
 
 // The engine's kernel knob rides along with the other engine options.
 pub use crate::kernels::KernelChoice;

@@ -47,7 +47,9 @@ pub struct RegistryConfig {
     pub max_loaded: usize,
     /// Per-model pending-queue bound (admission control; `E busy` past it).
     pub queue_cap: usize,
-    /// Per-model adaptive batching policy.
+    /// Default batching policy (static or adaptive) for every model the
+    /// registry loads; [`ModelRegistry::register_with_policy`] overrides
+    /// it per model.
     pub policy: BatchPolicy,
     /// Engine options for models loaded from a path or in-memory model.
     pub engine: EngineOptions,
@@ -179,8 +181,19 @@ struct ModelEntry {
     pinned: bool,
 }
 
+/// Everything the registry knows about a registered (not necessarily
+/// loaded) model: its engine source, sniffed on-disk facts, and an
+/// optional per-model batching-policy override (`None` = the registry
+/// default — the `--batch-p99-target-ms` / `:p99=` plumbing).
+#[derive(Clone)]
+struct RegisteredSource {
+    source: ModelSource,
+    info: SourceInfo,
+    policy: Option<BatchPolicy>,
+}
+
 struct Inner {
-    sources: HashMap<String, (ModelSource, SourceInfo)>,
+    sources: HashMap<String, RegisteredSource>,
     entries: HashMap<String, Arc<ModelEntry>>,
     /// Non-pinned loaded names, least-recently-used first.
     lru: Vec<String>,
@@ -273,6 +286,20 @@ impl ModelRegistry {
     /// until its next reload). The first registered name becomes the
     /// default model.
     pub fn register(&self, name: &str, source: ModelSource) -> Result<()> {
+        self.register_with_policy(name, source, None)
+    }
+
+    /// [`ModelRegistry::register`] with a per-model batching-policy
+    /// override (`None` = the registry-wide default policy). This is
+    /// how `--models a=a.sqnn:p99=5` gives each model its own adaptive
+    /// p99 target: the override is applied on every (re)load, including
+    /// reloads after LRU eviction.
+    pub fn register_with_policy(
+        &self,
+        name: &str,
+        source: ModelSource,
+        policy: Option<BatchPolicy>,
+    ) -> Result<()> {
         if name.is_empty() || name.len() > 255 {
             anyhow::bail!("model name must be 1..=255 bytes, got {}", name.len());
         }
@@ -280,7 +307,7 @@ impl ModelRegistry {
         // lock is on every serving path.
         let info = sniff_source_info(&source);
         let mut inner = self.lock_unpoisoned();
-        inner.sources.insert(name.to_string(), (source, info));
+        inner.sources.insert(name.to_string(), RegisteredSource { source, info, policy });
         if inner.default_name.is_none() {
             inner.default_name = Some(name.to_string());
         }
@@ -290,6 +317,16 @@ impl ModelRegistry {
     /// Register a `.sqnn` container path.
     pub fn register_path(&self, name: &str, path: impl Into<PathBuf>) -> Result<()> {
         self.register(name, ModelSource::Path(path.into()))
+    }
+
+    /// Register a `.sqnn` container path with a per-model policy.
+    pub fn register_path_with_policy(
+        &self,
+        name: &str,
+        path: impl Into<PathBuf>,
+        policy: Option<BatchPolicy>,
+    ) -> Result<()> {
+        self.register_with_policy(name, ModelSource::Path(path.into()), policy)
     }
 
     /// Register an in-memory model.
@@ -443,7 +480,7 @@ impl ModelRegistry {
             .map(|name| {
                 let entry = inner.entries.get(&name);
                 let info =
-                    inner.sources.get(&name).map(|(_, i)| *i).unwrap_or_default();
+                    inner.sources.get(&name).map(|s| s.info).unwrap_or_default();
                 ModelStatus {
                     loaded: entry.is_some(),
                     default: inner.default_name.as_deref() == Some(name.as_str()),
@@ -517,7 +554,7 @@ impl ModelRegistry {
         // the lock may be reacquired by the time anyone re-checks; fetch
         // defensively and release the slot on the (unreachable) miss so
         // waiters are never stranded on the condvar.
-        let Some((source, _)) = inner.sources.get(&name).cloned() else {
+        let Some(registered) = inner.sources.get(&name).cloned() else {
             inner.loading.remove(&name);
             drop(inner);
             self.loaded_cv.notify_all();
@@ -527,7 +564,8 @@ impl ModelRegistry {
 
         // The engine build happens without the lock — loading one model
         // must not stall serving on every other model.
-        let built = self.spawn_stack(&name, source);
+        let built =
+            self.spawn_stack(&name, registered.source, registered.policy);
 
         // Reacquire with unconditional poison recovery: the `loading`
         // marker MUST come out and the condvar MUST be notified, or every
@@ -563,8 +601,13 @@ impl ModelRegistry {
     }
 
     /// Spawn the per-model serving stack (executor thread + engine).
-    fn spawn_stack(&self, name: &str, source: ModelSource) -> Result<Coordinator> {
-        let policy = self.cfg.policy;
+    fn spawn_stack(
+        &self,
+        name: &str,
+        source: ModelSource,
+        policy_override: Option<BatchPolicy>,
+    ) -> Result<Coordinator> {
+        let policy = policy_override.unwrap_or(self.cfg.policy);
         let cap = self.cfg.queue_cap;
         let opts = self.cfg.engine;
         let buckets = self.cfg.buckets.clone();

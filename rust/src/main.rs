@@ -20,8 +20,9 @@ use sqnn_xor::compress::{
     LayerSpec,
 };
 use sqnn_xor::coordinator::{
-    compress_bundle, compress_bundle_with, read_bundle_meta, BatchPolicy, Coordinator,
-    DecodeMode, EngineOptions, KernelChoice, ModelRegistry, RegistryConfig, SqnnEngine,
+    compress_bundle, compress_bundle_with, read_bundle_meta, AdaptiveConfig, BatchPolicy,
+    Coordinator, DecodeMode, EngineOptions, KernelChoice, ModelRegistry, RegistryConfig,
+    SqnnEngine,
 };
 use sqnn_xor::io::npy::read_npy;
 use sqnn_xor::io::sqnn_file::{container_version, EntropyMode, Layer, SqnnModel};
@@ -57,8 +58,61 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     m
 }
 
+/// Non-flag tokens, in order, skipping every `--key value` pair the
+/// same way [`parse_flags`] consumes them — the positional counterpart
+/// for subcommands like `recode <in> <out>`.
+fn positionals(args: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i].starts_with("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else {
+            out.push(args[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
 fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
     flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+/// Parse a `--batch-p99-target-ms`-style value into an adaptive policy
+/// seeded at the static operating point it replaces (so the controller
+/// starts from exactly where static serving would have run).
+fn adaptive_policy(
+    target_ms: &str,
+    max_batch: usize,
+    max_wait: std::time::Duration,
+) -> Result<BatchPolicy> {
+    let ms: f64 = target_ms.parse().context("bad --batch-p99-target-ms")?;
+    if !ms.is_finite() || ms <= 0.0 {
+        bail!("--batch-p99-target-ms must be a positive number of milliseconds, got '{target_ms}'");
+    }
+    Ok(BatchPolicy::Adaptive(
+        AdaptiveConfig::for_target(std::time::Duration::from_secs_f64(ms / 1e3))
+            .with_initial(max_batch, max_wait),
+    ))
+}
+
+/// The serve-mode batching policy: static size-or-deadline unless a
+/// `--batch-p99-target-ms` was given, in which case the adaptive
+/// controller steers toward it.
+fn batch_policy(
+    flags: &HashMap<String, String>,
+    max_batch: usize,
+    max_wait: std::time::Duration,
+) -> Result<BatchPolicy> {
+    match flags.get("batch-p99-target-ms") {
+        Some(ms) => adaptive_policy(ms, max_batch, max_wait),
+        None => Ok(BatchPolicy::Static { max_batch, max_wait }),
+    }
 }
 
 fn engine_options(flags: &HashMap<String, String>) -> Result<EngineOptions> {
@@ -88,6 +142,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&flags),
         "stats" => cmd_stats(&flags),
         "models" => cmd_models(&flags),
+        "recode" => cmd_recode(&flags, &positionals(&argv[argv.len().min(1)..])),
         "demo" => cmd_demo(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -126,7 +181,9 @@ fn print_help() {
            serve     TCP inference server, two modes:\n\
                        --artifacts DIR --model M.sqnn   single model (pinned default)\n\
                        --models a=a.sqnn,b=b.sqnn       multi-model registry with hot\n\
-                                                        load/unload (L/U/P opcodes)\n\
+                                                        load/unload (L/U/P opcodes);\n\
+                                                        a=a.sqnn:p99=5 gives one model\n\
+                                                        its own adaptive p99 target\n\
                      registry knobs (multi-model mode):\n\
                        --max-loaded N (4)   LRU bound on loaded engines\n\
                        --queue-cap N (1024) per-model pending queue (sheds E busy)\n\
@@ -134,8 +191,19 @@ fn print_help() {
                      tier shape (both modes):\n\
                        --port 7433  --acceptors N (2)  --workers N (0 = auto)\n\
                        --max-conns N (1024)  --max-wait-ms MS (2)\n\
-           stats     --addr HOST:PORT                   metrics snapshot from a running server\n\
+                     batching (both modes; static size-or-deadline by default):\n\
+                       --batch-p99-target-ms MS         adaptive batching: tune the\n\
+                                                        effective max-batch/max-wait\n\
+                                                        toward a windowed p99 target\n\
+           stats     --addr HOST:PORT [--model NAME]    metrics snapshot from a running\n\
+                                                        server (N opcode for named models;\n\
+                                                        includes window_p50/p99 + the live\n\
+                                                        batching-policy state)\n\
            models    --addr HOST:PORT                   per-model status + metrics (JSON)\n\
+           recode    <in.sqnn> <out.sqnn> [--entropy on|off|auto (on)]\n\
+                                                        losslessly migrate a v1/v2 archive\n\
+                                                        to the entropy-coded v3 container\n\
+                                                        (prints before/after bytes)\n\
            demo      --artifacts DIR                    compress + serve a demo batch\n\
          \n\
          decode knobs (verify/serve/demo):\n\
@@ -311,6 +379,55 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `sqnn recode <in> <out> [--entropy on|off|auto]` — re-serialize an
+/// archived v1/v2/v3 container into the requested format (default: the
+/// entropy-coded v3), verifying losslessness before reporting sizes.
+/// This is the ROADMAP migration path for v2 fleets: the model payload
+/// is decoded and re-encoded bit-exactly, only the container framing
+/// changes.
+fn cmd_recode(flags: &HashMap<String, String>, pos: &[String]) -> Result<()> {
+    let (input, output) = match pos {
+        [i, o] => (i.as_str(), o.as_str()),
+        _ => bail!(
+            "usage: sqnn recode <in.sqnn> <out.sqnn> [--entropy on|off|auto] (got {} positional \
+             arguments)",
+            pos.len()
+        ),
+    };
+    // Default to `on`: recode exists to migrate archives forward to the
+    // entropy-coded v3 (`auto` would silently keep raw v2 for tiny
+    // models where coding overhead wins).
+    let entropy: EntropyMode = flag(flags, "entropy", "on").parse()?;
+    let in_bytes = std::fs::read(input).with_context(|| format!("read {input}"))?;
+    let in_version = container_version(&in_bytes)
+        .with_context(|| format!("{input} is not a .sqnn container"))?;
+    let model = SqnnModel::from_bytes(&in_bytes)
+        .with_context(|| format!("parse {input} (container v{in_version})"))?;
+    let out_bytes = model.to_bytes_with(entropy);
+    // Lossless gate before anything lands on disk: the rewritten
+    // container must parse back to the same model (canonical v2
+    // serialization compared byte-for-byte).
+    let reparsed = SqnnModel::from_bytes(&out_bytes)
+        .context("recoded container failed to parse back")?;
+    if reparsed.to_bytes() != model.to_bytes() {
+        bail!("recode is not lossless for {input}; refusing to write {output}");
+    }
+    std::fs::write(output, &out_bytes).with_context(|| format!("write {output}"))?;
+    let out_version = container_version(&out_bytes).unwrap_or(0);
+    let pct = if in_bytes.is_empty() {
+        0.0
+    } else {
+        100.0 * (out_bytes.len() as f64 / in_bytes.len() as f64 - 1.0)
+    };
+    println!(
+        "recoded {input} (v{in_version}, {} B) -> {output} (v{out_version}, {} B): {pct:+.1}% \
+         bytes, lossless",
+        in_bytes.len(),
+        out_bytes.len(),
+    );
+    Ok(())
+}
+
 fn load_eval_set(artifacts: &str) -> Result<(Vec<Vec<f32>>, Vec<i32>)> {
     let x = read_npy(format!("{artifacts}/weights/x_test.npy"))?;
     let y = read_npy(format!("{artifacts}/weights/y_test.npy"))?;
@@ -377,7 +494,11 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
     let default_addr = format!("127.0.0.1:{}", flag(flags, "port", "7433"));
     let addr = flags.get("addr").cloned().unwrap_or(default_addr);
     let mut client = Client::connect(&addr)?;
-    println!("{}", client.stats()?);
+    let json = match flags.get("model") {
+        Some(name) => client.stats_named(name)?,
+        None => client.stats()?,
+    };
+    println!("{json}");
     Ok(())
 }
 
@@ -407,21 +528,33 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             .map(|s| s.trim().parse::<usize>())
             .collect::<std::result::Result<_, _>>()
             .context("bad --buckets (expected e.g. 1,8,32)")?;
+        let max_batch = buckets.iter().copied().max().unwrap_or(32);
         let registry = ModelRegistry::new(RegistryConfig {
             max_loaded: flag(flags, "max-loaded", "4").parse().context("bad --max-loaded")?,
             queue_cap: flag(flags, "queue-cap", "1024").parse().context("bad --queue-cap")?,
-            policy: BatchPolicy {
-                max_batch: buckets.iter().copied().max().unwrap_or(32),
-                max_wait,
-            },
+            policy: batch_policy(flags, max_batch, max_wait)?,
             engine: opts,
             buckets,
         });
         for spec in models.split(',') {
-            let (name, path) = spec
+            let (name, rest) = spec
                 .split_once('=')
-                .with_context(|| format!("bad --models entry '{spec}' (expected name=path)"))?;
-            registry.register_path(name.trim(), path.trim())?;
+                .with_context(|| {
+                    format!("bad --models entry '{spec}' (expected name=path[:p99=MS])")
+                })?;
+            // An optional `:p99=MS` suffix gives this model its own
+            // adaptive p99 target, overriding the registry-wide policy
+            // (rsplit so a path containing ':' still parses).
+            let (path, policy) = match rest.rsplit_once(":p99=") {
+                Some((path, ms)) => (
+                    path,
+                    Some(adaptive_policy(ms.trim(), max_batch, max_wait).with_context(
+                        || format!("bad p99 target in --models entry '{spec}'"),
+                    )?),
+                ),
+                None => (rest, None),
+            };
+            registry.register_path_with_policy(name.trim(), path.trim(), policy)?;
         }
         if let Some(name) = flags.get("default-model") {
             registry.set_default(name)?;
@@ -446,10 +579,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let artifacts = flag(flags, "artifacts", "artifacts").to_string();
         let model_path = flag(flags, "model", "model.sqnn").to_string();
         let meta = read_bundle_meta(&artifacts)?;
-        let policy = BatchPolicy {
-            max_batch: meta.batch_sizes.iter().copied().max().unwrap_or(32),
+        let policy = batch_policy(
+            flags,
+            meta.batch_sizes.iter().copied().max().unwrap_or(32),
             max_wait,
-        };
+        )?;
         let batch_sizes = meta.batch_sizes.clone();
         let coordinator = Coordinator::spawn(policy, move || {
             let runtime = Runtime::cpu()?;

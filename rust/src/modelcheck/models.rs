@@ -614,3 +614,126 @@ impl Model for BatcherDrainModel {
         !s.engine_alive && s.submits_left == 0 && s.in_flight == 0
     }
 }
+
+// ---------------------------------------------------------------------
+// Adaptive batching controller: clamp containment under any telemetry.
+// ---------------------------------------------------------------------
+
+use crate::coordinator::adaptive::{apply, initial_state, AdaptiveConfig, CtrlState, Observation};
+
+/// `coordinator/adaptive.rs` control law under *adversarial* telemetry:
+/// from the initial operating point, every sequence of window
+/// observations (breach, headroom with/without underfill, in-band,
+/// frozen) is explored through the **real** [`apply`] function — the
+/// model does not reimplement the law, it drives the production code.
+///
+/// Properties proved over every reachable state:
+///
+/// * **Clamp containment** — the effective batch cap is always a bucket
+///   -ladder value inside the configured floor/ceiling (never 0: the
+///   assembly loop cannot be starved), and the effective wait always
+///   sits inside `[min_wait, max_wait]` (never unbounded: the assembly
+///   loop cannot be stalled past the ceiling).
+/// * **No control deadlock** — every state has an outgoing transition
+///   for every observation, so whatever the window reports next, the
+///   controller takes a defined step (the explorer's deadlock detection
+///   would flag any state with no successors).
+///
+/// Termination of the exploration itself is the finite-state argument:
+/// the wait is an integer µs pinned into the clamp interval and the
+/// batch is one of finitely many ladder values, so the reachable space
+/// is finite and the visited set closes it.
+pub struct AdaptiveControllerModel {
+    /// The controller config under test (integer-µs clamps keep the
+    /// state space finite).
+    pub cfg: AdaptiveConfig,
+    /// The engine bucket ladder the law snaps to.
+    pub ladder: Vec<usize>,
+}
+
+impl AdaptiveControllerModel {
+    /// A representative config: 4-step ladder, 100–1600 µs wait clamps
+    /// around an 800 µs start — small enough to close in the default
+    /// test run, rich enough to exercise every clamp edge.
+    pub fn default_config() -> Self {
+        use std::time::Duration;
+        AdaptiveControllerModel {
+            cfg: AdaptiveConfig {
+                min_wait: Duration::from_micros(100),
+                max_wait: Duration::from_micros(1600),
+                initial_wait: Duration::from_micros(800),
+                initial_batch: 8,
+                ..AdaptiveConfig::for_target(Duration::from_millis(5))
+            },
+            ladder: vec![1, 8, 32, 128],
+        }
+    }
+
+    fn wait_bounds_us(&self) -> (u64, u64) {
+        let lo = u64::try_from(self.cfg.min_wait.as_micros()).unwrap_or(u64::MAX).max(1);
+        let hi = u64::try_from(self.cfg.max_wait.as_micros()).unwrap_or(u64::MAX).max(lo);
+        (lo, hi)
+    }
+}
+
+impl Model for AdaptiveControllerModel {
+    type State = CtrlState;
+
+    fn initial(&self) -> CtrlState {
+        initial_state(&self.cfg, &self.ladder)
+    }
+
+    fn transitions(&self, s: &CtrlState) -> Vec<(String, CtrlState)> {
+        // The telemetry window is adversarial: at every state, every
+        // observation is possible. Each transition is one control step
+        // of the real `apply`.
+        [
+            ("window p99 over target", Observation::Over),
+            ("headroom, batches underfilled", Observation::Under { underfilled: true }),
+            ("headroom, batches full", Observation::Under { underfilled: false }),
+            ("p99 in the dead band", Observation::InBand),
+            ("window frozen (too few samples)", Observation::Frozen),
+        ]
+        .into_iter()
+        .map(|(label, obs)| (label.to_string(), apply(&self.cfg, &self.ladder, *s, obs)))
+        .collect()
+    }
+
+    fn invariant(&self, s: &CtrlState) -> Result<(), String> {
+        let (wlo, whi) = self.wait_bounds_us();
+        if s.max_batch == 0 {
+            return Err("controller starved the assembly loop (max_batch = 0)".to_string());
+        }
+        if !self.ladder.contains(&s.max_batch) {
+            return Err(format!(
+                "max_batch {} escaped the bucket ladder {:?}",
+                s.max_batch, self.ladder
+            ));
+        }
+        let blo = self.cfg.min_batch.max(1);
+        let bhi = self.cfg.max_batch.max(1);
+        // The clamps are ladder-snapped (largest bucket <= bound), so
+        // containment is against the snapped interval.
+        let snapped_hi =
+            self.ladder.iter().copied().filter(|&b| b <= bhi).max().unwrap_or(bhi);
+        if s.max_batch > snapped_hi {
+            return Err(format!("max_batch {} above the snapped ceiling {snapped_hi}", s.max_batch));
+        }
+        if s.max_batch < blo && self.ladder.iter().any(|&b| b >= blo && b <= snapped_hi) {
+            return Err(format!("max_batch {} below the floor {blo}", s.max_batch));
+        }
+        if s.max_wait_us < wlo || s.max_wait_us > whi {
+            return Err(format!(
+                "max_wait {}us escaped the clamp interval [{wlo}, {whi}]us",
+                s.max_wait_us
+            ));
+        }
+        Ok(())
+    }
+
+    fn is_terminal(&self, _s: &CtrlState) -> bool {
+        // The controller runs forever; exploration closes because the
+        // reachable space is finite, not because states are terminal.
+        false
+    }
+}

@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 
 use super::protocol::{
     le_f32, MAX_INFER_FLOATS, NAMED_INFER_FLAG, OP_ACK, OP_ERR, OP_INFER, OP_LIST, OP_LOAD,
-    OP_LOGITS, OP_QUIT, OP_STATS, OP_STATS_LEGACY, OP_UNLOAD,
+    OP_LOGITS, OP_QUIT, OP_STATS, OP_STATS_LEGACY, OP_STATS_NAMED, OP_UNLOAD,
 };
 
 /// Blocking framed-protocol client.
@@ -139,6 +139,27 @@ impl Client {
     /// Returns the snapshot JSON line (`sqnn stats` prints it verbatim).
     pub fn stats(&mut self) -> Result<String> {
         self.stream.write_all(&[OP_STATS])?;
+        self.read_stats_reply()
+    }
+
+    /// Framed metrics snapshot for a *named* model (`N` opcode: u16 name
+    /// length + name). The reply reuses the `M` framing; unknown or
+    /// unloaded models answer `E`. This is `sqnn stats --model NAME`.
+    pub fn stats_named(&mut self, name: &str) -> Result<String> {
+        anyhow::ensure!(
+            !name.is_empty() && name.len() <= 255,
+            "model name must be 1..=255 bytes"
+        );
+        let name_len = u16::try_from(name.len()).context("model name length")?;
+        let mut msg = Vec::with_capacity(3 + name.len());
+        msg.push(OP_STATS_NAMED);
+        msg.extend_from_slice(&name_len.to_le_bytes());
+        msg.extend_from_slice(name.as_bytes());
+        self.stream.write_all(&msg)?;
+        self.read_stats_reply()
+    }
+
+    fn read_stats_reply(&mut self) -> Result<String> {
         let (op, raw) = self.read_framed()?;
         match op {
             OP_STATS => Ok(String::from_utf8_lossy(&raw).into_owned()),

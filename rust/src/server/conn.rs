@@ -33,7 +33,7 @@ use crate::coordinator::batcher::ReplyReceiver;
 use crate::coordinator::registry::ModelRegistry;
 use crate::server::protocol::{
     le_f32, le_u16, le_u32, MAX_INFER_FLOATS, NAMED_INFER_FLAG, OP_ACK, OP_ERR, OP_INFER, OP_LIST,
-    OP_LOAD, OP_LOGITS, OP_QUIT, OP_STATS, OP_STATS_LEGACY, OP_UNLOAD,
+    OP_LOAD, OP_LOGITS, OP_QUIT, OP_STATS, OP_STATS_LEGACY, OP_STATS_NAMED, OP_UNLOAD,
 };
 
 /// How long a started frame (or an unflushed reply) may sit with no
@@ -278,7 +278,9 @@ impl Conn {
                         push_framed(&mut self.wbuf, OP_LIST, registry.list_json().as_bytes())
                     }
                     OP_QUIT => self.close_after_flush = true,
-                    op @ (OP_LOAD | OP_UNLOAD) => self.enter(Stage::CtlNameLen { op }, 2),
+                    op @ (OP_LOAD | OP_UNLOAD | OP_STATS_NAMED) => {
+                        self.enter(Stage::CtlNameLen { op }, 2)
+                    }
                     other => {
                         push_framed(
                             &mut self.wbuf,
@@ -355,6 +357,20 @@ impl Conn {
             }
             Stage::CtlName { op } => match String::from_utf8(data) {
                 Ok(name) => {
+                    if op == OP_STATS_NAMED {
+                        // Named stats answer with the same framing as bare
+                        // `M` — per-model metrics without routing through
+                        // the default model, and without touching the LRU.
+                        match registry.snapshot(Some(&name)) {
+                            Ok(s) => {
+                                push_framed(&mut self.wbuf, OP_STATS, s.to_json().as_bytes())
+                            }
+                            Err(e) => {
+                                push_framed(&mut self.wbuf, OP_ERR, e.to_string().as_bytes())
+                            }
+                        }
+                        return;
+                    }
                     let res = if op == OP_LOAD {
                         registry.load(&name).map(|()| format!("loaded '{name}'"))
                     } else {

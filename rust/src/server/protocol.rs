@@ -26,6 +26,11 @@ pub(crate) const OP_UNLOAD: u8 = b'U';
 pub(crate) const OP_LIST: u8 = b'P';
 /// Framed metrics snapshot; the reply reuses the same opcode byte.
 pub(crate) const OP_STATS: u8 = b'M';
+/// Framed metrics snapshot for a *named* model: `u16` name length +
+/// name bytes, answered with an [`OP_STATS`]-framed JSON body (or
+/// [`OP_ERR`] for unknown/unloaded models). Bare [`OP_STATS`] keeps
+/// meaning the default model.
+pub(crate) const OP_STATS_NAMED: u8 = b'N';
 /// Legacy stats: the reply is bare `u32` length + JSON, no opcode byte.
 pub(crate) const OP_STATS_LEGACY: u8 = b'S';
 /// Close the connection after flushing queued replies.
@@ -83,6 +88,7 @@ mod tests {
             OP_UNLOAD,
             OP_LIST,
             OP_STATS,
+            OP_STATS_NAMED,
             OP_STATS_LEGACY,
             OP_QUIT,
             OP_LOGITS,

@@ -200,6 +200,85 @@ fn compressed_container_roundtrips_and_reports_consistently() {
     assert!(rendered.contains("fc1") && rendered.contains("TOTAL"), "{rendered}");
 }
 
+/// The `sqnn recode` migration path as a property: for a v2 image on
+/// disk, parse → re-encode under every `--entropy` mode → reload must
+/// (a) pass the command's lossless gate (the reloaded model's canonical
+/// v2 image equals the original's), and (b) serve bit-identically to
+/// the original across all five kernels and both decode modes. Recode
+/// is packaging, never semantics.
+#[test]
+fn recode_v2_serves_bit_identically_across_kernels() {
+    let dense = synthetic_dense_graph(0x2EC, 40, &[32, 20], 5);
+    let spec = CompressSpec {
+        default: LayerSpec { sparsity: 0.85, n_in: 10, n_out: 30, ..Default::default() },
+        ..Default::default()
+    };
+    let (compressed, _) =
+        compress_model(&dense, &spec, &CompressOptions { encode_threads: 2, verify: true })
+            .unwrap();
+
+    let dir = std::env::temp_dir();
+    let src = dir.join(format!("sqnn-recode-src-{}.sqnn", std::process::id()));
+    compressed.save_with(&src, EntropyMode::Off).unwrap();
+    let src_bytes = std::fs::read(&src).unwrap();
+    assert_eq!(sqnn_xor::io::sqnn_file::container_version(&src_bytes), Some(2));
+
+    let xs = inputs(6, 40, 55);
+    let original = SqnnModel::load(&src).unwrap();
+    for (mode, expect_version) in [
+        (EntropyMode::On, Some(3)),
+        (EntropyMode::Off, Some(2)),
+        (EntropyMode::Auto, None), // picks the smaller image; version varies
+    ] {
+        // The exact pipeline `sqnn recode` runs: read, parse, re-encode,
+        // gate on losslessness, write.
+        let out_bytes = original.to_bytes_with(mode);
+        let reloaded = SqnnModel::from_bytes(&out_bytes).unwrap();
+        assert_eq!(
+            reloaded.to_bytes(),
+            original.to_bytes(),
+            "recode --entropy {mode:?} failed the lossless gate"
+        );
+        if let Some(v) = expect_version {
+            assert_eq!(
+                sqnn_xor::io::sqnn_file::container_version(&out_bytes),
+                Some(v),
+                "recode --entropy {mode:?} wrote the wrong container version"
+            );
+        }
+
+        for kernel in [
+            KernelChoice::Auto,
+            KernelChoice::Dense,
+            KernelChoice::Csr,
+            KernelChoice::Fused,
+            KernelChoice::Bitplane,
+        ] {
+            for decode_mode in [DecodeMode::Eager, DecodeMode::PerBatch] {
+                let opts = EngineOptions {
+                    decode_threads: 2,
+                    decode_mode,
+                    kernel,
+                };
+                let want = SqnnEngine::load_native(original.clone(), &[8], opts)
+                    .unwrap()
+                    .infer(&xs)
+                    .unwrap();
+                let got = SqnnEngine::load_native(reloaded.clone(), &[8], opts)
+                    .unwrap()
+                    .infer(&xs)
+                    .unwrap();
+                assert_eq!(
+                    got, want,
+                    "recoded model diverged: entropy={mode:?} kernel={kernel:?} \
+                     mode={decode_mode:?}"
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&src);
+}
+
 #[test]
 fn entropy_v3_container_is_byte_stable_lossless_and_auto_never_larger() {
     let dense = synthetic_dense_graph(0xE3, 48, &[40, 24], 6);

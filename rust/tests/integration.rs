@@ -136,7 +136,7 @@ fn coordinator_batches_and_serves_over_tcp() {
     let meta = read_bundle_meta(&dir).unwrap();
     let dir2 = dir.clone();
     let batch_sizes = meta.batch_sizes.clone();
-    let policy = BatchPolicy {
+    let policy = BatchPolicy::Static {
         max_batch: 32,
         max_wait: std::time::Duration::from_millis(5),
     };

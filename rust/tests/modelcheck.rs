@@ -9,8 +9,8 @@
 //! concurrent loaders — where the interesting interleavings live.
 
 use sqnn_xor::modelcheck::models::{
-    BatcherDrainModel, BlockQueueModel, BrokenRegistryLoadModel, RegistryLoadModel,
-    WorkerShutdownModel,
+    AdaptiveControllerModel, BatcherDrainModel, BlockQueueModel, BrokenRegistryLoadModel,
+    RegistryLoadModel, WorkerShutdownModel,
 };
 use sqnn_xor::modelcheck::{explore, Violation};
 
@@ -76,6 +76,43 @@ fn batcher_never_drops_the_engine_with_requests_in_flight() {
     let stats = explore(&model, MAX_STATES)
         .unwrap_or_else(|v| panic!("batcher drain model failed:\n{v}"));
     assert!(stats.terminals > 0);
+}
+
+#[test]
+fn adaptive_controller_stays_inside_its_clamps_under_any_telemetry() {
+    // Default instance: every observation sequence through the real
+    // control law. The invariant is clamp containment (ladder member,
+    // never 0, wait inside [min, max]); no state lacks a successor, so
+    // the assembly loop can never be left without a defined policy.
+    let model = AdaptiveControllerModel::default_config();
+    let stats = explore(&model, MAX_STATES)
+        .unwrap_or_else(|v| panic!("adaptive controller model failed:\n{v}"));
+    // The space must be closed (finite), and rich enough to have walked
+    // the ladder and the wait interval, not just the initial point.
+    assert!(
+        stats.states > 20,
+        "suspiciously small controller space ({} states) — clamps degenerated",
+        stats.states
+    );
+    assert!(stats.states < MAX_STATES, "controller state space failed to close");
+
+    // Loom-scaled instance: a wider wait interval and a taller ladder
+    // multiply the reachable operating points.
+    if cfg!(loom) {
+        use std::time::Duration;
+        let model = AdaptiveControllerModel {
+            cfg: sqnn_xor::coordinator::AdaptiveConfig {
+                min_wait: Duration::from_micros(50),
+                max_wait: Duration::from_micros(12_800),
+                initial_wait: Duration::from_micros(2_000),
+                initial_batch: 32,
+                ..sqnn_xor::coordinator::AdaptiveConfig::for_target(Duration::from_millis(5))
+            },
+            ladder: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
+        };
+        explore(&model, MAX_STATES)
+            .unwrap_or_else(|v| panic!("scaled adaptive controller model failed:\n{v}"));
+    }
 }
 
 /// Negative self-test: a registry whose failed build "forgets" to clear

@@ -9,12 +9,16 @@
 //! * **Unload drains** — every request admitted before `unload` has its
 //!   reply by the time `unload` returns; nothing is dropped on the
 //!   floor with the engine.
+//! * **Per-model policies act independently** — two models with
+//!   different adaptive p99 targets, served side by side under mixed
+//!   load, converge to *different* batch sizes.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use sqnn_xor::coordinator::{
-    DecodeMode, EngineOptions, KernelChoice, ModelRegistry, RegistryConfig, SqnnEngine,
+    AdaptiveConfig, BatchPolicy, DecodeMode, EngineOptions, KernelChoice, ModelRegistry,
+    RegistryConfig, SqnnEngine,
 };
 use sqnn_xor::io::sqnn_file::SqnnModel;
 use sqnn_xor::models::{synthetic_layer_graph, SynthEncrypted};
@@ -198,4 +202,70 @@ fn unload_of_in_use_model_drains_admitted_requests() {
 
     // The model stays registered: next use reloads it from source.
     assert_eq!(reg.infer(Some("m"), input).unwrap(), oracle);
+}
+
+/// Two models behind one registry, each with its own adaptive p99
+/// target, must converge to *different* operating points under the same
+/// mixed load: the unattainably tight target drives its controller up
+/// the bucket ladder (bigger batches amortize the per-batch decode),
+/// while the generous target sees every window far under target with
+/// underfilled batches and stays at the ladder floor.
+#[test]
+fn per_model_p99_targets_converge_to_different_batch_sizes() {
+    use std::time::{Duration, Instant};
+
+    // Short windows so the controllers step many times within the test
+    // budget; both start at the ladder floor so any divergence is the
+    // target's doing, not the initial point's.
+    let adaptive = |target: Duration| {
+        BatchPolicy::Adaptive(AdaptiveConfig {
+            initial_batch: 1,
+            initial_wait: Duration::from_micros(500),
+            window: Duration::from_millis(20),
+            window_intervals: 4,
+            min_window_samples: 2,
+            ..AdaptiveConfig::for_target(target)
+        })
+    };
+
+    let reg = Arc::new(registry(2, opts(KernelChoice::Auto, DecodeMode::Eager)));
+    reg.register_with_policy(
+        "tight",
+        sqnn_xor::coordinator::ModelSource::Model(model(0x11)),
+        Some(adaptive(Duration::from_micros(1))),
+    )
+    .unwrap();
+    reg.register_with_policy(
+        "loose",
+        sqnn_xor::coordinator::ModelSource::Model(model(0x12)),
+        Some(adaptive(Duration::from_secs(5))),
+    )
+    .unwrap();
+
+    let input = vec![0.3f32; INPUT_DIM];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        // Mixed load: interleave the two models so both controllers see
+        // live windows in the same wall-clock stretch.
+        for _ in 0..8 {
+            reg.infer(Some("tight"), input.clone()).unwrap();
+            reg.infer(Some("loose"), input.clone()).unwrap();
+        }
+        let tight = reg.snapshot(Some("tight")).unwrap();
+        let loose = reg.snapshot(Some("loose")).unwrap();
+        assert!(tight.policy_adaptive && loose.policy_adaptive);
+        if tight.batch_limit > loose.batch_limit {
+            // Converged: the tight target climbed the ladder, the loose
+            // one stayed at (or returned to) the floor.
+            assert_eq!(tight.batch_limit, *BUCKETS.iter().max().unwrap());
+            assert_eq!(loose.batch_limit, 1);
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "controllers never diverged: tight batch_limit {} vs loose {}",
+            tight.batch_limit,
+            loose.batch_limit
+        );
+    }
 }

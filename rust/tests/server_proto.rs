@@ -476,6 +476,73 @@ fn over_limit_connections_shed_busy_instead_of_killing_the_server() {
     server.stop();
 }
 
+/// The named-stats opcode `N` end to end: per-model snapshots reply in
+/// the `M` framing and carry the windowed/controller fields, unknown and
+/// unloaded models answer request-level `E` errors, and none of it
+/// disturbs the connection or the LRU.
+#[test]
+fn named_stats_opcode_roundtrips_and_errors_are_request_level() {
+    let registry = registry_with(&[("alpha", 0xA1), ("beta", 0xB2)], 4);
+    let mut server =
+        Server::start_registry(registry, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = format!("127.0.0.1:{}", server.port);
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Load alpha by serving a request through it, then ask for its stats
+    // by name through the client helper (the `sqnn stats --model` path).
+    let input = vec![0.2f32; INPUT_DIM];
+    c.infer_named(Some("alpha"), &input).unwrap();
+    let json = c.stats_named("alpha").unwrap();
+    for key in [
+        "\"requests\"",
+        "\"window_requests\"",
+        "\"window_p50_ms\"",
+        "\"window_p99_ms\"",
+        "\"policy\"",
+        "\"batch_limit\"",
+        "\"wait_limit_ms\"",
+        "\"adjustments\"",
+    ] {
+        assert!(json.contains(key), "missing {key} in named stats: {json}");
+    }
+
+    // Raw frame shape: N + u16 name length + name, answered with an M
+    // opcode byte + u32 length + JSON.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut frame = vec![b'N'];
+    frame.extend_from_slice(&(5u16).to_le_bytes());
+    frame.extend_from_slice(b"alpha");
+    s.write_all(&frame).unwrap();
+    let mut op = [0u8; 1];
+    s.read_exact(&mut op).unwrap();
+    assert_eq!(op[0], b'M', "named stats reply must reuse the M framing");
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb).unwrap();
+    let n = u32::from_le_bytes(nb) as usize;
+    let mut raw = vec![0u8; n];
+    s.read_exact(&mut raw).unwrap();
+    let body = String::from_utf8(raw).unwrap();
+    assert!(body.starts_with('{') && body.ends_with('}'), "bad JSON frame: {body}");
+
+    // Unknown and unloaded models are request-level errors: E replies,
+    // the connection keeps serving.
+    let err = format!("{:#}", c.stats_named("ghost").unwrap_err());
+    assert!(err.contains("unknown model"), "{err}");
+    let err = format!("{:#}", c.stats_named("beta").unwrap_err());
+    assert!(err.contains("not loaded"), "{err}");
+    assert_eq!(
+        c.infer_named(Some("alpha"), &input).unwrap(),
+        reference_logits(0xA1, &input),
+        "connection degraded after named-stats errors"
+    );
+
+    // Observability must not touch the LRU: beta stays unloaded.
+    let models = c.models_json().unwrap();
+    assert!(models.contains("\"name\":\"beta\",\"loaded\":false"), "{models}");
+    server.stop();
+}
+
 /// `P` replies carry per-model provenance: a path-registered model
 /// reports its on-disk container version and byte size; an in-memory
 /// model reports `null` for both.

@@ -613,14 +613,17 @@ const R1_DIRS: [&str; 4] =
 const R1_FILES: [&str; 3] =
     ["rust/src/runtime/pool.rs", "rust/src/io/sqnn_file.rs", "rust/src/io/bytes.rs"];
 /// R3 scope: the files that move length/count fields across the wire or
-/// through the container format.
-const R3_FILES: [&str; 6] = [
+/// through the container format — plus the adaptive controller, whose
+/// integer-microsecond wait arithmetic must stay truncation-free (its
+/// state feeds the modelcheck model and the published stats).
+const R3_FILES: [&str; 7] = [
     "rust/src/server/conn.rs",
     "rust/src/server/client.rs",
     "rust/src/io/bytes.rs",
     "rust/src/io/sqnn_file.rs",
     "rust/src/entropy/mod.rs",
     "rust/src/entropy/rangecoder.rs",
+    "rust/src/coordinator/adaptive.rs",
 ];
 
 fn rs_files_under(dir: &Path, out: &mut Vec<PathBuf>) {
